@@ -1,0 +1,133 @@
+"""Attribute HLO-walk bytes/flops to individual ops (hillclimb diagnostic).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hlo_breakdown results/hlo/<cell>.hlo.gz [-n 25]
+
+Prints the top-N ops by HBM bytes (trip-count weighted) and a per-opcode
+rollup — the "profile" the §Perf loop reasons from, since there is no
+wall-clock trace on a CPU-only container.  Charges come from the SAME
+``_op_hbm_bytes`` the roofline walker uses, so totals always match
+``analyze_hlo`` (modulo memoized-vs-exact while multipliers).
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.abspath(_SRC) not in (os.path.abspath(p) for p in sys.path):
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+from repro.launch import hlo_analysis as H  # noqa: E402
+
+
+def breakdown(hlo_text: str):
+    comps, entry = H._parse_computations(hlo_text)
+    conv_maps = H._build_convert_maps(comps)
+    ctxs = {}  # comp name -> (conv_map, half_set)
+    per_op: dict[tuple[str, str], dict] = {}
+    per_opcode: dict[str, dict] = {}
+
+    def _sig(op):
+        m = H._SHAPE_RE.search(op.type_str)
+        return m.group(0) if m else op.type_str[:40]
+
+    def charge(op, key_suffix, b, flops, mult, line):
+        key = (op.opcode + key_suffix, _sig(op))
+        d = per_op.setdefault(key, {"bytes": 0.0, "flops": 0.0, "count": 0.0,
+                                    "line": line.strip()[:160]})
+        d["bytes"] += b * mult
+        d["flops"] += flops * mult
+        d["count"] += mult
+        d2 = per_opcode.setdefault(op.opcode + key_suffix,
+                                   {"bytes": 0.0, "flops": 0.0, "count": 0.0})
+        d2["bytes"] += b * mult
+        d2["flops"] += flops * mult
+        d2["count"] += mult
+
+    def visit(comp_name: str, mult: float, stack: tuple):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in stack:
+            return
+        if comp_name not in ctxs:
+            ctxs[comp_name] = H._comp_ctx(comp, conv_maps)
+        conv_map, half_set = ctxs[comp_name]
+        for op in comp.ops:
+            oc = op.opcode
+            if oc.endswith("-done"):
+                continue
+            if oc == "while":
+                trip = H._while_trip_count(op, comps) or 1
+                for mm in H._CALL_REFS.finditer(op.line):
+                    visit(mm.group(1), mult * trip, stack + (comp_name,))
+                continue
+            if oc in ("call", "conditional", "fusion", "reduce", "sort",
+                      "scatter", "map", "reduce-window", "select-and-scatter",
+                      "async-start", "custom-call"):
+                for mm in H._CALL_REFS.finditer(op.line):
+                    visit_flops_only(mm.group(1), mult, stack + (comp_name,))
+            flops = 0.0
+            if oc in ("dot", "convolution"):
+                flops = H._dot_flops(op, comp, comps)
+            if any(oc.startswith(c) for c in H._COLLECTIVES):
+                cb, _ = H._coll_bytes(op, comp, conv_map, half_set)
+                charge(op, "", cb, 0.0, mult, op.line)
+                continue
+            if oc in H._FREE_OPS:
+                if flops:
+                    charge(op, "", 0.0, flops, mult, op.line)
+                continue
+            b, _el, _cp = H._op_hbm_bytes(op, comp, comps, conv_map, half_set)
+            charge(op, "", b, flops, mult, op.line)
+
+    def visit_flops_only(comp_name: str, mult: float, stack: tuple):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in stack:
+            return
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                flops = H._dot_flops(op, comp, comps)
+                charge(op, "(fused)", 0.0, flops, mult, op.line)
+            for mm in H._CALL_REFS.finditer(op.line):
+                visit_flops_only(mm.group(1), mult, stack + (comp_name,))
+
+    visit(entry, 1.0, ())
+    return per_op, per_opcode
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo", help="path to .hlo.gz or .hlo")
+    ap.add_argument("-n", type=int, default=25)
+    args = ap.parse_args(argv)
+    opener = gzip.open if args.hlo.endswith(".gz") else open
+    with opener(args.hlo, "rt") as f:
+        text = f.read()
+    per_op, per_opcode = breakdown(text)
+
+    tot_b = sum(d["bytes"] for d in per_opcode.values())
+    tot_f = sum(d["flops"] for d in per_opcode.values())
+    print(f"total bytes (walk): {tot_b/1e9:.2f} GB   "
+          f"flops: {tot_f/1e12:.3f} TF")
+    print("\n== per-opcode rollup (by bytes) ==")
+    for oc, d in sorted(per_opcode.items(), key=lambda kv: -kv[1]["bytes"])[:15]:
+        print(f"{oc:28s} {d['bytes']/1e9:10.2f} GB  {d['flops']/1e12:8.3f} TF"
+              f"  x{d['count']:.0f}")
+    print(f"\n== top {args.n} ops by bytes ==")
+    for (oc, sig), d in sorted(per_op.items(),
+                               key=lambda kv: -kv[1]["bytes"])[:args.n]:
+        print(f"{d['bytes']/1e9:9.2f} GB x{d['count']:6.0f} {oc:20s} {sig}")
+        print(f"          {d['line'][:150]}")
+    print(f"\n== top {args.n} ops by flops ==")
+    for (oc, sig), d in sorted(per_op.items(),
+                               key=lambda kv: -kv[1]["flops"])[:args.n]:
+        if d["flops"] <= 0:
+            break
+        print(f"{d['flops']/1e12:9.3f} TF x{d['count']:6.0f} {oc:20s} {sig}")
+
+
+if __name__ == "__main__":
+    main()

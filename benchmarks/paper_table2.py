@@ -1,0 +1,66 @@
+"""Paper Table II: the (initial C, large L) chunk-size grid.
+
+The paper swept C in {2,4,8,16} MB with L in {2.5C, 5C, 10C, 20C}-style
+pairings per file size and bolded the winners (4/40 MB for <= 8 GB,
+16/160 MB above).  We rerun that grid on the calibrated testbed with the
+Python simulator and also report the on-device autotuner's pick
+(``repro.core.autotune`` — the paper's §VIII-A future work), which searches
+the same grid via one vmapped JAX call per candidate.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from .common import GB, emit
+from repro.core import ChunkParams, MDTPPolicy, simulate
+from repro.core.autotune import autotune_chunk_params, default_grid
+from repro.core.scenarios import MBPS, paper_baseline
+
+MB = 1024 * 1024
+
+
+def sweep(file_gb: int, reps: int) -> tuple:
+    servers = paper_baseline()
+    best = (None, float("inf"))
+    for c, l in default_grid():
+        params = ChunkParams(initial_chunk=c, large_chunk=l)
+        ts = [
+            simulate(MDTPPolicy(params=params), servers, file_gb * GB, seed=s).total_time
+            for s in range(reps)
+        ]
+        mean = float(np.mean(ts))
+        emit(f"table2/C{c // MB}MB_L{l // MB}MB/{file_gb}GB", 0.0, f"{mean:.2f}")
+        if mean < best[1]:
+            best = ((c, l), mean)
+    (c, l), t = best
+    emit(f"table2/best/{file_gb}GB", 0.0, f"{t:.2f}", f"C={c // MB}MB", f"L={l // MB}MB")
+    return best
+
+
+def autotuned(file_gb: int) -> None:
+    bw = [s.bandwidth for s in paper_baseline()]
+    res = autotune_chunk_params(bw, 0.03, file_gb * GB)
+    emit(
+        f"table2/autotune/{file_gb}GB", 0.0, f"{res.predicted_time:.2f}",
+        f"C={res.params.initial_chunk // MB}MB",
+        f"L={res.params.large_chunk // MB}MB",
+    )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[2, 32])
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--no-autotune", action="store_true")
+    args = ap.parse_args(argv)
+    for gb in args.sizes:
+        sweep(gb, args.reps)
+        if not args.no_autotune:
+            autotuned(gb)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Roofline report over the dry-run artifacts (task §Roofline).
+
+Reads ``results/dryrun.jsonl`` (written by ``repro.launch.dryrun``) and
+prints the three-term roofline per (arch x shape x mesh) plus bottleneck
+and useful-FLOPs ratio.  ``--reanalyze`` re-walks the gzipped HLO archives
+with the current ``hlo_analysis`` walker (no recompilation) and rewrites
+the records — the perf-iteration loop uses this after walker refinements.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.abspath(_SRC) not in (os.path.abspath(p) for p in sys.path):
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = "results/dryrun.jsonl"
+HLO_DIR = "results/hlo"
+
+
+def load(results=RESULTS) -> list[dict]:
+    recs = {}
+    with open(results) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r["mesh"], r.get("variant"))] = r
+    return list(recs.values())
+
+
+def reanalyze(recs: list[dict], hlo_dir=HLO_DIR) -> list[dict]:
+    out = []
+    for r in recs:
+        if r.get("status") != "ok":
+            out.append(r)
+            continue
+        suffix = f"_{r['variant']}" if r.get("variant") else ""
+        path = os.path.join(
+            hlo_dir, f"{r['arch']}_{r['shape']}_{r['mesh']}{suffix}.hlo.gz")
+        if not os.path.exists(path):
+            out.append(r)
+            continue
+        with gzip.open(path, "rt") as f:
+            cost = analyze_hlo(f.read())
+        terms = {
+            "compute_s": cost.flops / PEAK_FLOPS,
+            "memory_s": cost.bytes_accessed / HBM_BW,
+            "collective_s": cost.collective_bytes / ICI_BW,
+        }
+        bott = max(terms, key=terms.get)
+        r = dict(r)
+        r["hlo_walk"] = {
+            "flops_per_dev": cost.flops,
+            "hbm_bytes_per_dev": cost.bytes_accessed,
+            "collective_bytes_per_dev": cost.collective_bytes,
+            "collectives": {k: int(v) for k, v in cost.collectives.items()},
+            "collective_count": cost.collective_count,
+            "unparsed_while": cost.unparsed_while,
+            "copy_bytes_per_dev": cost.copy_bytes,
+            "elided_bytes_per_dev": cost.elided_bytes,
+        }
+        mf = r["roofline"]["model_flops_global"]
+        n_chips = r["n_chips"]
+        r["roofline"] = {
+            **{k: round(v, 6) for k, v in terms.items()},
+            "bottleneck": bott.replace("_s", ""),
+            "model_flops_global": mf,
+            "useful_flops_ratio": round(
+                (mf / n_chips) / cost.flops, 4) if cost.flops else 0.0,
+            "params_total": r["roofline"]["params_total"],
+            "params_active": r["roofline"]["params_active"],
+        }
+        out.append(r)
+    return out
+
+
+def report(recs: list[dict], mesh: str = "16x16") -> None:
+    print("name,us_per_call,derived,compute_s,memory_s,collective_s,"
+          "bottleneck,roofline_frac,useful_ratio,fits_16gb")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") == "skipped" and r["mesh"] == mesh:
+            print(f"roofline/{r['arch']}/{r['shape']}/{mesh},0.0,skipped,"
+                  f",,,,,,")
+            continue
+        if r.get("status") != "ok" or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / dom if dom > 0 else 0.0
+        print(
+            f"roofline/{r['arch']}/{r['shape']}/{mesh},0.0,"
+            f"{rf['bottleneck']},"
+            f"{rf['compute_s']:.4f},{rf['memory_s']:.4f},"
+            f"{rf['collective_s']:.4f},{rf['bottleneck']},"
+            f"{frac:.4f},{rf['useful_flops_ratio']:.4f},"
+            f"{r['memory'].get('fits_16gb')}")
+
+
+def report_main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=RESULTS)
+    ap.add_argument("--hlo-dir", default=HLO_DIR)
+    ap.add_argument("--reanalyze", action="store_true")
+    ap.add_argument("--write", default=None,
+                    help="rewrite records to this jsonl after --reanalyze")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.results):
+        print(f"# roofline: no dry-run results at {args.results} "
+              "(run python -m repro.launch.dryrun --all first)")
+        return
+    recs = load(args.results)
+    if args.reanalyze:
+        recs = reanalyze(recs, args.hlo_dir)
+        if args.write:
+            with open(args.write, "w") as f:
+                for r in recs:
+                    f.write(json.dumps(r) + "\n")
+    report(recs, mesh=args.mesh)
+
+
+if __name__ == "__main__":
+    report_main()

@@ -1,0 +1,79 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived[,extra...]`` CSV rows.
+
+Default is a *quick* pass (reduced reps/sizes, everything still paper-shaped)
+so ``python -m benchmarks.run`` finishes in a few minutes on one CPU core;
+``--full`` matches the paper's 10 repetitions and full size ladder.
+Framework-layer benchmarks (roofline, restore) appear as sections when their
+artifacts are available.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def _section(title: str) -> None:
+    print(f"# === {title} ===", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-fidelity reps/sizes (slow)")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    help="section names to skip (fig2 fig3 fig4 fig5 table2 restore roofline)")
+    args = ap.parse_args(argv)
+
+    reps = 10 if args.full else 2
+    sizes = [1, 2, 4, 8, 16, 32, 64] if args.full else [1, 4, 16, 64]
+    failures = []
+
+    def run(name, fn):
+        if name in args.skip:
+            return
+        _section(name)
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+
+    from . import paper_fig2, paper_fig3, paper_fig4, paper_fig5, paper_table2
+
+    run("fig2", lambda: (
+        paper_fig2.seeder_trace(reps=min(reps, 5)),
+        paper_fig2.transfer_times(sizes, reps),
+    ))
+    run("fig3", lambda: paper_fig3.main(["--reps", str(reps)]))
+    run("fig4", lambda: paper_fig4.main(["--reps", str(reps)]))
+    run("fig5", lambda: paper_fig5.main(["--reps", str(reps)]))
+    run("table2", lambda: paper_table2.main(
+        ["--reps", str(max(reps // 2, 1))]
+        + (["--sizes", "2", "32"] if not args.full
+           else ["--sizes", "2", "8", "32", "64"])
+    ))
+
+    # Framework-layer benches (present once the substrates land).
+    try:
+        from . import restore_bench
+        run("restore", lambda: restore_bench.main(["--quick"] if not args.full else []))
+    except ImportError:
+        pass
+    try:
+        from . import roofline
+        run("roofline", lambda: roofline.report_main([]))
+    except ImportError:
+        pass
+
+    if failures:
+        print(f"# FAILED sections: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("# benchmarks complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Automatic chunk-size selection — the paper's §VIII-A future work, live.
+
+The on-device simulator (lax.while_loop) evaluates the Table-II grid for
+the CURRENTLY OBSERVED mirror throughputs, and the framework adopts the
+winner for subsequent transfers.  The paper picked 16/160 MB by hand for
+>8 GB files; the autotuner both recovers that choice on the calibrated
+testbed and finds better ones when conditions drift.
+
+Run:  PYTHONPATH=src python examples/autotune_chunks.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.autotune import autotune_chunk_params
+from repro.core.scenarios import GB, MBPS, paper_baseline
+
+MB = 1024 * 1024
+
+
+def main():
+    servers = paper_baseline()
+    bw = [s.bandwidth for s in servers]
+    print("observed mirror throughputs (MiB/s):",
+          [round(b / MBPS, 1) for b in bw])
+
+    for size_gb in (2, 32):
+        res = autotune_chunk_params(bw, rtt=0.03, file_size=size_gb * GB)
+        c, l = res.params.initial_chunk, res.params.large_chunk
+        worst = max(res.predicted_times)
+        print(f"\n--- {size_gb} GB file ---")
+        print(res.as_table())
+        print(f"best: C={c // MB} MB, L={l // MB} MB "
+              f"-> {res.predicted_time:.1f}s "
+              f"(worst grid point {worst:.1f}s, "
+              f"{(worst - res.predicted_time) / worst * 100:.0f}% saved)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Multi-source checkpoint restore with a mirror failure mid-transfer.
+
+The production scenario this framework exists for: a preempted node (or a
+whole re-scaled job) pulls its checkpoint from R replicated stores with
+MDTP adaptive chunking — and one store dies while still owing bytes.  The
+outstanding range returns to the pool, the surviving mirrors absorb it,
+and every byte is still fetched exactly once.
+
+Run:  PYTHONPATH=src python examples/multisource_restore.py
+"""
+
+import os
+import sys
+import tempfile
+import threading
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.transfer import RangeServer, Replica, Throttle
+
+MB = 1024 * 1024
+
+
+def main():
+    # a ~64 MB "model" state
+    state = {
+        "params": {f"layer{i}": jax.random.normal(jax.random.PRNGKey(i),
+                                                  (1024, 2048))
+                   for i in range(8)},
+        "step": jnp.int32(1234),
+    }
+    with tempfile.TemporaryDirectory() as root:
+        d = save_checkpoint(root, 1234, state)
+        size = os.path.getsize(os.path.join(d, "data.bin"))
+        print(f"checkpoint written: {size >> 20} MiB")
+
+        mirrors = []
+        for bw in (20 * MB, 40 * MB, 80 * MB):
+            s = RangeServer(throttle=Throttle(bytes_per_s=bw)).start()
+            base = "/ckpt/step_0000001234"
+            s.add_file(base + "/manifest.json",
+                       os.path.join(d, "manifest.json"))
+            s.add_file(base + "/data.bin", os.path.join(d, "data.bin"))
+            mirrors.append(s)
+
+        # the slowest mirror dies 200 ms into the restore
+        threading.Timer(0.2, mirrors[0].stop).start()
+
+        replicas = [Replica("127.0.0.1", s.port, "/ckpt") for s in mirrors]
+        restored, step = restore_checkpoint(root, state, step=1234,
+                                            replicas=replicas)
+        ok = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(state),
+                            jax.tree.leaves(restored)))
+        print(f"restored step {step}; bit-exact: {ok} "
+              f"(one mirror was killed mid-transfer)")
+        for s in mirrors[1:]:
+            s.stop()
+        assert ok
+
+
+if __name__ == "__main__":
+    main()

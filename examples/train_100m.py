@@ -1,0 +1,59 @@
+"""End-to-end driver: train a ~100M-param LM with the full stack.
+
+Everything is exercised for real: model (qwen3-family blocks), AdamW with
+warmup-cosine, MDTP multi-source input pipeline over three throttled
+localhost mirrors, async atomic checkpoints with keep-k GC, and
+resume-from-latest.
+
+Defaults are CPU-sane (~100M params, short run); pass --steps 300 for the
+full few-hundred-step run of the deliverable.
+
+Run:  PYTHONPATH=src python examples/train_100m.py --steps 30
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import run_training
+from repro.models.common import ModelConfig
+from repro.models.transformer import num_params
+
+
+def config_100m() -> ModelConfig:
+    return ModelConfig(
+        name="repro-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32_000,
+        qk_norm=True, mlp_act="swiglu", tie_embeddings=True, remat="none",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    print(f"model: {cfg.name}, {num_params(cfg) / 1e6:.1f}M params")
+    ckpt = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                         "repro_100m_ckpt")
+    _, losses = run_training(
+        cfg, args.steps, args.batch, args.seq, ckpt_dir=ckpt,
+        resume=args.resume, lr=6e-4, log_every=1)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({len(losses)} steps); checkpoints in {ckpt}")
+    if len(losses) >= 10:  # too noisy to assert on a handful of steps
+        head = sum(losses[:3]) / 3
+        tail = sum(losses[-3:]) / 3
+        assert tail < head, f"loss should trend down: {head:.3f}->{tail:.3f}"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Checkpointing: atomic sharded saves + MDTP multi-source elastic restore."""
+
+from .manager import (CheckpointManager, latest_step, restore_checkpoint,
+                      save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
+           "save_checkpoint"]

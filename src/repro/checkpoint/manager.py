@@ -1,0 +1,222 @@
+"""Sharded checkpointing with atomic commits and MDTP multi-source restore.
+
+Format (one directory per step):
+    step_00001000/
+      data.bin        all leaves packed back-to-back (byte offsets in manifest)
+      manifest.json   step, leaf paths/shapes/dtypes/offsets; written LAST via
+                      tmp+rename => a directory with a manifest is complete.
+
+Packing everything into one blob is deliberate: a restore is then exactly
+the paper's problem — one large object, replicated on several mirrors —
+and ``restore(..., replicas=...)`` pulls it with MDTP adaptive byte-range
+chunking across all mirrors at once (``repro.transfer.MDTPClient``).  After
+a node failure or an elastic re-scale this is the path that gets thousands
+of hosts back to work; a dead mirror mid-restore just means its range goes
+back to the pool (each byte still fetched exactly once).
+
+Elasticity: ``restore`` takes target shardings — leaves are ``device_put``
+to whatever mesh the NEW job runs, so restoring 16x16 state onto 2x16x16
+(or a reduced salvage mesh) is the same call.
+
+Fault-tolerance inventory (tested in tests/test_checkpoint.py):
+  * atomic manifests -> a crashed save never corrupts restore state,
+  * keep-last-k GC never deletes the newest complete step,
+  * async save thread -> training continues during serialization,
+  * multi-source restore tolerates mirror death mid-transfer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.transfer.client import MDTPClient, Replica
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]
+
+_MANIFEST = "manifest.json"
+_DATA = "data.bin"
+
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:010d}")
+
+
+def _leaf_paths(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_checkpoint(root: str, step: int, state: Any) -> str:
+    """Blocking save.  Returns the committed directory."""
+    d = _step_dir(root, step)
+    tmp = d + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, _ = _leaf_paths(state)
+    manifest = {"step": step, "format": 1, "leaves": []}
+    offset = 0
+    with open(os.path.join(tmp, _DATA), "wb") as f:
+        for key, leaf in leaves:
+            arr = np.asarray(jax.device_get(leaf))
+            raw = arr.tobytes()
+            manifest["leaves"].append({
+                "key": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "offset": offset, "nbytes": len(raw),
+            })
+            f.write(raw)
+            offset += len(raw)
+        f.flush()
+        os.fsync(f.fileno())
+    manifest["total_bytes"] = offset
+    mpath = os.path.join(tmp, _MANIFEST)
+    with open(mpath + ".tmp", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(mpath + ".tmp", mpath)     # manifest-last commit inside tmp
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.rename(tmp, d)                    # atomic publish
+    return d
+
+
+def latest_step(root: str) -> Optional[int]:
+    """Newest step with a COMPLETE manifest (crashed saves are ignored)."""
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(root, name, _MANIFEST)):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+    return max(steps) if steps else None
+
+
+def _rebuild(manifest: dict, blob: bytes, like: Any,
+             shardings: Optional[Any] = None) -> Any:
+    leaves, treedef = _leaf_paths(like)
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for (key, leaf), shd in zip(leaves, shard_leaves):
+        e = by_key[key]
+        arr = np.frombuffer(
+            blob, dtype=np.dtype(e["dtype"]), count=int(
+                np.prod(e["shape"])) if e["shape"] else 1,
+            offset=e["offset"]).reshape(e["shape"])
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_checkpoint(
+    root: str,
+    like: Any,
+    step: Optional[int] = None,
+    shardings: Optional[Any] = None,
+    replicas: Optional[Sequence[Replica]] = None,
+) -> tuple[Any, int]:
+    """Restore (state, step).
+
+    ``like``: a pytree with the target structure (shapes are taken from the
+    manifest, so this may be abstract).  ``replicas``: mirror list — when
+    given, ``data.bin`` is fetched with MDTP multi-source ranges instead of
+    local reads (``root`` is then only used to discover the step if not
+    given and may not exist locally).
+    """
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {root}")
+    d = _step_dir(root, step)
+
+    if replicas:
+        base = [Replica(r.host, r.port,
+                        r.path.rstrip("/") + f"/step_{step:010d}")
+                for r in replicas]
+        import asyncio
+
+        async def run():
+            mclient = MDTPClient([Replica(r.host, r.port, r.path + "/" + _MANIFEST)
+                                  for r in base])
+            msize = await mclient.blob_size()
+            mbuf, _ = await mclient.fetch(msize)
+            manifest = json.loads(bytes(mbuf).decode())
+            dclient = MDTPClient([Replica(r.host, r.port, r.path + "/" + _DATA)
+                                  for r in base])
+            blob, report = await dclient.fetch(manifest["total_bytes"])
+            return manifest, bytes(blob), report
+
+        manifest, blob, report = asyncio.run(run())
+    else:
+        with open(os.path.join(d, _MANIFEST)) as f:
+            manifest = json.load(f)
+        with open(os.path.join(d, _DATA), "rb") as f:
+            blob = f.read()
+
+    return _rebuild(manifest, blob, like, shardings), step
+
+
+@dataclass
+class CheckpointManager:
+    """Save-every-N with async commit and keep-last-k GC."""
+
+    root: str
+    every_steps: int = 100
+    keep: int = 3
+    async_save: bool = True
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, state: Any) -> bool:
+        if step % self.every_steps != 0:
+            return False
+        self.wait()
+        # snapshot on the host before handing off (training may mutate)
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._save_and_gc, args=(step, host_state), daemon=True)
+            self._thread.start()
+        else:
+            self._save_and_gc(step, host_state)
+        return True
+
+    def _save_and_gc(self, step: int, state: Any) -> None:
+        save_checkpoint(self.root, step, state)
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.root)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.root, n, _MANIFEST)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(_step_dir(self.root, s), ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()

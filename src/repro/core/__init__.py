@@ -1,0 +1,47 @@
+"""MDTP core: the paper's contribution.
+
+* ``chunking`` — the adaptive bin-packing chunk allocator (§IV-B, Alg. 1).
+* ``throughput`` — per-server throughput estimators.
+* ``simulator`` — discrete-event multi-source transfer simulator.
+* ``mdtp`` / ``static_chunking`` / ``aria2`` / ``bittorrent`` — policies.
+* ``jax_alloc`` / ``jax_sim`` — vectorized JAX allocator + on-device
+  event simulator (vmappable).
+* ``autotune`` — automatic chunk-size selection (paper §VIII-A).
+* ``scenarios`` — calibrated FABRIC-testbed stand-ins.
+"""
+
+from .chunking import (
+    ChunkParams,
+    default_chunk_params,
+    fast_server_mask,
+    geometric_mean,
+    next_chunk_size,
+    round_chunk_sizes,
+)
+from .throughput import Ewma, LastSample, ThroughputEstimator, make_estimator
+from .simulator import (
+    ChunkRecord,
+    Policy,
+    Request,
+    ServerSpec,
+    SimResult,
+    TransferState,
+    Wait,
+    simulate,
+)
+from .mdtp import MDTPPolicy
+from .static_chunking import StaticChunkingPolicy, default_static_chunk
+from .aria2 import Aria2Policy
+from .bittorrent import BitTorrentPolicy
+from .autotune import AutotuneResult, autotune_chunk_params, default_grid
+
+__all__ = [
+    "ChunkParams", "default_chunk_params", "fast_server_mask",
+    "geometric_mean", "next_chunk_size", "round_chunk_sizes",
+    "Ewma", "LastSample", "ThroughputEstimator", "make_estimator",
+    "ChunkRecord", "Policy", "Request", "ServerSpec", "SimResult",
+    "TransferState", "Wait", "simulate",
+    "MDTPPolicy", "StaticChunkingPolicy", "default_static_chunk",
+    "Aria2Policy", "BitTorrentPolicy",
+    "AutotuneResult", "autotune_chunk_params", "default_grid",
+]

@@ -1,0 +1,104 @@
+"""Automatic chunk-size selection — the paper's §VIII-A future work.
+
+The paper: *"Our future work will explore how to automatically choose these
+chunk sizes based on network conditions and file sizes."*  This module does
+that with the on-device simulator: a (C, L) grid is evaluated for the
+observed bandwidth/RTT vector by ``vmap``-ing ``jax_sim.simulate_transfer``
+over the whole grid in one call, optionally Monte-Carlo-averaged over
+jitter seeds, and the minimizing pair is returned.
+
+The framework's data plane calls this with live throughput estimates to
+re-tune chunk sizes between transfers (e.g. between checkpoint-restore
+waves), amortizing one device call across thousands of scenario sims.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .chunking import MB, ChunkParams
+from .jax_sim import SimConfig, simulate_transfer
+
+__all__ = ["AutotuneResult", "default_grid", "autotune_chunk_params"]
+
+
+@dataclass(frozen=True)
+class AutotuneResult:
+    params: ChunkParams
+    predicted_time: float
+    grid: list[tuple[int, int]]          # (C, L) pairs evaluated
+    predicted_times: list[float]         # same order as grid
+
+    def as_table(self) -> str:
+        lines = ["C(MB),L(MB),predicted_s"]
+        for (c, l), t in zip(self.grid, self.predicted_times):
+            lines.append(f"{c / MB:g},{l / MB:g},{t:.2f}")
+        return "\n".join(lines)
+
+
+def default_grid() -> list[tuple[int, int]]:
+    """Paper Table II's grid: C in {2,4,8,16} MB x L/C ratio in {1.25x ...}.
+
+    Table II lists, per initial size C, large sizes {10C/8, 10C/4, 10C/2,
+    10C}/... concretely L in {2.5C, 5C, 10C} plus the paper's chosen 10x
+    pairing; we sweep L/C in {2.5, 5, 10, 20}.
+    """
+    grid = []
+    for c_mb in (2, 4, 8, 16):
+        for ratio in (2.5, 5.0, 10.0, 20.0):
+            grid.append((c_mb * MB, int(c_mb * ratio) * MB))
+    return grid
+
+
+def autotune_chunk_params(
+    bandwidth: Sequence[float],
+    rtt,
+    file_size: int,
+    grid: Sequence[tuple[int, int]] | None = None,
+    jitter: float = 0.0,
+    n_seeds: int = 1,
+    mode: str = "proportional",
+) -> AutotuneResult:
+    """Pick (C, L) minimizing simulated transfer time.
+
+    Args:
+      bandwidth: per-server bytes/s estimates (live throughput observations).
+      rtt: scalar or per-server request RTT in seconds.
+      file_size: bytes.
+      grid: candidate (C, L) pairs; default = paper Table II sweep.
+      jitter: lognormal sigma; with ``n_seeds > 1`` times are averaged over
+        seeds (Monte-Carlo via an extra vmap axis).
+    """
+    grid = list(grid or default_grid())
+    bw = jnp.asarray(bandwidth, jnp.float32)
+    cfg = SimConfig(jitter=jitter)
+
+    # The grid cannot be a vmap axis (ChunkParams is static), so evaluate
+    # each (C, L) as its own jit call but vmap the Monte-Carlo seeds inside.
+    times = []
+    for c, l in grid:
+        params = ChunkParams(initial_chunk=c, large_chunk=l, mode=mode)
+        if n_seeds == 1:
+            res = simulate_transfer(bw, rtt, file_size, params, config=cfg)
+            times.append(float(res.total_time))
+        else:
+            def one(seed):
+                return simulate_transfer(
+                    bw, rtt, file_size, params, seed=seed, config=cfg
+                ).total_time
+            ts = jax.vmap(one)(jnp.arange(n_seeds))
+            times.append(float(jnp.mean(ts)))
+
+    best = int(np.argmin(times))
+    c, l = grid[best]
+    return AutotuneResult(
+        params=ChunkParams(initial_chunk=c, large_chunk=l, mode=mode),
+        predicted_time=times[best],
+        grid=grid,
+        predicted_times=times,
+    )

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+MDTP itself has no kernel-level contribution (it is a data-plane protocol,
+DESIGN.md §2); these kernels serve the assigned architectures' hot paths:
+
+* ``flash_attention`` — online-softmax attention (causal/window/GQA); the
+  fix for the XLA-materialized-scores HBM traffic the roofline flags as the
+  dominant memory term on attention archs.
+* ``decode_attention`` — one-token GQA attention against a long KV cache
+  (scalar-prefetched position, block skipping for sliding windows); the
+  decode_32k / long_500k serving hot loop.
+* ``ssm_scan`` — chunked SSD (Mamba2) forward: bf16 HBM I/O with the f32
+  reference math kept in VMEM (the dtype contract DESIGN.md §6 assumes).
+* ``rmsnorm`` — fused residual+norm (memory-bound glue layer).
+
+Validated in interpret mode against the pure-jnp oracles (ref.py) across
+shape/dtype sweeps; selected on real TPUs via ``attn_impl="pallas"``.
+"""
+
+from .decode_attention import decode_attention, decode_attention_ref
+from .flash_attention import attention_ref, flash_attention
+from .rmsnorm import rmsnorm, rmsnorm_ref
+from .ssm_scan import ssm_scan, ssm_scan_ref
+
+__all__ = ["flash_attention", "attention_ref", "rmsnorm", "rmsnorm_ref",
+           "decode_attention", "decode_attention_ref",
+           "ssm_scan", "ssm_scan_ref"]

@@ -1,0 +1,130 @@
+"""Pallas TPU decode attention: one new token vs a long KV cache (GQA).
+
+The decode hot loop is pure HBM streaming: every step reads the whole
+valid cache once.  The kernel tiles the cache over k-blocks and keeps the
+online-softmax state for the G query heads of one (batch, kv-head) pair
+in VMEM scratch:
+
+  q tile   [G_pad, hd]        VMEM (all query heads of this kv head)
+  k,v tile [blk_k, hd]        VMEM (streamed)
+  acc      [G_pad, hd]  f32   VMEM scratch
+  m, l     [G_pad, 128] f32   VMEM scratch (row stats, lane-replicated)
+
+grid = (B*KV, Sk/blk_k) with the k axis innermost (sequential on TPU, so
+scratch persists across k steps).  The current position arrives via
+scalar prefetch; blocks entirely past ``pos`` (or, with a sliding
+window, entirely before ``pos - window``) skip their work with
+``pl.when`` — for gemma3's window=1024 against a 32k cache that is 97%
+of blocks skipped, turning O(S_max) streaming into O(window).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_bkv"]
+
+_NEG_INF = -1e30
+_LANES = 128
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, window, blk_k, n_k):
+    ki = pl.program_id(1)
+    pos = pos_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ki * blk_k
+    run = k_start <= pos
+    if window is not None:
+        run = jnp.logical_and(run, k_start + blk_k > pos - (window - 1))
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                 # [G, hd]
+        k = k_ref[0].astype(jnp.float32)                 # [blk_k, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, blk_k]
+
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos <= pos
+        if window is not None:
+            valid = jnp.logical_and(valid, kpos > pos - window)
+        s = jnp.where(valid, s, _NEG_INF)
+
+        m_prev = m_ref[:, 0:1]                           # [G, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)                  # [G, 1]
+        p = jnp.exp(s - m_new)                           # [G, blk_k]
+        l_new = l_ref[:, 0:1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                 # [blk_k, hd]
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [G, hd]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == n_k - 1)
+    def _fini():
+        l = jnp.maximum(l_ref[:, 0:1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "blk_k", "interpret"),
+)
+def decode_attention_bkv(
+    q: jax.Array,            # [BKV, G, hd]   (B*KV flattened)
+    k: jax.Array,            # [BKV, Sk, hd]
+    v: jax.Array,            # [BKV, Sk, hd]
+    pos: jax.Array,          # scalar int32: index of the newest token
+    *,
+    scale: float,
+    window: int | None = None,
+    blk_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    BKV, G, hd = q.shape
+    Sk = k.shape[1]
+    assert Sk % blk_k == 0, (Sk, blk_k)
+    n_k = Sk // blk_k
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BKV, n_k),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, j, pos_ref: (b, 0, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, j, pos_ref: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, j, pos_ref: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j, pos_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, _LANES), jnp.float32),   # m
+            pltpu.VMEM((G, _LANES), jnp.float32),   # l
+            pltpu.VMEM((G, hd), jnp.float32),       # acc
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, blk_k=blk_k, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BKV, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos.reshape(1).astype(jnp.int32), q, k, v)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the decode-attention kernel (mirrors the math in
+``repro.models.layers.attention_from_cache``)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+__all__ = ["decode_attention_ref"]
+
+_NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, pos, *, scale, window=None):
+    """q [BKV, G, hd]; k/v [BKV, Sk, hd]; pos scalar -> [BKV, G, hd]."""
+    Sk = k.shape[1]
+    s = jnp.einsum("bgh,bsh->bgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(Sk, dtype=jnp.int32)
+    valid = kpos <= pos
+    if window is not None:
+        valid = jnp.logical_and(valid, kpos > pos - window)
+    s = jnp.where(valid[None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgs,bsh->bgh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

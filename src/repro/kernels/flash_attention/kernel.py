@@ -1,0 +1,142 @@
+"""Pallas TPU flash attention: online-softmax, causal + sliding window + GQA.
+
+Tiling: grid = (B*H, Sq/blk_q, Sk/blk_k), innermost (k) axis sequential on
+TPU so the online-softmax state lives in VMEM scratch across k-steps:
+
+  q tile   [blk_q, hd]        VMEM (revisited for every k step)
+  k,v tile [blk_k, hd]        VMEM
+  acc      [blk_q, hd]  f32   VMEM scratch
+  m, l     [blk_q, 128] f32   VMEM scratch (row stats, lane-replicated)
+
+Causal/window masking is done with block-index arithmetic; fully-masked
+k-blocks skip their matmuls via ``pl.when`` (on real TPUs this saves the
+MXU issue; the VMEM streaming of the skipped tile is hidden by the grid
+pipeline).  hd is padded to the 128-lane MXU width by ``ops.py`` when
+needed (e.g. kimi's hd=112) — zero columns are exact for q/k/v.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_bhsd"]
+
+_NEG_INF = -1e30
+_LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, blk_q, blk_k, n_k, kv_len):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * blk_q
+    k_start = ki * blk_k
+
+    # block-level reachability: skip blocks fully above the causal diagonal
+    # or fully left of the window
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + blk_q - 1)
+    if window is not None:
+        # newest k needed for the oldest q in this tile
+        run = jnp.logical_and(run, k_start + blk_k > q_start - (window - 1))
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [blk_q, blk_k]
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        valid = k_pos < kv_len
+        if causal:
+            valid = jnp.logical_and(valid, k_pos <= q_pos)
+        if window is not None:
+            valid = jnp.logical_and(valid, k_pos > q_pos - window)
+        s = jnp.where(valid, s, _NEG_INF)
+
+        m_prev = m_ref[...]                                # [blk_q, 128]
+        row_max = jnp.max(s, axis=1, keepdims=True)        # [blk_q, 1]
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(row_max, m_prev.shape))
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])      # [blk_q, 1]
+        p = jnp.exp(s - m_new[:, :1])                      # [blk_q, blk_k]
+        p = jnp.where(valid, p, 0.0)
+
+        l_new = l_ref[...] * alpha + jnp.broadcast_to(
+            jnp.sum(p, axis=1, keepdims=True), l_ref.shape)
+        v_blk = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        l = l_ref[:, :1]
+        o_ref[0] = jnp.where(
+            l > 0.0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "blk_q", "blk_k",
+                     "kv_len", "interpret"),
+)
+def flash_attention_bhsd(
+    q: jax.Array,            # [BH, Sq, hd]
+    k: jax.Array,            # [BKV, Sk, hd]
+    v: jax.Array,            # [BKV, Sk, hd]
+    *,
+    scale: float,
+    causal: bool = True,
+    window=None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    kv_len=None,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, hd = q.shape
+    BKV, Sk, _ = k.shape
+    G = BH // BKV
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, Sk, blk_q, blk_k)
+    n_q, n_k = Sq // blk_q, Sk // blk_k
+    kv_len = Sk if kv_len is None else kv_len
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, n_k=n_k, kv_len=kv_len)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda bh, qi, ki: (bh // G, ki, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda bh, qi, ki: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, _LANES), jnp.float32),   # m
+            pltpu.VMEM((blk_q, _LANES), jnp.float32),   # l
+            pltpu.VMEM((blk_q, hd), jnp.float32),       # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,76 @@
+"""jit'd public wrapper around the flash-attention Pallas kernel.
+
+Handles layout ([B,S,H,hd] model convention -> [B*H,S,hd] kernel
+convention), MXU lane padding of head_dim (zero columns are exact for
+q/k/v), and sequence padding to the block size (masked through ``kv_len``).
+
+``interpret=True`` executes the kernel body in Python on CPU — the
+correctness path in this container; on a real TPU the same call compiles
+to a Mosaic kernel.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+__all__ = ["flash_attention"]
+
+_LANES = 128
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(
+    q: jax.Array,            # [B, Sq, H, hd]
+    k: jax.Array,            # [B, Sk, KV, hd]
+    v: jax.Array,            # [B, Sk, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    blk_q = min(blk_q, max(8, Sq))
+    blk_k = min(blk_k, max(8, Sk))
+
+    # layout: [B,S,N,hd] -> [B*N, S, hd]
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    # MXU lane padding for head_dim (kimi hd=112 -> 128)
+    qt = _pad_to(qt, 2, _LANES)
+    kt = _pad_to(kt, 2, _LANES)
+    vt = _pad_to(vt, 2, _LANES)
+
+    # sequence padding to block multiples; padded keys masked via kv_len
+    qt = _pad_to(qt, 1, blk_q)
+    kt = _pad_to(kt, 1, blk_k)
+    vt = _pad_to(vt, 1, blk_k)
+
+    out = flash_attention_bhsd(
+        qt, kt, vt, scale=scale, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, kv_len=Sk, interpret=interpret)
+
+    out = out[:, :Sq, :hd].reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Plain materialized-softmax attention with GQA grouping, causal and
+sliding-window masks — the correctness reference every kernel variant is
+allclose-checked against (tests/test_kernels.py sweeps shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,            # [B, Sq, H, hd]
+    k: jax.Array,            # [B, Sk, KV, hd]
+    v: jax.Array,            # [B, Sk, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    valid = jnp.ones((Sq, Sk), bool)
+    if causal:
+        valid &= k_pos <= q_pos
+    if window is not None:
+        valid &= k_pos > (q_pos - window)
+    s = jnp.where(valid[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (can happen with tiny windows): define as zeros
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

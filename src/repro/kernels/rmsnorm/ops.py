@@ -1,0 +1,34 @@
+"""jit'd wrapper: accepts [..., d] activations, flattens rows, pads rows to
+the block multiple, dispatches to the Pallas kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_rows
+
+__all__ = ["rmsnorm"]
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array,
+            residual: Optional[jax.Array] = None, *, eps: float = 1e-6,
+            blk_rows: int = 256, interpret: bool = False) -> jax.Array:
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    r2 = residual.reshape(rows, d) if residual is not None else None
+    blk = min(blk_rows, rows)
+    pad = (-rows) % blk
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        if r2 is not None:
+            r2 = jnp.pad(r2, ((0, pad), (0, 0)))
+    y = rmsnorm_rows(x2, scale, r2, eps=eps, blk_rows=blk,
+                     interpret=interpret)
+    return y[:rows].reshape(shape)

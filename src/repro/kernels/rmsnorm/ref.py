@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused residual-add + RMSNorm kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm_ref"]
+
+
+def rmsnorm_ref(
+    x: jax.Array,                       # [rows, d]
+    scale: jax.Array,                   # [d]
+    residual: Optional[jax.Array] = None,
+    eps: float = 1e-6,
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,109 @@
+"""Pallas TPU chunked SSD (Mamba2) forward scan.
+
+One kernel instance owns a block of SSD heads for one batch element and
+walks the sequence chunk by chunk (grid k-axis sequential on TPU), so the
+recurrent state h [Hb, P, N] lives in f32 VMEM scratch for the whole
+sequence — the HBM I/O is bf16 x/B/C in, bf16 y out, exactly the dtype
+contract the roofline walker assumes for the SSD math (DESIGN.md §6).
+
+  x tile    [Q, Hb, P]   VMEM (bf16 in, f32 compute)
+  dt tile   [Q, Hb]      VMEM f32
+  B,C tile  [Q, N]       VMEM
+  h state   [Hb, P, N]   VMEM scratch, f32, persists across chunks
+  L matrix  [Q, Q] per head block — registers/VMEM temporaries
+
+Within a chunk the standard SSD decomposition:
+  y = (C·Bᵀ ∘ L) · (dt·x)  +  (C · h_in) ∘ exp(cum)        (intra + inter)
+  h_out = h_in * exp(total) + Bᵀ · (dt·x ∘ exp(total-cum))
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssm_scan_bh"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+            chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # [Q, Hb, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [Q, Hb]
+    A = a_ref[0].astype(jnp.float32)          # [Hb]  (negative)
+    Bm = b_ref[0].astype(jnp.float32)         # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)         # [Q, N]
+
+    dA = dt * A[None, :]                      # [Q, Hb]
+    cum = jnp.cumsum(dA, axis=0)              # [Q, Hb]
+    total = cum[-1:, :]                       # [1, Hb]
+
+    # decay matrix L per head: L[q, k, h] = exp(cum_q - cum_k) for k <= q
+    li = cum[:, None, :] - cum[None, :, :]    # [Q, Q, Hb]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (kj <= qi)[:, :, None]
+    L = jnp.where(mask, jnp.exp(li), 0.0)     # [Q, Q, Hb]
+
+    scores = jax.lax.dot_general(              # [Q, Q] = C · Bᵀ
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    xdt = x * dt[:, :, None]                  # [Q, Hb, P]
+
+    w = scores[:, :, None] * L                # [Q, Q, Hb]
+    y_intra = jnp.einsum("qkh,khp->qhp", w, xdt)
+
+    h = h_ref[...]                            # [Hb, P, N]
+    y_inter = jnp.einsum("qn,hpn->qhp", Cm, h) * jnp.exp(cum)[:, :, None]
+
+    decay_in = jnp.exp(total - cum)           # [Q, Hb]
+    upd = jnp.einsum("kn,khp->hpn", Bm, xdt * decay_in[:, :, None])
+    h_ref[...] = h * jnp.exp(total)[0, :, None, None] + upd
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan_bh(
+    x: jax.Array,            # [BH_blocks? -> B, S, Hb, P] flattened below
+    dt: jax.Array,           # [B, S, Hb] f32
+    A: jax.Array,            # [B, Hb] f32 (negative; per-block slice)
+    Bm: jax.Array,           # [B, S, N]
+    Cm: jax.Array,           # [B, S, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, Hb, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Hb, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, Hb), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Hb), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, Hb, P), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Hb, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((Hb, P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SSD scan kernel: the sequential recurrence
+   h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t ⊗ x_t ;   y_t = C_t · h_t
+(the chunked form in ``repro.models.ssm._ssd_chunked`` is itself
+validated against this same recurrence in tests/test_models_smoke.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssm_scan_ref"]
+
+
+def ssm_scan_ref(x, dt, A, Bm, Cm):
+    """x [B,S,H,P]; dt [B,S,H] f32; A [B,H]; Bm/Cm [B,S,N] -> [B,S,H,P]."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # [B,H,P], [B,H], [B,N], [B,N]
+        dec = jnp.exp(dtt * Af)                   # [B,H]
+        upd = jnp.einsum("bn,bh,bhp->bhpn", bt, dtt, xt)
+        h = h * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

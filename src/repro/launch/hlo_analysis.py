@@ -1,0 +1,689 @@
+"""Roofline-term extraction from post-SPMD optimized HLO text.
+
+Why not ``compiled.cost_analysis()`` alone?  It counts a ``while`` body
+ONCE, so scan-over-layers models (every model here — the only way 61-81
+layer configs compile on one CPU core) would under-report FLOPs by ~L.
+This walker recursively costs each computation and multiplies while-loop
+bodies by their trip count (XLA's ``known_trip_count`` backend config,
+falling back to the canonical scan condition ``compare(iv, constant(N))``).
+
+Per-op accounting (per-device, since post-SPMD shapes are per-device):
+  * FLOPs: dot/convolution ops — 2 x result_elems x contraction size.
+    (MXU flops; elementwise flops are noise at the roofline.)
+  * HBM bytes: operand + result bytes of every top-level op in each
+    computation (post-fusion HLO: each fusion reads operands from HBM and
+    writes its result — the TPU memory model).
+  * Collective bytes: operand bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute, bucketed by type.
+
+TPU dtype normalization (the "f32c contract").  The CPU backend has no
+native bf16 compute: XLA's float-normalization pass promotes ALL bf16
+math to f32 (``dot(bf16)`` -> ``convert -> dot_f32 -> convert``, same for
+elementwise), and the excess-precision simplifier then cancels adjacent
+convert pairs, leaving whole f32 regions that would be bf16 on the TPU
+target.  Dtypes in optimized CPU HLO therefore do NOT identify intent.
+The model declares intent instead: every intentionally-f32 computation is
+wrapped in ``jax.named_scope("f32c")`` (norm stats, f32 softmax, loss
+path, rope, recurrent cells, router, optimizer update) — op_name
+metadata survives fusion.  The walker then:
+  (a) costs pure dtype-convert ops at zero (they fuse / don't exist on
+      TPU) and resolves references through convert chains and layout ops;
+  (b) charges matmuls bf16-in/bf16-out always (the MXU contract; the ssm
+      kernels keep their f32 reference math in VMEM, not HBM);
+  (c) charges any other f32 compute op without the f32c marker at
+      2 bytes/elem (promotion residue), keeping marked ops at f32;
+  (d) charges large (>1M elem) f32 collectives at bf16 — the framework
+      invariant is that no large f32 tensor is ever communicated;
+  (e) does in-place accounting for DUS(-rooted fusions), slice/gather
+      reads, and broadcast-of-constant buffer inits.
+``elided_bytes`` reports the size of the correction so raw vs normalized
+is always visible.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+# computation headers sit at column 0: ``%name (sig...) -> type {`` with
+# possibly nested parens in the signature — detect by prefix + trailing '{'
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count.*?"?n"?[=:]"?(\d+)"?')
+_CALL_REFS = re.compile(
+    r"(?:condition|body|to_apply|calls)=\{?%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+#: ops whose operand/result bytes we do NOT charge to HBM traffic
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "while",
+             "conditional", "call", "domain", "opt-barrier"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 1, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    n = 1
+    for d in dims:
+        n *= d
+    return n, dims
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    table: dict = field(default_factory=dict)   # op name -> type str
+    by_name: dict = field(default_factory=dict)  # op name -> _Op
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)   # type -> bytes
+    collective_count: int = 0
+    unparsed_while: int = 0
+    copy_bytes: float = 0.0   # loop-state copies (often elided on TPU)
+    elided_bytes: float = 0.0  # CPU bf16-promotion artifacts removed
+    collective_bytes_xpod: float = 0.0  # share crossing the pod boundary
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+        self.collective_count += other.collective_count * int(mult)
+        self.unparsed_while += other.unparsed_while
+        self.copy_bytes += other.copy_bytes * mult
+        self.elided_bytes += other.elided_bytes * mult
+        self.collective_bytes_xpod += other.collective_bytes_xpod * mult
+
+
+def _parse_computations(hlo: str) -> tuple[dict, str]:
+    comps: dict[str, _Computation] = {}
+    current = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            if line[:1] in ("%", "E") and line.rstrip().endswith("{"):
+                m = _COMP_RE.match(line)
+                if m:
+                    current = _Computation(m.group(1))
+                    if line.startswith("ENTRY"):
+                        entry = current.name
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OPLINE_RE.match(line)
+        if m:
+            name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+            o = _Op(name, type_str, opcode, line)
+            current.ops.append(o)
+            current.table[name] = type_str
+            current.by_name[name] = o
+    return comps, entry
+
+
+_FLOAT_DT = ("bf16", "f16", "f32")
+
+
+def _dims_of(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    return (m.group(1), m.group(2)) if m else (None, None)
+
+
+def _first_operand(op: _Op):
+    body = op.line.split(op.opcode + "(", 1)[1]
+    names = _OPERAND_RE.findall(body.split(")")[0] + ")")
+    return names[0] if names else None
+
+
+def _is_pure_convert_comp(comp: _Computation) -> bool:
+    """Called computation whose only real work is one dtype convert."""
+    real = [o for o in comp.ops if o.opcode not in ("parameter", "bitcast")]
+    return len(real) == 1 and real[0].opcode == "convert"
+
+
+def _build_convert_maps(comps: dict) -> dict:
+    """comp_name -> {op_name: source_op_name} for pure float converts."""
+    maps: dict[str, dict[str, str]] = {}
+    for cname, comp in comps.items():
+        m: dict[str, str] = {}
+        for op in comp.ops:
+            src = None
+            if op.opcode == "convert":
+                src = _first_operand(op)
+            elif op.opcode == "fusion":
+                for mm in _CALL_REFS.finditer(op.line):
+                    called = comps.get(mm.group(1))
+                    if called is not None and _is_pure_convert_comp(called):
+                        src = _first_operand(op)
+                    break
+            if src is None:
+                continue
+            st = comp.table.get(src)
+            if st is None:
+                continue
+            sdt, sdims = _dims_of(st)
+            rdt, rdims = _dims_of(op.type_str)
+            if (sdt in _FLOAT_DT and rdt in _FLOAT_DT and sdims == rdims):
+                m[op.name] = src
+        if m:
+            maps[cname] = m
+    return maps
+
+
+def _resolve(name: str, comp: _Computation, conv_map: dict) -> str:
+    seen = set()
+    while name in conv_map and name not in seen:
+        seen.add(name)
+        name = conv_map[name]
+    return name
+
+
+def _while_trip_count(op: _Op, comps: dict) -> int | None:
+    m = _TRIP_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    # canonical scan condition: ROOT = compare(iv, const N), direction=LT
+    refs = dict(
+        (k, v) for k, v in
+        ((mm.group(0).split("=")[0], mm.group(1))
+         for mm in _CALL_REFS.finditer(op.line)))
+    cond_name = None
+    for mm in _CALL_REFS.finditer(op.line):
+        if mm.group(0).startswith("condition"):
+            cond_name = mm.group(1)
+    if cond_name and cond_name in comps:
+        for o in comps[cond_name].ops:
+            if o.opcode == "constant" and o.type_str.startswith("s32"):
+                cm = re.search(r"constant\((\d+)\)", o.line)
+                if cm:
+                    return int(cm.group(1))
+    return None
+
+
+def _dot_flops(op: _Op, comp: _Computation, comps: dict) -> float:
+    result_elems, _ = _shape_elems_dims(op.type_str)
+    # operand names: first two %refs inside the parens after opcode
+    body = op.line.split(op.opcode + "(", 1)[1]
+    operands = _OPERAND_RE.findall(body)
+    if not operands:
+        return 0.0
+    lhs_type = comp.table.get(operands[0], "")
+    _, lhs_dims = _shape_elems_dims(lhs_type)
+    mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    k = 1
+    if mcd and lhs_dims:
+        for idx in mcd.group(1).split(","):
+            if idx:
+                k *= lhs_dims[int(idx)]
+    return 2.0 * result_elems * k
+
+
+def _build_bf16_dots(comp: _Computation, conv_map: dict) -> set:
+    """All float dots/convs: the TPU compute dtype for every matmul in this
+    framework is bf16.  Dense-model jax dots ARE bf16 — the f32 forms in
+    CPU HLO are float-normalization artifacts (often with the convert pairs
+    cancelled by the excess-precision simplifier, so operand dtypes alone
+    cannot identify them).  The ssm/xlstm chunked-scan f32 reference
+    einsums correspond to bf16-in / f32-accumulate(-in-register) MXU ops
+    in their Pallas kernel form.  Reads and writes of these ops are
+    charged at 2 bytes/elem."""
+    out = set()
+    for op in comp.ops:
+        if op.opcode in ("dot", "convolution"):
+            dt, _ = _dims_of(op.type_str)
+            if dt in _FLOAT_DT:
+                out.add(op.name)
+    return out
+
+
+#: the model wraps every *intentionally*-f32 computation in
+#: ``jax.named_scope("f32c")`` (norm statistics, the f32 softmax path, the
+#: loss path, rope, recurrent cells, the optimizer update).  op_name
+#: metadata survives XLA fusion, so the marker is visible in optimized
+#: HLO.  Any OTHER f32 compute op is float-normalization promotion of
+#: compute-dtype (bf16) math — a CPU-backend artifact charged at
+#: 2 bytes/elem, matching the TPU target.
+_LAYOUT_OPS = {"transpose", "reshape", "copy", "bitcast", "slice",
+               "dynamic-slice", "pad", "concatenate", "reverse",
+               "broadcast"}
+_ORIGIN_UNKNOWN = {"parameter", "get-tuple-element", "constant", "iota",
+                   "while", "tuple", "conditional", "call", "domain",
+                   "opt-barrier", "custom-call", "rng", "rng-bit-generator"}
+
+
+def _width_factor(name: str, comp: _Computation, conv_map: dict,
+                  half_set: set, depth: int = 8) -> float:
+    """0.5 if this f32 tensor would be bf16 on the TPU target, else 1.0."""
+    rname = _resolve(name, comp, conv_map)
+    t = comp.table.get(rname)
+    dt, _ = _dims_of(t) if t else (None, None)
+    if dt != "f32":
+        return 1.0
+    op = comp.by_name.get(rname)
+    if op is None or depth == 0:
+        return 1.0
+    if rname in half_set:
+        return 0.5
+    oc = op.opcode
+    if oc in _LAYOUT_OPS:
+        src = _first_operand(op)
+        if src:
+            return _width_factor(src, comp, conv_map, half_set, depth - 1)
+        return 1.0
+    if oc in _ORIGIN_UNKNOWN:
+        return 1.0                       # conservative: keep shown dtype
+    return 1.0 if "f32c" in op.line else 0.5
+
+
+def _res_factor(op: _Op, comp: _Computation, conv_map: dict,
+                half_set: set) -> float:
+    """Width factor for an op's own result write."""
+    dt, _ = _dims_of(op.type_str)
+    if dt != "f32":
+        return 1.0
+    if op.name in half_set:
+        return 0.5
+    if op.opcode in _LAYOUT_OPS:
+        src = _first_operand(op)
+        if src:
+            return _width_factor(src, comp, conv_map, half_set)
+        return 1.0
+    if op.opcode in _ORIGIN_UNKNOWN:
+        return 1.0
+    return 1.0 if "f32c" in op.line else 0.5
+
+
+def _eff_bytes(name: str, comp: _Computation, conv_map: dict,
+               half_set: set, force_half: bool = False) -> float:
+    """HBM bytes of a tensor reference, resolved through pure converts,
+    with the f32c-contract width factor.  ``force_half``: reader is a
+    matmul — float operands are bf16 on TPU regardless of provenance."""
+    rname = _resolve(name, comp, conv_map)
+    t = comp.table.get(rname)
+    if t is None:
+        return 0.0
+    b = _shape_bytes(t)
+    dt, _ = _dims_of(t)
+    if dt == "f32":
+        if force_half:
+            return b / 2.0
+        b *= _width_factor(name, comp, conv_map, half_set)
+    return b
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_buffer_adjust(op: _Op, comp: _Computation, comps: dict,
+                          ) -> tuple[set, float] | None:
+    """In-place / slice accounting for fusions over big loop buffers.
+
+    * DUS-rooted fusion (scan saving per-layer residuals into a stacked
+      [L, ...] buffer): XLA aliases the buffer — real traffic is the
+      updated slice (write) + its read, not the whole buffer per step.
+    * A fusion operand consumed ONLY by dynamic-slice/gather ops inside
+      the fused computation (scan reading one layer's params out of a
+      stacked buffer): real traffic is the sliced region, not the stack.
+
+    Returns (skip_operand_positions, extra_bytes) or None if no
+    adjustment applies.
+    """
+    called = None
+    for mm in _CALL_REFS.finditer(op.line):
+        called = comps.get(mm.group(1))
+        break
+    if called is None:
+        return None
+    # map parameter index -> (name, uses-opcodes)
+    param_names = {}
+    for o in called.ops:
+        pm = _PARAM_IDX_RE.search(o.line)
+        if o.opcode == "parameter" and pm:
+            param_names[int(pm.group(1))] = o.name
+    if not param_names:
+        return None
+    # uses with convert/bitcast chains resolved (CPU float normalization
+    # wraps the in-place DUS as convert -> DUS_f32 -> convert)
+    direct = defaultdict(list)    # operand name -> consumer op names
+    for o in called.ops:
+        body = o.line.split("(", 1)
+        if len(body) < 2:
+            continue
+        for n in _OPERAND_RE.findall(body[1].split(")")[0] + ")"):
+            direct[n].append(o.name)
+    uses = defaultdict(set)
+    for n in direct:
+        stack = list(direct[n])
+        seen = set()
+        while stack:
+            oname = stack.pop()
+            if oname in seen:
+                continue
+            seen.add(oname)
+            o = called.by_name.get(oname)
+            if o is None:
+                continue
+            if o.opcode in ("convert", "bitcast"):
+                stack.extend(direct.get(oname, ()))
+            else:
+                uses[n].add(o.opcode)
+    _, res_dims = _dims_of(op.type_str)
+    skip = set()
+    extra = 0.0
+    slice_extra_added = False
+    for idx, pname in param_names.items():
+        pt = called.table.get(pname)
+        if pt is None:
+            continue
+        pdt, pdims = _dims_of(pt)
+        u = uses.get(pname, set())
+        if pdims == res_dims and u and u <= {"dynamic-update-slice"}:
+            # aliased in-place buffer: find the update operand's size
+            for o in called.ops:
+                if o.opcode == "dynamic-update-slice":
+                    b = o.line.split(o.opcode + "(", 1)[1]
+                    names = _OPERAND_RE.findall(b.split(")")[0] + ")")
+                    if len(names) > 1:
+                        extra += 2 * _shape_bytes(called.table.get(names[1], ""))
+            skip.add(idx)
+        elif u and u <= {"dynamic-slice", "gather", "slice"} and \
+                _shape_bytes(pt) > 8 * _shape_bytes(op.type_str):
+            # stacked-buffer read: charge the sliced result(s) instead
+            # (once, regardless of how many big params feed the slices)
+            if not slice_extra_added:
+                for o in called.ops:
+                    if o.opcode in ("dynamic-slice", "gather", "slice"):
+                        extra += _shape_bytes(o.type_str)
+                slice_extra_added = True
+            skip.add(idx)
+    if not skip:
+        return None
+    return skip, extra
+
+
+_RG_EXPLICIT = re.compile(r"replica_groups=\{\{([0-9,{} ]*)\}\}")
+_RG_IOTA = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _spans_pods(line: str, pod_size: int = 256) -> bool:
+    """True if any replica group mixes devices from different pods (the
+    512-device two-pod mesh: ids < 256 vs >= 256).  Handles both the
+    explicit and iota-tiled replica_groups formats."""
+    m = _RG_EXPLICIT.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.replace("{", "").replace("}", "")
+                   .split(",") if x.strip()]
+            pods = {i // pod_size for i in ids}
+            if len(pods) > 1:
+                return True
+        return False
+    m = _RG_IOTA.search(line)
+    if m:
+        import numpy as _np
+        n, k = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        arr = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if m.group(4):
+            arr = arr.transpose([int(x) for x in m.group(4).split(",")])
+        groups = arr.reshape(n, k)
+        return bool((_np.ptp(groups // pod_size, axis=1) > 0).any())
+    return False
+
+
+def _coll_bytes(op: _Op, comp: _Computation, conv_map: dict,
+                half_set: set) -> tuple[float, float]:
+    """Collective operand bytes with the framework dtype invariant: no
+    large f32 tensor is ever communicated (grads, TP activation sums, and
+    MoE dispatch are bf16 end-to-end at the jax level; f32 appears only in
+    sub-MB stat reductions).  Large f32 collective operands in CPU HLO are
+    promotion contamination (the convert that should precede the collective
+    was hoisted past it by the excess-precision simplifier) — charge bf16."""
+    body = op.line.split(op.opcode + "(", 1)[1]
+    total = raw = 0.0
+    for name in _OPERAND_RE.findall(body.split(")")[0] + ")"):
+        t = comp.table.get(name)
+        if not t:
+            continue
+        ob_raw = _shape_bytes(t)
+        raw += ob_raw
+        rname = _resolve(name, comp, conv_map)
+        rt = comp.table.get(rname, t)
+        ob = _shape_bytes(rt)
+        dt, _ = _dims_of(rt)
+        if dt == "f32":
+            elems, _ = _shape_elems_dims(rt)
+            if rname in half_set or elems > 1_000_000:
+                ob /= 2.0
+        total += ob
+    return total, raw
+
+
+def _operand_bytes(op: _Op, comp: _Computation, conv_map: dict = None,
+                   half_set: set = frozenset()) -> tuple[float, float]:
+    """(TPU-normalized bytes, raw bytes) of the op's operands."""
+    body = op.line.split(op.opcode + "(", 1)[1]
+    total = raw = 0.0
+    is_dot = op.opcode in ("dot", "convolution")
+    for name in _OPERAND_RE.findall(body.split(")")[0] + ")"):
+        t = comp.table.get(name)
+        if not t:
+            continue
+        raw += _shape_bytes(t)
+        if conv_map is not None:
+            total += _eff_bytes(name, comp, conv_map, half_set,
+                                force_half=is_dot)
+        else:
+            total += _shape_bytes(t)
+    return total, raw
+
+
+def _comp_ctx(comp: _Computation, conv_maps: dict):
+    """(conv_map, half_set) for one computation."""
+    conv_map = conv_maps.get(comp.name, {})
+    half_set = _build_bf16_dots(comp, conv_map)
+    return conv_map, half_set
+
+
+def _op_hbm_bytes(op: _Op, comp: _Computation, comps: dict, conv_map: dict,
+                  half_set: set) -> tuple[float, float, float]:
+    """(hbm bytes, elided bytes, copy bytes) for one non-free op.
+
+    Shared by the roofline walker and the per-op breakdown diagnostic so
+    the two can never disagree."""
+    oc = op.opcode
+
+    def result_bytes():
+        return _shape_bytes(op.type_str) * _res_factor(
+            op, comp, conv_map, half_set)
+
+    if op.name in conv_map:
+        # pure dtype convert: free on TPU (fuses / never exists)
+        _, raw = _operand_bytes(op, comp, conv_map, half_set)
+        return 0.0, raw + _shape_bytes(op.type_str), 0.0
+    if oc in ("broadcast", "fusion"):
+        # generated values (broadcast of a constant / iota): never
+        # materialized on TPU — they fuse into consumers, and the common
+        # case here is the zeros-init of a scan's DUS-accumulated stacked
+        # buffer, which buffer-aliasing kills entirely.
+        body = op.line.split(oc + "(", 1)[1]
+        names = _OPERAND_RE.findall(body.split(")")[0] + ")")
+        if all(n.startswith(("constant", "iota")) for n in names):
+            return 0.0, _shape_bytes(op.type_str), 0.0
+    if oc == "dynamic-update-slice":
+        # in-place on TPU: traffic = read update + write region,
+        # not the whole buffer
+        body = op.line.split(oc + "(", 1)[1]
+        names = _OPERAND_RE.findall(body.split(")")[0] + ")")
+        upd = _eff_bytes(names[1], comp, conv_map, half_set) if len(
+            names) > 1 else 0
+        return 2 * upd, 0.0, 0.0
+    if oc in ("dynamic-slice", "slice", "gather"):
+        # reads only the sliced/gathered region (= result), not the
+        # whole operand — charging the operand would bill scanned
+        # stacked params [L, ...] at L x their size.
+        return 2 * result_bytes(), 0.0, 0.0
+    if oc == "scatter":
+        body = op.line.split(oc + "(", 1)[1]
+        names = _OPERAND_RE.findall(body.split(")")[0] + ")")
+        upd = _eff_bytes(names[-1], comp, conv_map, half_set) if names else 0
+        return 2 * upd, 0.0, 0.0
+    if oc == "copy":
+        b, raw = _operand_bytes(op, comp, conv_map, half_set)
+        b += _shape_bytes(op.type_str)
+        return b, 0.0, b
+    adj = _fusion_buffer_adjust(op, comp, comps) if oc == "fusion" else None
+    if adj:
+        skip, extra = adj
+        body2 = op.line.split(oc + "(", 1)[1]
+        names = _OPERAND_RE.findall(body2.split(")")[0] + ")")
+        total = raw = 0.0
+        res_aliased = False
+        _, rdims = _dims_of(op.type_str)
+        for i, name in enumerate(names):
+            t = comp.table.get(name)
+            if not t:
+                continue
+            raw += _shape_bytes(t)
+            if i in skip:
+                _, pdims = _dims_of(t)
+                if pdims == rdims:
+                    res_aliased = True
+                continue
+            total += _eff_bytes(name, comp, conv_map, half_set)
+        rb = 0.0 if res_aliased else result_bytes()
+        return (total + extra + rb,
+                max(raw - total - extra, 0.0) + (_shape_bytes(op.type_str) - rb),
+                0.0)
+    b, raw = _operand_bytes(op, comp, conv_map, half_set)
+    return (b + result_bytes(), (raw - b) + (
+        _shape_bytes(op.type_str) - result_bytes()), 0.0)
+
+
+def _cost_computation(comp_name: str, comps: dict, memo: dict,
+                      conv_maps: dict) -> HloCost:
+    if comp_name in memo:
+        return memo[comp_name]
+    comp = comps.get(comp_name)
+    cost = HloCost()
+    if comp is None:
+        memo[comp_name] = cost
+        return cost
+    memo[comp_name] = cost  # break cycles defensively
+    conv_map, half_set = _comp_ctx(comp, conv_maps)
+
+    for op in comp.ops:
+        oc = op.opcode
+        if oc.endswith("-done"):
+            continue  # async pair: accounted at the -start op
+        if oc == "while":
+            trip = _while_trip_count(op, comps)
+            if trip is None:
+                trip = 1
+                cost.unparsed_while += 1
+            for mm in _CALL_REFS.finditer(op.line):
+                sub = _cost_computation(mm.group(1), comps, memo, conv_maps)
+                cost.add(sub, mult=trip)
+            continue
+        if oc in ("call", "conditional", "fusion", "reduce", "sort", "scatter",
+                  "map", "reduce-window", "select-and-scatter",
+                  "async-start", "custom-call"):
+            for mm in _CALL_REFS.finditer(op.line):
+                sub = _cost_computation(mm.group(1), comps, memo, conv_maps)
+                # called computations of fusions/reduces are elementwise
+                # bodies — only their dot flops (and any collectives) matter
+                inner = HloCost(flops=sub.flops,
+                                collective_bytes=sub.collective_bytes,
+                                collectives=dict(sub.collectives),
+                                collective_count=sub.collective_count)
+                cost.add(inner)
+        if oc == "dot" or oc == "convolution":
+            cost.flops += _dot_flops(op, comp, comps)
+        is_coll = any(oc.startswith(c) for c in _COLLECTIVES)
+        if is_coll:
+            # psum_invariant lowers to an all-reduce whose reducer is a
+            # COPY: a vma bookkeeping no-op (every participant already
+            # holds the identical value) - it moves no new data on TPU.
+            called_root_copy = False
+            for mm in _CALL_REFS.finditer(op.line):
+                called = comps.get(mm.group(1))
+                if called is not None and called.ops and \
+                        called.ops[-1].opcode == "copy":
+                    called_root_copy = True
+                break
+            if called_root_copy:
+                _, raw = _operand_bytes(op, comp, conv_map, half_set)
+                cost.elided_bytes += raw
+                continue
+            b, raw = _coll_bytes(op, comp, conv_map, half_set)
+            base = next(c for c in _COLLECTIVES if oc.startswith(c))
+            cost.collectives[base] = cost.collectives.get(base, 0.0) + b
+            cost.collective_bytes += b
+            cost.collective_count += 1
+            cost.elided_bytes += raw - b
+            if _spans_pods(op.line):
+                cost.collective_bytes_xpod += b
+        if oc not in _FREE_OPS:
+            b, el, cp = _op_hbm_bytes(op, comp, comps, conv_map, half_set)
+            cost.bytes_accessed += b
+            cost.elided_bytes += el
+            cost.copy_bytes += cp
+    memo[comp_name] = cost
+    return cost
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        return HloCost()
+    conv_maps = _build_convert_maps(comps)
+    return _cost_computation(entry, comps, {}, conv_maps)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run forces 512 host
+devices via XLA_FLAGS before first jax init, while smoke tests must see the
+real single-device CPU backend.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a leading 2-pod axis.
+
+    Axis roles: ``pod`` = outer data parallelism over DCN; ``data`` = data
+    parallelism (+ZeRO/FSDP storage sharding) over ICI; ``model`` = tensor/
+    expert parallelism over ICI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the real local devices (CPU smoke tests, examples)."""
+    n = data * model
+    devs = jax.devices()[:n]
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices, have {len(jax.devices())}")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.array(devs).reshape(data, model), ("data", "model"))

@@ -1,0 +1,171 @@
+"""Model configuration + parameter-spec system.
+
+Params are plain pytrees (nested dicts of jax.Array).  Every leaf is
+declared as a ``ParamSpec`` carrying shape, init scale, and *logical* axis
+names; from one spec tree we derive:
+
+* materialized params (``init_params``) for smoke tests / real training,
+* abstract params (``abstract_params``) for the dry-run (no allocation),
+* the sharding tree (``sharding_tree``) for pjit in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.context import active_ctx
+
+__all__ = [
+    "ModelConfig",
+    "ParamSpec",
+    "init_params",
+    "abstract_params",
+    "sharding_tree",
+    "spec_tree_num_params",
+]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One dataclass covers the whole assigned-architecture pool; families
+    ignore the fields they don't use."""
+
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # defaults to d_model // n_heads
+
+    # attention variants
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    attn_window: Optional[int] = None   # sliding-window width (local layers)
+    local_global_pattern: int = 0       # N local layers per 1 global (gemma3: 5)
+    rope_theta: float = 10_000.0
+    attn_scale: Optional[float] = None  # override 1/sqrt(head_dim)
+
+    # mlp variants
+    mlp_act: str = "swiglu"             # swiglu | relu2 | gelu
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_heads: int = 0                  # mamba2 value heads
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    hybrid_period: int = 0              # zamba2: shared attn every N mamba blocks
+    slstm_every: int = 0                # xlstm: sLSTM every N blocks
+    mlstm_proj_factor: float = 0.0      # xlstm: mLSTM pre-up-projection
+                                        # (paper: 2.0; 0 = cell at d_model)
+
+    # encoder-decoder / VLM
+    n_encoder_layers: int = 0
+    cross_attn_period: int = 0          # llama-vision: 1 cross layer per N
+    frontend_dim: int = 0               # stub frame/patch embedding dim
+
+    tie_embeddings: bool = True
+    embed_scale: float = 1.0            # gemma: sqrt(d_model)
+    norm: str = "rmsnorm"               # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    # training-time behavior
+    remat: str = "full"                 # full | dots | none
+    microbatches: int = 1               # gradient-accumulation splits
+    # §Perf levers (hillclimbed via dryrun --set; defaults = baseline)
+    norm_mult_dtype: str = "float32"    # "compute": f32 stats, bf16 multiply
+    norm_custom_bwd: int = 0            # 1: hand-written bf16 rmsnorm VJP
+    attn_probs_dtype: str = "float32"   # "compute": flash-style bf16 probs
+    seq_shard_norms: int = 0            # 1: Megatron-SP norm/residual segs
+    attn_block_remat: int = 0           # 1: checkpoint each q-block's attn
+    loss_dtype: str = "float32"         # "compute": bf16 lse/onehot path
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_causal_lm(self) -> bool:
+        return self.family in ("dense", "moe", "hybrid", "ssm", "vlm")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]  # one logical name per dim
+    init: str = "normal"                # normal | zeros | ones | scaled
+    scale: float = 1.0                  # stddev (normal) / fan-in exponent
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _init_leaf(key, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "scaled":
+        # fan-in scaled normal (truncated not needed for smoke-scale)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+
+
+def init_params(key: jax.Array, specs: Any, dtype=jnp.bfloat16) -> Any:
+    """Materialize a spec tree into arrays (host-order deterministic)."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs: Any, dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree with shardings attached when a ctx is active —
+    the dry-run path: no device allocation ever happens.  Storage shardings
+    are divisibility-masked against each leaf's shape."""
+    ctx = active_ctx()
+
+    def leaf(s: ParamSpec):
+        sharding = ctx.sharding(s.logical, s.shape) if ctx else None
+        return jax.ShapeDtypeStruct(s.shape, dtype, sharding=sharding)
+
+    return jax.tree.map(leaf, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def sharding_tree(specs: Any) -> Any:
+    """NamedSharding tree (requires an active ctx; divisibility-masked)."""
+    ctx = active_ctx()
+    assert ctx is not None, "sharding_tree needs an active sharding context"
+    return jax.tree.map(lambda s: ctx.sharding(s.logical, s.shape), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_tree_num_params(specs: Any) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(np.prod(s.shape) for s in leaves))

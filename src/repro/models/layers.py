@@ -1,0 +1,421 @@
+"""Shared model layers: norms, RoPE, attention (GQA/window/qk-norm), MLPs.
+
+Everything is a pure function over explicit param dicts; logical-axis
+sharding hints come from ``repro.distributed.context.constrain`` and are
+no-ops without an active mesh context.
+
+Attention uses a query-chunked exact implementation (full keys per query
+block, softmax in f32) for long sequences so XLA never materializes the
+[S, S] score matrix for the whole sequence at once — the HLO stays a
+``scan``, which is also what keeps 61-81 layer configs compilable on one
+CPU core.  The Pallas flash kernel (``repro.kernels.flash_attention``) is a
+drop-in for the inner block on real TPUs (``attn_impl="pallas"``).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.common import ModelConfig, ParamSpec
+
+__all__ = [
+    "norm_spec", "apply_norm", "rope_sin_cos", "apply_rope",
+    "attention_specs", "attention", "attention_from_cache",
+    "mlp_specs", "mlp",
+]
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------- norms
+
+def norm_spec(cfg: ModelConfig) -> dict:
+    d = {"scale": ParamSpec((cfg.d_model,), ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamSpec((cfg.d_model,), ("embed",), init="zeros")
+    return d
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_bf16_bwd(x: jax.Array, scale: jax.Array, eps: float):
+    """RMSNorm with f32 statistics and a hand-written backward that keeps
+    every activation-sized tensor in the compute dtype (§Perf lever
+    ``norm_mode="bf16_bwd"``).
+
+    jax.grad of the straightforward f32-stat norm drags f32 [B,S,D]
+    cotangents through the whole mean-square chain (the dominant HBM term
+    the roofline walker flags on dense trainers).  Here only the row
+    statistics ([B,S,1]) are f32; dx/dscale math runs in bf16 — standard
+    practice (MaxText/Megatron fused norms do the same in-kernel).
+    """
+    y, _ = _rmsnorm_bf16_fwd(x, scale, eps)
+    return y
+
+
+def _row_sq_mean(x: jax.Array) -> jax.Array:
+    """mean(x^2) over the last dim as a CONTRACTION (bf16 reads, f32
+    accumulate) — the einsum form never materializes an f32 [B,S,D]
+    square, matching what a fused TPU norm reads/writes."""
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    return (ms / x.shape[-1])[..., None]
+
+
+def _rmsnorm_bf16_fwd(x, scale, eps):
+    with jax.named_scope("f32c"):
+        ms = _row_sq_mean(x)
+        inv = jax.lax.rsqrt(ms + eps)                   # [B,S,1] f32
+    y = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    return y, (x, inv, scale)
+
+
+def _rmsnorm_bf16_rev(eps, res, dy):
+    x, inv, scale = res
+    inv_c = inv.astype(x.dtype)
+    xhat = x * inv_c
+    with jax.named_scope("f32c"):
+        dscale = jnp.einsum("...d,...d->d", dy, xhat,
+                            preferred_element_type=jnp.float32
+                            ).astype(scale.dtype)
+    dxhat = dy * scale.astype(dy.dtype)
+    with jax.named_scope("f32c"):
+        # row term in f32 (a [B,S,1] statistic, like the forward)
+        row = jnp.einsum("...d,...d->...", dxhat, xhat,
+                         preferred_element_type=jnp.float32
+                         )[..., None] / x.shape[-1]
+    dx = inv_c * (dxhat - xhat * row.astype(x.dtype))
+    return dx, dscale
+
+
+_rmsnorm_bf16_bwd.defvjp(_rmsnorm_bf16_fwd, _rmsnorm_bf16_rev)
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float, kind: str,
+               f32_mult: bool = True, custom_bwd: bool = False) -> jax.Array:
+    """Normalization with f32 statistics.
+
+    ``f32_mult=False`` keeps the *multiplies* in the compute dtype (stats
+    still f32) — the MaxText-style pattern that removes the f32
+    activation-sized elementwise chains the roofline walker flags as the
+    dominant HBM term on dense trainers (§Perf lever ``norm_mult_dtype``).
+    ``custom_bwd=True`` (rmsnorm only) additionally replaces jax.grad's
+    backward with a bf16 hand-written VJP (§Perf lever ``norm_mode``).
+    """
+    if custom_bwd and kind != "layernorm":
+        return _rmsnorm_bf16_bwd(x, p["scale"], eps)
+    if kind == "layernorm":
+        with jax.named_scope("f32c"):
+            xf = x.astype(jnp.float32)
+            mu = jnp.mean(xf, axis=-1, keepdims=True)
+            var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+            if f32_mult:
+                y = (xf - mu) * jax.lax.rsqrt(var + eps)
+                y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(
+                    jnp.float32)
+                return y.astype(x.dtype)
+            inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+            mu_c = mu.astype(x.dtype)
+        return ((x - mu_c) * inv * p["scale"] + p["bias"]).astype(x.dtype)
+    # rmsnorm
+    with jax.named_scope("f32c"):
+        xf = x.astype(jnp.float32)
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        if f32_mult:
+            y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+            return y.astype(x.dtype)
+        inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+def _rms_head(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """qk-norm: RMS over head_dim with a learned per-dim scale."""
+    with jax.named_scope("f32c"):
+        xf = x.astype(jnp.float32)
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        return (xf * jax.lax.rsqrt(ms + eps)
+                * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_sin_cos(positions: jax.Array, head_dim: int, theta: float):
+    """positions [..., S] int32 -> (sin, cos) [..., S, head_dim/2] f32."""
+    with jax.named_scope("f32c"):
+        half = head_dim // 2
+        freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+        ang = positions.astype(jnp.float32)[..., None] * freqs
+        return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [B, S, N, hd]; sin/cos [S, hd/2] or [B, S, hd/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:
+        s, c = sin[None, :, None, :], cos[None, :, None, :]
+    else:
+        s, c = sin[:, :, None, :], cos[:, :, None, :]
+    with jax.named_scope("f32c"):
+        xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+        return jnp.concatenate(
+            [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1
+        ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = 1.0 / math.sqrt(d)
+    # the d dims carry their own logical names ("attn_in"/"attn_out_d") so
+    # storage rules can FSDP-shard attention weights independently of the
+    # MLP (a §Perf lever); both default to replicated like "embed".
+    specs = {
+        "wq": ParamSpec((d, H, hd), ("attn_in", "qheads", "head_dim"), "normal", s),
+        "wk": ParamSpec((d, KV, hd), ("attn_in", "kv_heads", "head_dim"), "normal", s),
+        "wv": ParamSpec((d, KV, hd), ("attn_in", "kv_heads", "head_dim"), "normal", s),
+        "wo": ParamSpec((H, hd, d), ("qheads", "head_dim", "attn_out_d"), "normal",
+                        1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias and not cross:
+        specs["bq"] = ParamSpec((H, hd), ("qheads", "head_dim"), "zeros")
+        specs["bk"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bv"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+    return specs
+
+
+def _qkv(p: dict, cfg: ModelConfig, x: jax.Array, kv_x: jax.Array,
+         positions, kv_positions, use_rope: bool):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", kv_x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = _rms_head(q, p["q_norm"], cfg.norm_eps)
+        k = _rms_head(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        sin_q, cos_q = rope_sin_cos(positions, cfg.hd, cfg.rope_theta)
+        sin_k, cos_k = rope_sin_cos(kv_positions, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, sin_q, cos_q)
+        k = apply_rope(k, sin_k, cos_k)
+    q = constrain(q, "batch", "seq", "qheads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """[..., Sq, Sk] additive bias from positional validity."""
+    with jax.named_scope("f32c"):
+        valid = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], dtype=bool)
+        if causal:
+            valid &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            valid &= k_pos[None, :] > (q_pos[:, None] - window)
+        return jnp.where(valid, 0.0, _NEG_INF)
+
+
+def _sdpa(q, k, v, bias, scale, probs_dtype: str = "float32"):
+    """q [B,Sq,KV,G,hd], k/v [B,Sk,KV,hd], bias [Sq,Sk] -> [B,Sq,KV,G,hd].
+
+    ``probs_dtype="compute"`` (§Perf lever ``attn_probs_dtype``) keeps the
+    whole score chain in the compute dtype with only row statistics in
+    f32, and normalizes AFTER the PV product (linearity) — the flash-
+    attention dtype policy, one full f32 score materialization cheaper.
+    Row max is exact (max of bf16 values is bf16); exp in bf16 costs
+    ~0.4% relative error on probs, standard for bf16 flash kernels.
+    """
+    if probs_dtype != "compute":
+        with jax.named_scope("f32c"):
+            scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(
+                jnp.float32) * scale
+            scores = scores + bias[None, None, None]
+            probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * jnp.asarray(scale, q.dtype)
+    s = s + bias[None, None, None].astype(q.dtype)     # [B,KV,G,Sq,Sk]
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m)                                  # bf16
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)           # unnormalized
+    with jax.named_scope("f32c"):
+        denom = jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+        # denom [B,KV,G,Sq,1] -> [B,Sq,KV,G,1]
+        inv = (1.0 / jnp.maximum(denom, 1e-30)).transpose(0, 3, 1, 2, 4)
+    return o * inv.astype(o.dtype)
+
+
+def attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    kv_x: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    q_block: int = 1024,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill).
+
+    ``kv_x`` switches to cross-attention (keys/values from the encoder or
+    vision stream; no causal mask, no rope on keys by default).
+    """
+    B, Sq, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    Sk = kv_x.shape[1]
+    if positions is None:
+        positions = jnp.arange(Sq, dtype=jnp.int32)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Sk, dtype=jnp.int32)
+
+    q, k, v = _qkv(p, cfg, x, kv_x, positions, kv_positions, use_rope)
+    KV, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(B, Sq, KV, G, cfg.hd)
+    scale = cfg.attn_scale or 1.0 / math.sqrt(cfg.hd)
+
+    if Sq <= q_block:
+        bias = _mask_bias(positions, kv_positions, causal, window)
+        out = _sdpa(q, k, v, bias, scale, cfg.attn_probs_dtype)
+    else:
+        # exact query-chunked attention: scan over q blocks.
+        assert Sq % q_block == 0, (Sq, q_block)
+        nblk = Sq // q_block
+        qb = q.reshape(B, nblk, q_block, KV, G, cfg.hd).transpose(1, 0, 2, 3, 4, 5)
+        pb = positions.reshape(nblk, q_block)
+
+        # sliding-window causal layers SKIP out-of-window keys instead of
+        # masking them: each q block only ever reaches kv_span =
+        # window-1+q_block keys, so slice that (static-size) range out of
+        # k/v per block — S/(window+blk)-fold fewer score FLOPs AND bytes
+        # (gemma3's 5:1 local layers at 32k: ~16x).  Mirrors the Pallas
+        # kernel's block-skipping; exactness is asserted in tests.
+        windowed = (window is not None and causal and kv_x is x
+                    and Sk == Sq and window + q_block < Sk)
+        if windowed:
+            kv_span = window - 1 + q_block
+
+            def block_attn(qi, pi):
+                q0 = pi[0]
+                start = jnp.clip(q0 - (window - 1), 0, Sk - kv_span)
+                kb = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+                vb = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+                kv_pos = start + jnp.arange(kv_span, dtype=jnp.int32)
+                bias = _mask_bias(pi, kv_pos, causal, window)
+                return _sdpa(qi, kb, vb, bias, scale, cfg.attn_probs_dtype)
+        else:
+            def block_attn(qi, pi):
+                bias = _mask_bias(pi, kv_positions, causal, window)
+                return _sdpa(qi, k, v, bias, scale, cfg.attn_probs_dtype)
+
+        if cfg.attn_block_remat:
+            # without this, the scan's AD residuals stack the f32 probs of
+            # EVERY q-block ([nblk, B, KV, G, blk, Sk] f32) — rematting the
+            # block recomputes them from (q, k) in the backward instead.
+            block_attn = jax.checkpoint(block_attn)
+
+        def body(_, blk):
+            qi, pi = blk
+            return None, block_attn(qi, pi)
+
+        _, ob = jax.lax.scan(body, None, (qb, pb))
+        out = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, cfg.hd)
+
+    out = out.reshape(B, Sq, cfg.n_heads, cfg.hd)
+    out = constrain(out, "batch", "seq", "qheads", "head_dim")
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    return constrain(y, "batch", "seq", "embed")
+
+
+def attention_from_cache(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: x [B, 1, d]; caches [B, S_max, KV, hd].
+
+    Returns (attn_out [B,1,d], new_k_cache, new_v_cache).  The caches may be
+    sequence-sharded (``cache_seq`` logical axis) for 500k contexts; the
+    masked softmax reduces over the sharded axis via GSPMD collectives.
+    """
+    B, _, _ = x.shape
+    S_max = k_cache.shape[1]
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k_new, v_new = _qkv(p, cfg, x, x, positions, positions, use_rope)
+
+    k_cache = jax.lax.dynamic_update_index_in_dim(
+        k_cache, k_new[:, 0].astype(k_cache.dtype), pos.astype(jnp.int32), axis=1
+    )
+    v_cache = jax.lax.dynamic_update_index_in_dim(
+        v_cache, v_new[:, 0].astype(v_cache.dtype), pos.astype(jnp.int32), axis=1
+    )
+    k_cache = constrain(k_cache, "batch", "cache_seq", "kv_heads", "head_dim")
+    v_cache = constrain(v_cache, "batch", "cache_seq", "kv_heads", "head_dim")
+
+    KV, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(B, 1, KV, G, cfg.hd)
+    scale = cfg.attn_scale or 1.0 / math.sqrt(cfg.hd)
+
+    k_pos = jnp.arange(S_max, dtype=jnp.int32)
+    valid = k_pos <= pos
+    if window is not None:
+        valid &= k_pos > (pos - window)
+    bias = jnp.where(valid, 0.0, _NEG_INF)  # [S_max]
+
+    with jax.named_scope("f32c"):
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", q,
+                            k_cache).astype(jnp.float32)
+        scores = scores * scale + bias[None, None, None, None, :]
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache)
+    out = out.reshape(B, 1, cfg.n_heads, cfg.hd)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    return y, k_cache, v_cache
+
+
+# ---------------------------------------------------------------- MLP
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    specs = {
+        "wi": ParamSpec((d, f), ("embed", "mlp"), "normal", s_in),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), "normal", s_out),
+    }
+    if cfg.mlp_act == "swiglu":
+        specs["wg"] = ParamSpec((d, f), ("embed", "mlp"), "normal", s_in)
+    return specs
+
+
+def mlp(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(cfg.mlp_act)
+    h = constrain(h, "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return constrain(y, "batch", "seq", "embed")

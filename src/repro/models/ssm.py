@@ -1,0 +1,458 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Mamba2 uses the chunked SSD form: intra-chunk attention-like einsums plus an
+inter-chunk recurrent state carried through a ``lax.scan`` — sequence length
+enters compute linearly, which is what makes zamba2/xlstm the designated
+``long_500k`` architectures.  Decode is the O(1) recurrent update on a
+cached state.
+
+xLSTM: mLSTM is a matrix-memory recurrence (chunkwise-parallel here, like a
+gated linear attention); sLSTM has a true hidden-to-hidden recurrence and is
+inherently sequential (``lax.scan`` over time).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models.common import ModelConfig, ParamSpec
+
+__all__ = [
+    "mamba2_specs", "mamba2_forward", "mamba2_decode", "mamba2_init_state",
+    "mlstm_specs", "mlstm_forward", "mlstm_decode", "mlstm_init_state",
+    "slstm_specs", "slstm_forward", "slstm_decode", "slstm_init_state",
+]
+
+
+def _chunked_time_scan(step, carry, xs, seq_len: int, chunk: int = 64):
+    """scan(step) over time with two-level checkpointing.
+
+    A flat ``lax.scan`` over S steps saves every per-step carry for the
+    backward pass — for mLSTM's matrix memory that is S x [B,H,hd,hd] f32
+    (hundreds of GB at 4k x batch).  Nesting the scan (outer over chunks,
+    inner over steps, ``jax.checkpoint`` on the chunk body) stores only
+    chunk-boundary states and recomputes inside a chunk: sqrt-style memory
+    at 2x step compute.
+
+    ``xs`` leaves are time-major ([S, ...]).
+    """
+    chunk = min(chunk, seq_len)
+    if seq_len % chunk != 0:
+        # fall back to the flat scan for ragged tiny sequences (smoke tests)
+        return jax.lax.scan(step, carry, xs)
+
+    nc = seq_len // chunk
+
+    def chunk_body(c, xs_chunk):
+        return jax.lax.scan(step, c, xs_chunk)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    xs_c = jax.tree.map(lambda a: a.reshape(nc, chunk, *a.shape[1:]), xs)
+    carry, ys = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(seq_len, *a.shape[2:]), ys)
+    return carry, ys
+
+
+# =============================================================== Mamba2 (SSD)
+
+def _mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    headdim = 64
+    nheads = cfg.ssm_heads or d_inner // headdim
+    headdim = d_inner // nheads
+    return d_inner, nheads, headdim
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, nheads, headdim = _mamba_dims(cfg)
+    N = cfg.ssm_state
+    s = 1.0 / math.sqrt(d)
+    return {
+        # fused input projection -> [z | x | B | C | dt]
+        "w_in": ParamSpec((d, 2 * d_inner + 2 * N + nheads),
+                          ("embed", "mlp"), "normal", s),
+        "conv_w": ParamSpec((cfg.ssm_conv, d_inner), ("conv", "mlp"), "normal", 0.2),
+        "A_log": ParamSpec((nheads,), (None,), "zeros"),
+        "D": ParamSpec((nheads,), (None,), "ones"),
+        "dt_bias": ParamSpec((nheads,), (None,), "zeros"),
+        "norm_scale": ParamSpec((d_inner,), ("mlp",), "ones"),
+        "w_out": ParamSpec((d_inner, d), ("mlp", "embed"), "normal",
+                           1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _mamba_proj(p, cfg, x):
+    """x [B,S,d] -> z, xs, Bs, Cs, dt   (pre-conv)."""
+    d_inner, nheads, headdim = _mamba_dims(cfg)
+    N = cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xs, Bs, Cs, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    with jax.named_scope("f32c"):
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+    return z, xs, Bs, Cs, dt
+
+
+def _causal_conv(xs: jax.Array, conv_w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time.  xs [B,S,D], conv_w [K,D]."""
+    K = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xs.shape[0], K - 1, xs.shape[2]), xs.dtype)
+    else:
+        pad = state.astype(xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)  # [B, S+K-1, D]
+    out = sum(
+        xp[:, i : i + xs.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(K)
+    )
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bs, Cs, chunk: int, h0=None):
+    """Structured state-space duality, chunked.
+
+    xh [B,S,H,P]; dt [B,S,H] f32; A [H] (negative); Bs/Cs [B,S,N].
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    B, S, H, P = xh.shape
+    N = Bs.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    # per-step log decay
+    dA = dt * A[None, None, :]                     # [B,S,H]  (<= 0)
+    xc = xh.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    dAc = dA.reshape(B, nc, chunk, H)
+    Bc = Bs.reshape(B, nc, chunk, N)
+    Cc = Cs.reshape(B, nc, chunk, N)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def scan_body(h, inp):
+        """One chunk: intra-chunk quadratic + inter-chunk state carry.
+        Scanning keeps the [Q,Q,H] tensors chunk-local (memory) and the HLO
+        size independent of sequence length.  The whole chunk runs under
+        the f32c dtype-contract scope: the SSD reference math is genuinely
+        f32 (the Pallas ssm kernel keeps it f32 in VMEM)."""
+        xq, dtq, dAq, Bq, Cq = inp                  # [B,Q,...]
+        cum = jnp.cumsum(dAq, axis=1)               # [B,Q,H]
+        total = cum[:, -1:, :]                      # [B,1,H]
+        li = cum[:, :, None, :] - cum[:, None, :, :]       # [B,Q,Q,H]
+        L = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        scores = jnp.einsum("bqn,bkn->bqk", Cq.astype(jnp.float32),
+                            Bq.astype(jnp.float32))
+        xdt = xq.astype(jnp.float32) * dtq[..., None]      # [B,Q,H,P]
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, L, xdt)
+        # output contribution of the carried-in state
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp",
+                             Cq.astype(jnp.float32), jnp.exp(cum), h)
+        # state update for the next chunk
+        decay_in = jnp.exp(total - cum)              # [B,Q,H]
+        upd = jnp.einsum("bkn,bkh,bkhp->bhpn", Bq.astype(jnp.float32),
+                         decay_in, xdt)
+        h_new = h * jnp.exp(total[:, 0, :])[:, :, None, None] + upd
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    # f32c: the SSD reference math is genuinely f32 (the Pallas ssm kernel
+    # keeps it f32 in VMEM; only its HBM I/O is bf16)
+    with jax.named_scope("f32c"):
+        h_final, ys = jax.lax.scan(
+            scan_body, h0,
+            (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+             dAc.transpose(1, 0, 2, 3), Bc.transpose(1, 0, 2, 3),
+             Cc.transpose(1, 0, 2, 3)),
+        )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, h_final
+
+
+def mamba2_forward(p: dict, cfg: ModelConfig, x: jax.Array,
+                   chunk: int = 128) -> jax.Array:
+    """Full-sequence Mamba2 block (training/prefill).  x [B,S,d]."""
+    B, S, _ = x.shape
+    d_inner, nheads, headdim = _mamba_dims(cfg)
+    z, xs, Bs, Cs, dt = _mamba_proj(p, cfg, x)
+    xs, _ = _causal_conv(xs, p["conv_w"])
+    xh = xs.reshape(B, S, nheads, headdim)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    chunk = min(chunk, S)
+    y, _ = _ssd_chunked(xh, dt, A, Bs, Cs, chunk)
+    with jax.named_scope("f32c"):
+        y = y + xh.astype(jnp.float32) * p["D"].astype(
+            jnp.float32)[None, None, :, None]
+        y = y.reshape(B, S, d_inner)
+        # gated RMSNorm then output projection
+        ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+        y = y * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"].astype(
+            jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+class MambaState(NamedTuple):
+    h: jax.Array          # [B, H, P, N] f32
+    conv: jax.Array       # [B, K-1, d_inner]
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d_inner, nheads, headdim = _mamba_dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, nheads, headdim, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), dtype),
+    )
+
+
+def mamba2_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                  state: MambaState) -> tuple[jax.Array, MambaState]:
+    """One-token recurrent update.  x [B,1,d]."""
+    B = x.shape[0]
+    d_inner, nheads, headdim = _mamba_dims(cfg)
+    z, xs, Bs, Cs, dt = _mamba_proj(p, cfg, x)
+    xs, conv_state = _causal_conv(xs, p["conv_w"], state=state.conv)
+    with jax.named_scope("f32c"):
+        xh = xs.reshape(B, nheads, headdim).astype(jnp.float32)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dt1 = dt[:, 0, :]                                # [B,H]
+        dec = jnp.exp(dt1 * A[None, :])                  # [B,H]
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bs[:, 0].astype(jnp.float32),
+                         dt1, xh)
+        h = state.h * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cs[:, 0].astype(jnp.float32), h)
+        y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+        y = y.reshape(B, 1, d_inner)
+        ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+        y = y * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"].astype(
+            jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, MambaState(h=h, conv=conv_state)
+
+
+# ================================================================== mLSTM
+
+def _mlstm_dims(cfg: ModelConfig):
+    """(heads, head_dim, d_in): the cell runs at d_in = proj_factor * d_model
+    (xLSTM paper uses 2.0); with proj_factor 0 the cell runs at d_model."""
+    H = cfg.n_heads
+    d_in = int(cfg.mlstm_proj_factor * cfg.d_model) or cfg.d_model
+    return H, d_in // H, d_in
+
+
+def _slstm_dims(cfg: ModelConfig):
+    """sLSTM always runs at d_model (no up-projection in the paper)."""
+    H = cfg.n_heads
+    return H, cfg.d_model // H
+
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, hd, d_in = _mlstm_dims(cfg)
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(d_in)
+    specs = {
+        "wq": ParamSpec((d_in, H, hd), ("mlp", "qheads", "head_dim"), "normal", si),
+        "wk": ParamSpec((d_in, H, hd), ("mlp", "qheads", "head_dim"), "normal", si),
+        "wv": ParamSpec((d_in, H, hd), ("mlp", "qheads", "head_dim"), "normal", si),
+        "w_if": ParamSpec((d_in, 2 * H), ("mlp", None), "normal", si),
+        "b_if": ParamSpec((2 * H,), (None,), "zeros"),
+        "o_norm": ParamSpec((H, hd), ("qheads", "head_dim"), "ones"),
+        "wo": ParamSpec((H, hd, d), ("qheads", "head_dim", "embed"), "normal",
+                        si),
+    }
+    if cfg.mlstm_proj_factor:
+        # pre-up-projection + swish output gate (xLSTM paper Fig 10 block)
+        specs["w_up"] = ParamSpec((d, d_in), ("embed", "mlp"), "normal", s)
+        specs["w_gate"] = ParamSpec((d, d_in), ("embed", "mlp"), "normal", s)
+    return specs
+
+
+def _mlstm_in(p, cfg, x):
+    """Block input -> (cell input u, output gate z or None)."""
+    if cfg.mlstm_proj_factor:
+        u = jnp.einsum("bsd,de->bse", x, p["w_up"])
+        z = jnp.einsum("bsd,de->bse", x, p["w_gate"])
+        return u, z
+    return x, None
+
+
+def _mlstm_gates(p, x):
+    gates = jnp.einsum("bsd,dg->bsg", x, p["w_if"]) + p["b_if"]
+    H = gates.shape[-1] // 2
+    i_g = gates[..., :H].astype(jnp.float32)            # input (log-space)
+    f_g = gates[..., H:].astype(jnp.float32)            # forget
+    logf = jax.nn.log_sigmoid(f_g)
+    return i_g, logf
+
+
+def mlstm_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Stabilized mLSTM, recurrent form via scan over time.  x [B,S,d]."""
+    B, S, d = x.shape
+    H, hd, _ = _mlstm_dims(cfg)
+    u, z_gate = _mlstm_in(p, cfg, x)
+    q = jnp.einsum("bsd,dnh->bsnh", u, p["wq"]) / math.sqrt(hd)
+    k = jnp.einsum("bsd,dnh->bsnh", u, p["wk"]) / math.sqrt(hd)
+    v = jnp.einsum("bsd,dnh->bsnh", u, p["wv"])
+    i_g, logf = _mlstm_gates(p, u)
+
+    def step(carry, inp):
+        C, n, m = carry                                  # [B,H,hd,hd],[B,H,hd],[B,H]
+        qt, kt, vt, it, lft = inp
+        m_new = jnp.maximum(lft + m, it)                 # stabilizer
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(lft + m - m_new)
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        C = C * f_s[..., None, None] + i_s[..., None, None] * (
+            kf[..., :, None] * vf[..., None, :])
+        n = n * f_s[..., None] + i_s[..., None] * kf
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), (num / den)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_g.transpose(1, 0, 2),
+          logf.transpose(1, 0, 2))
+    with jax.named_scope("f32c"):
+        _, ys = _chunked_time_scan(step, (C0, n0, m0), xs, S)
+        y = ys.transpose(1, 0, 2, 3)                     # [B,S,H,hd]
+        y = y * p["o_norm"].astype(jnp.float32)[None, None]
+        if z_gate is not None:
+            y = y * jax.nn.silu(
+                z_gate.astype(jnp.float32)).reshape(B, S, H, hd)
+        y = y.astype(x.dtype)
+    return jnp.einsum("bsnh,nhd->bsd", y, p["wo"])
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array
+    n: jax.Array
+    m: jax.Array
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    H, hd, _ = _mlstm_dims(cfg)
+    return MLSTMState(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.zeros((batch, H), jnp.float32),
+    )
+
+
+def mlstm_decode(p, cfg, x, state: MLSTMState):
+    """x [B,1,d] one-step; same math as one scan step."""
+    B = x.shape[0]
+    H, hd, _ = _mlstm_dims(cfg)
+    u, z_gate = _mlstm_in(p, cfg, x)
+    q = jnp.einsum("bsd,dnh->bsnh", u, p["wq"])[:, 0] / math.sqrt(hd)
+    k = jnp.einsum("bsd,dnh->bsnh", u, p["wk"])[:, 0] / math.sqrt(hd)
+    v = jnp.einsum("bsd,dnh->bsnh", u, p["wv"])[:, 0]
+    i_g, logf = _mlstm_gates(p, u)
+    it, lft = i_g[:, 0], logf[:, 0]
+    C, n, m = state
+    with jax.named_scope("f32c"):
+        m_new = jnp.maximum(lft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(lft + m - m_new)
+        kf, vf, qf = (a.astype(jnp.float32) for a in (k, v, q))
+        C = C * f_s[..., None, None] + i_s[..., None, None] * (
+            kf[..., :, None] * vf[..., None, :])
+        n = n * f_s[..., None] + i_s[..., None] * kf
+        num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                          jnp.exp(-m_new))[..., None]
+        y = (num / den) * p["o_norm"].astype(jnp.float32)[None]
+        if z_gate is not None:
+            y = y * jax.nn.silu(
+                z_gate.astype(jnp.float32)).reshape(B, H, hd)
+        y = y.astype(x.dtype)[:, None]
+    out = jnp.einsum("bsnh,nhd->bsd", y, p["wo"])
+    return out, MLSTMState(C=C, n=n, m=m_new)
+
+
+# ================================================================== sLSTM
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, hd = _slstm_dims(cfg)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # 4 gates (i, f, z, o) input + block-diag recurrent weights
+        "w_x": ParamSpec((d, 4, H, hd), ("embed", None, "qheads", "head_dim"),
+                         "normal", s),
+        "w_r": ParamSpec((4, H, hd, hd), (None, "qheads", "head_dim", None),
+                         "normal", 1.0 / math.sqrt(hd)),
+        "b": ParamSpec((4, H, hd), (None, "qheads", "head_dim"), "zeros"),
+        "wo": ParamSpec((H, hd, d), ("qheads", "head_dim", "embed"), "normal",
+                        1.0 / math.sqrt(d)),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # [B,H,hd]
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    H, hd = _slstm_dims(cfg)
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.zeros((batch, H, hd), jnp.float32))
+
+
+def _slstm_step(p, state: SLSTMState, xg):
+    """xg [B,4,H,hd] pre-activations from the input; recurrence added here.
+    Genuinely f32 (exp-gated scalar memory) — under the f32c contract."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhk,ghkv->bghv", h, p["w_r"].astype(jnp.float32))
+    g = xg.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)[None]
+    i_t, f_t, z_t, o_t = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+    c = f_s * c + i_s * jnp.tanh(z_t)
+    n = f_s * n + i_s
+    h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, h=h, m=m_new), h
+
+
+def slstm_forward(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    H, hd = _slstm_dims(cfg)
+    xg = jnp.einsum("bsd,dghk->bsghk", x, p["w_x"])      # [B,S,4,H,hd]
+
+    def step(st, xgt):
+        return _slstm_step(p, st, xgt)
+
+    st0 = slstm_init_state(cfg, B)
+    with jax.named_scope("f32c"):
+        _, hs = _chunked_time_scan(step, st0,
+                                   xg.transpose(1, 0, 2, 3, 4), S)
+    y = hs.transpose(1, 0, 2, 3).astype(x.dtype)         # [B,S,H,hd]
+    return jnp.einsum("bsnh,nhd->bsd", y, p["wo"])
+
+
+def slstm_decode(p, cfg, x, state: SLSTMState):
+    xg = jnp.einsum("bsd,dghk->bsghk", x, p["w_x"])[:, 0]
+    with jax.named_scope("f32c"):
+        st, h = _slstm_step(p, state, xg)
+    y = h.astype(x.dtype)[:, None]
+    return jnp.einsum("bsnh,nhd->bsd", y, p["wo"]), st

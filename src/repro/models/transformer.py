@@ -1,0 +1,602 @@
+"""Model assembly: every assigned architecture as a scan-of-super-blocks.
+
+An architecture compiles to a *program*:
+
+    program = (group_def, n_groups, remainder_def)
+
+where ``group_def`` is a tuple of block kinds (e.g. gemma3's
+``("attn_local", ..., "attn_global")``; zamba2's five mamba blocks plus the
+*shared* attention block).  The group's parameters are stacked with a
+leading ``n_groups`` dim and the stack is consumed by ``jax.lax.scan`` —
+which is what keeps 61-81-layer configs lowerable/compilable on one CPU
+core and the HLO size independent of depth.  Remainder layers (depth not
+divisible by the pattern) are unrolled with their own params.
+
+Block kinds:
+  attn / attn_local / attn_global / attn_bidir  -> attention + MLP
+  moe                                           -> attention + MoE FFN
+  xattn                                         -> cross-attn + MLP (VLM)
+  dec_attn                                      -> self + cross + MLP (whisper dec)
+  mamba / mlstm / slstm                         -> recurrent blocks (no FFN)
+
+Caches mirror the program structure so decode scans over (params, cache)
+pairs in lockstep.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import ssm
+from repro.models.common import ModelConfig, ParamSpec
+from repro.models.layers import (
+    apply_norm,
+    attention,
+    attention_from_cache,
+    attention_specs,
+    mlp,
+    mlp_specs,
+    norm_spec,
+)
+from repro.models.moe import moe_block, moe_specs
+
+__all__ = [
+    "program_for",
+    "model_specs",
+    "forward",
+    "lm_loss",
+    "cache_specs",
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "num_params",
+    "active_params",
+]
+
+
+# ------------------------------------------------------------------ programs
+
+def program_for(cfg: ModelConfig) -> tuple[tuple[str, ...], int, tuple[str, ...]]:
+    """(group_def, n_groups, remainder_def) for the decoder stack."""
+    L = cfg.n_layers
+    if cfg.family == "moe":
+        return ("moe",), L, ()
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_period
+        grp = ("mamba",) * per + ("shared_attn",)
+        return grp, L // per, ("mamba",) * (L % per)
+    if cfg.family == "ssm":
+        per = cfg.slstm_every
+        grp = ("mlstm",) * (per - 1) + ("slstm",)
+        return grp, L // per, ("mlstm",) * (L % per)
+    if cfg.family == "vlm":
+        per = cfg.cross_attn_period
+        grp = ("attn",) * (per - 1) + ("xattn",)
+        return grp, L // per, ("attn",) * (L % per)
+    if cfg.family == "encdec":
+        return ("dec_attn",), L, ()
+    # dense
+    if cfg.local_global_pattern:
+        per = cfg.local_global_pattern + 1
+        grp = ("attn_local",) * cfg.local_global_pattern + ("attn_global",)
+        return grp, L // per, ("attn_local",) * (L % per)
+    return ("attn",), L, ()
+
+
+def _block_specs(cfg: ModelConfig, kind: str) -> dict:
+    n = lambda: norm_spec(cfg)
+    if kind in ("attn", "attn_local", "attn_global", "attn_bidir", "shared_attn"):
+        return {"ln1": n(), "attn": attention_specs(cfg), "ln2": n(),
+                "mlp": mlp_specs(cfg)}
+    if kind == "moe":
+        return {"ln1": n(), "attn": attention_specs(cfg), "ln2": n(),
+                "moe": moe_specs(cfg)}
+    if kind == "xattn":
+        return {"ln1": n(), "xattn": attention_specs(cfg, cross=True),
+                "gate": ParamSpec((1,), (None,), "zeros"),
+                "ln2": n(), "mlp": mlp_specs(cfg)}
+    if kind == "dec_attn":
+        return {"ln1": n(), "attn": attention_specs(cfg),
+                "ln_x": n(), "xattn": attention_specs(cfg, cross=True),
+                "ln2": n(), "mlp": mlp_specs(cfg)}
+    if kind == "mamba":
+        return {"ln1": n(), "mamba": ssm.mamba2_specs(cfg)}
+    if kind == "mlstm":
+        return {"ln1": n(), "mlstm": ssm.mlstm_specs(cfg)}
+    if kind == "slstm":
+        specs = {"ln1": n(), "slstm": ssm.slstm_specs(cfg)}
+        if cfg.d_ff > 0:
+            specs["ln2"] = n()
+            specs["mlp"] = mlp_specs(cfg)
+        return specs
+    raise ValueError(kind)
+
+
+def _stack(specs: Any, n: int) -> Any:
+    """Prepend a stacked 'layers' dim to every ParamSpec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.logical),
+                            s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _group_specs(cfg: ModelConfig, group_def: tuple[str, ...]) -> dict:
+    out = {}
+    for i, kind in enumerate(group_def):
+        if kind == "shared_attn":
+            continue  # shared params live outside the stack
+        out[f"b{i}_{kind}"] = _block_specs(cfg, kind)
+    return out
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    grp, n_groups, rem = program_for(cfg)
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed"), "normal",
+                           1.0 / math.sqrt(d)),
+        "final_norm": norm_spec(cfg),
+        "blocks": _stack(_group_specs(cfg, grp), n_groups),
+        "tail": {f"t{i}_{k}": _block_specs(cfg, k) for i, k in enumerate(rem)},
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, cfg.vocab_size), ("embed", "vocab"),
+                                     "normal", 1.0 / math.sqrt(d))
+    if "shared_attn" in grp:
+        specs["shared_attn"] = _block_specs(cfg, "attn")
+    if cfg.family == "encdec":
+        specs["encoder"] = {
+            "blocks": _stack(_group_specs(cfg, ("attn_bidir",)),
+                             cfg.n_encoder_layers),
+            "final_norm": norm_spec(cfg),
+        }
+    if cfg.frontend_dim:
+        specs["frontend_proj"] = ParamSpec(
+            (cfg.frontend_dim, d), ("frames", "embed"), "normal",
+            1.0 / math.sqrt(cfg.frontend_dim))
+    return specs
+
+
+# ------------------------------------------------------------------ blocks
+
+def _apply_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+                 memory: Optional[jax.Array], aux: jax.Array,
+                 shared: Optional[dict]) -> tuple[jax.Array, jax.Array]:
+    """One block, full-sequence mode.  memory = encoder/vision stream."""
+    eps, nk = cfg.norm_eps, cfg.norm
+    # Megatron-style sequence parallelism (§Perf lever ``seq_shard_norms``):
+    # the residual stream is sharded over 'model' along seq for the
+    # norm/elementwise segments; GSPMD inserts the all-gather before the
+    # TP matmuls and the reduce-scatter after them (replacing the TP
+    # all-reduce), cutting [B,S,D] elementwise HBM traffic model-axis-fold.
+    if cfg.seq_shard_norms:
+        sp = lambda t: constrain(t, "batch", "seq_sp", "embed")  # noqa: E731
+    else:
+        sp = lambda t: t  # noqa: E731
+    if kind in ("attn", "attn_local", "attn_global", "attn_bidir", "shared_attn"):
+        pp = shared if kind == "shared_attn" else p
+        window = cfg.attn_window if kind == "attn_local" else None
+        causal = kind != "attn_bidir"
+        use_rope = cfg.family != "encdec"
+        x = sp(x)
+        h = apply_norm(pp["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        x = sp(x + attention(pp["attn"], cfg, h, causal=causal, window=window,
+                             use_rope=use_rope))
+        h = apply_norm(pp["ln2"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        x = sp(x + mlp(pp["mlp"], cfg, h))
+        return x, aux
+    if kind == "moe":
+        x = sp(x)
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        x = sp(x + attention(p["attn"], cfg, h, causal=True))
+        h = apply_norm(p["ln2"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        y, lb = moe_block(p["moe"], cfg, h)
+        return sp(x + y), aux + lb
+    if kind == "xattn":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        y = attention(p["xattn"], cfg, h, kv_x=memory, causal=False,
+                      use_rope=False)
+        x = x + jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * y
+        h = apply_norm(p["ln2"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        return x + mlp(p["mlp"], cfg, h), aux
+    if kind == "dec_attn":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        x = x + attention(p["attn"], cfg, h, causal=True, use_rope=False)
+        h = apply_norm(p["ln_x"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        x = x + attention(p["xattn"], cfg, h, kv_x=memory, causal=False,
+                          use_rope=False)
+        h = apply_norm(p["ln2"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        return x + mlp(p["mlp"], cfg, h), aux
+    if kind == "mamba":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        return x + ssm.mamba2_forward(p["mamba"], cfg, h), aux
+    if kind == "mlstm":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        return x + ssm.mlstm_forward(p["mlstm"], cfg, h), aux
+    if kind == "slstm":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        x = x + ssm.slstm_forward(p["slstm"], cfg, h)
+        if cfg.d_ff > 0:
+            h = apply_norm(p["ln2"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+            x = x + mlp(p["mlp"], cfg, h)
+        return x, aux
+    raise ValueError(kind)
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+# ------------------------------------------------------------------ forward
+
+def _positions_embed(cfg: ModelConfig, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jdtype)
+    if cfg.embed_scale != 1.0:
+        x = x * jnp.asarray(cfg.embed_scale, cfg.jdtype)
+    x = constrain(x, "batch", "seq", "embed")
+    return x
+
+
+def _encoder_forward(cfg: ModelConfig, params, frames):
+    """Whisper encoder over stub frame embeddings [B, S_enc, F]."""
+    x = jnp.einsum("bsf,fd->bsd", frames.astype(cfg.jdtype),
+                   params["frontend_proj"])
+    enc = params["encoder"]
+
+    def body(carry, layer_params):
+        x, aux = carry
+        fn = _remat_wrap(
+            cfg, lambda q, lp: _apply_block(cfg, "attn_bidir", lp["b0_attn_bidir"],
+                                            q, None, jnp.float32(0.0), None)[0])
+        return (fn(x, layer_params), aux), None
+
+    (x, _), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), enc["blocks"])
+    return apply_norm(enc["final_norm"], x, cfg.norm_eps, cfg.norm, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits [B,S,V], aux_loss scalar).
+
+    batch: tokens [B,S] (+ frames [B,S_enc,F] for encdec, patches [B,P,F]
+    for vlm).
+    """
+    tokens = batch["tokens"]
+    x = _positions_embed(cfg, params, tokens)
+
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encoder_forward(cfg, params, batch["frames"])
+    elif cfg.family == "vlm":
+        memory = jnp.einsum("bpf,fd->bpd", batch["patches"].astype(cfg.jdtype),
+                            params["frontend_proj"])
+
+    grp, n_groups, rem = program_for(cfg)
+    shared = params.get("shared_attn")
+
+    def group_body(carry, gp):
+        x, aux = carry
+        for i, kind in enumerate(grp):
+            p = None if kind == "shared_attn" else gp[f"b{i}_{kind}"]
+            x, aux = _apply_block(cfg, kind, p, x, memory, aux, shared)
+        return (x, aux), None
+
+    body = _remat_wrap(cfg, lambda c, gp: group_body(c, gp)[0])
+    (x, aux), _ = jax.lax.scan(lambda c, gp: (body(c, gp), None),
+                               (x, jnp.float32(0.0)), params["blocks"])
+
+    for i, kind in enumerate(rem):
+        x, aux = _apply_block(cfg, kind, params["tail"][f"t{i}_{kind}"], x,
+                              memory, aux, shared)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps, cfg.norm, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def lm_loss(params: dict, cfg: ModelConfig, batch: dict,
+            aux_weight: float = 0.01) -> jax.Array:
+    """Next-token cross-entropy (vocab-sharded-safe: no prob materialization)."""
+    logits, aux = forward(params, cfg, batch)
+    targets = batch["tokens"][:, 1:]
+    if cfg.loss_dtype == "compute":
+        # §Perf lever: lse in f32 (stable) but no f32 [B,S,V] logits copy
+        # and a gather instead of the one-hot contraction.
+        logits = logits[:, :-1]
+        with jax.named_scope("f32c"):
+            lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        label_logit = jnp.take_along_axis(
+            logits, targets[..., None], axis=-1)[..., 0].astype(jnp.float32)
+        nll = jnp.mean(lse - label_logit)
+        return nll + aux_weight * aux
+    with jax.named_scope("f32c"):
+        logits = logits.astype(jnp.float32)
+        logits = logits[:, :-1]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(targets, cfg.vocab_size, dtype=jnp.float32)
+        label_logit = jnp.sum(logits * onehot, axis=-1)
+        nll = jnp.mean(lse - label_logit)
+    return nll + aux_weight * aux
+
+
+# ------------------------------------------------------------------- decode
+
+_ATTN_KINDS = ("attn", "attn_local", "attn_global", "shared_attn", "moe",
+               "dec_attn")
+
+
+def _block_cache_specs(cfg: ModelConfig, kind: str, batch: int, s_max: int,
+                       mem_len: int) -> dict:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    kv = lambda: {
+        "k": ParamSpec((batch, s_max, KV, hd),
+                       ("batch", "cache_seq", "kv_heads", "head_dim"), "zeros"),
+        "v": ParamSpec((batch, s_max, KV, hd),
+                       ("batch", "cache_seq", "kv_heads", "head_dim"), "zeros"),
+    }
+    if kind in ("attn", "attn_local", "attn_global", "shared_attn", "moe"):
+        return kv()
+    if kind == "dec_attn":
+        return {**kv()}
+    if kind == "xattn":
+        return {}
+    if kind == "mamba":
+        d_inner, nheads, headdim = ssm._mamba_dims(cfg)
+        return {
+            "h": ParamSpec((batch, nheads, headdim, cfg.ssm_state),
+                           ("batch", "qheads", None, "state"), "zeros"),
+            "conv": ParamSpec((batch, cfg.ssm_conv - 1, d_inner),
+                              ("batch", None, "mlp"), "zeros"),
+        }
+    if kind == "mlstm":
+        H, hdm, _ = ssm._mlstm_dims(cfg)
+        return {
+            "C": ParamSpec((batch, H, hdm, hdm),
+                           ("batch", "qheads", "head_dim", None), "zeros"),
+            "n": ParamSpec((batch, H, hdm), ("batch", "qheads", "head_dim"),
+                           "zeros"),
+            "m": ParamSpec((batch, H), ("batch", "qheads"), "zeros"),
+        }
+    if kind == "slstm":
+        H, hdm = ssm._slstm_dims(cfg)
+        leaf = lambda: ParamSpec((batch, H, hdm),
+                                 ("batch", "qheads", "head_dim"), "zeros")
+        return {"c": leaf(), "n": leaf(), "h": leaf(), "m": leaf()}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int,
+                mem_len: int = 0) -> dict:
+    """Spec tree for the decode cache (float32 recurrent states are declared
+    via their ParamSpec dtype at init/abstract time)."""
+    grp, n_groups, rem = program_for(cfg)
+    specs: dict[str, Any] = {
+        "blocks": _stack(
+            {f"b{i}_{k}": _block_cache_specs(cfg, k, batch, s_max, mem_len)
+             for i, k in enumerate(grp) if k != "shared_attn"}, n_groups),
+        "tail": {f"t{i}_{k}": _block_cache_specs(cfg, k, batch, s_max, mem_len)
+                 for i, k in enumerate(rem)},
+    }
+    if "shared_attn" in grp:
+        specs["shared"] = _stack(
+            {"attn": _block_cache_specs(cfg, "shared_attn", batch, s_max,
+                                        mem_len)}, n_groups)
+    if cfg.family in ("encdec", "vlm"):
+        specs["memory"] = ParamSpec((batch, mem_len, cfg.d_model),
+                                    ("batch", "frames", "embed"), "zeros")
+    return specs
+
+
+_CACHE_F32 = ("h", "C", "n", "m", "c")  # recurrent states kept in f32
+
+
+def _cache_dtype(path_leaf: str, default):
+    return jnp.float32 if path_leaf in _CACHE_F32 else default
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, mem_len: int = 0):
+    specs = cache_specs(cfg, batch, s_max, mem_len)
+
+    def mk(path, s):
+        leaf_name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        return jnp.zeros(s.shape, _cache_dtype(leaf_name, cfg.jdtype))
+
+    return jax.tree_util.tree_map_with_path(
+        mk, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _decode_block(cfg, kind, p, x, cache, pos, memory, shared):
+    eps, nk = cfg.norm_eps, cfg.norm
+    if kind in ("attn", "attn_local", "attn_global", "shared_attn", "moe"):
+        pp = shared if kind == "shared_attn" else p
+        window = cfg.attn_window if kind == "attn_local" else None
+        h = apply_norm(pp["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        use_rope = cfg.family != "encdec"
+        y, k_new, v_new = attention_from_cache(
+            pp["attn"], cfg, h, cache["k"], cache["v"], pos, window=window,
+            use_rope=use_rope)
+        x = x + y
+        h = apply_norm(pp["ln2"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        if kind == "moe":
+            y, _ = moe_block(p["moe"], cfg, h)
+        else:
+            y = mlp(pp["mlp"], cfg, h)
+        return x + y, {"k": k_new, "v": v_new}
+    if kind == "dec_attn":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        y, k_new, v_new = attention_from_cache(
+            p["attn"], cfg, h, cache["k"], cache["v"], pos, use_rope=False)
+        x = x + y
+        h = apply_norm(p["ln_x"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        x = x + attention(p["xattn"], cfg, h, kv_x=memory, causal=False,
+                          use_rope=False)
+        h = apply_norm(p["ln2"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        return x + mlp(p["mlp"], cfg, h), {"k": k_new, "v": v_new}
+    if kind == "xattn":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        y = attention(p["xattn"], cfg, h, kv_x=memory, causal=False,
+                      use_rope=False)
+        x = x + jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * y
+        h = apply_norm(p["ln2"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        return x + mlp(p["mlp"], cfg, h), {}
+    if kind == "mamba":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        st = ssm.MambaState(h=cache["h"], conv=cache["conv"])
+        y, st = ssm.mamba2_decode(p["mamba"], cfg, h, st)
+        return x + y, {"h": st.h, "conv": st.conv}
+    if kind == "mlstm":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        st = ssm.MLSTMState(C=cache["C"], n=cache["n"], m=cache["m"])
+        y, st = ssm.mlstm_decode(p["mlstm"], cfg, h, st)
+        return x + y, {"C": st.C, "n": st.n, "m": st.m}
+    if kind == "slstm":
+        h = apply_norm(p["ln1"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+        st = ssm.SLSTMState(c=cache["c"], n=cache["n"], h=cache["h"],
+                            m=cache["m"])
+        y, st = ssm.slstm_decode(p["slstm"], cfg, h, st)
+        x = x + y
+        if cfg.d_ff > 0:
+            h = apply_norm(p["ln2"], x, eps, nk, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+            x = x + mlp(p["mlp"], cfg, h)
+        return x, {"c": st.c, "n": st.n, "h": st.h, "m": st.m}
+    raise ValueError(kind)
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                token: jax.Array, pos: jax.Array):
+    """One decode step.  token [B,1] int32, pos scalar int32.
+
+    Returns (logits [B,V], new_cache)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.jdtype)
+    if cfg.embed_scale != 1.0:
+        x = x * jnp.asarray(cfg.embed_scale, cfg.jdtype)
+    grp, n_groups, rem = program_for(cfg)
+    shared = params.get("shared_attn")
+    memory = cache.get("memory")
+
+    def group_body(x, gp_and_cache):
+        gp, gc = gp_and_cache
+        new_gc = {}
+        for i, kind in enumerate(grp):
+            if kind == "shared_attn":
+                continue
+            key = f"b{i}_{kind}"
+            x, new_gc[key] = _decode_block(cfg, kind, gp[key], x, gc[key],
+                                           pos, memory, shared)
+        return x, new_gc
+
+    if "shared_attn" in grp:
+        # shared-attn caches are per-group: scan over (params-stack, caches)
+        def body(x, inp):
+            gp, gc, sc = inp
+            new_gc = {}
+            for i, kind in enumerate(grp):
+                if kind == "shared_attn":
+                    x, new_s = _decode_block(cfg, kind, None, x, sc["attn"],
+                                             pos, memory, shared)
+                    continue
+                key = f"b{i}_{kind}"
+                x, new_gc[key] = _decode_block(cfg, kind, gp[key], x, gc[key],
+                                               pos, memory, shared)
+            return x, (new_gc, {"attn": new_s})
+
+        x, (new_blocks, new_shared) = jax.lax.scan(
+            body, x, (params["blocks"], cache["blocks"], cache["shared"]))
+        new_cache = {**cache, "blocks": new_blocks, "shared": new_shared}
+    else:
+        x, new_blocks = jax.lax.scan(group_body, x,
+                                     (params["blocks"], cache["blocks"]))
+        new_cache = {**cache, "blocks": new_blocks}
+
+    new_tail = {}
+    for i, kind in enumerate(rem):
+        key = f"t{i}_{kind}"
+        x, new_tail[key] = _decode_block(cfg, kind, params["tail"][key], x,
+                                         cache["tail"][key], pos, memory,
+                                         shared)
+    new_cache["tail"] = new_tail
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps, cfg.norm, cfg.norm_mult_dtype == "float32",
+                   custom_bwd=bool(cfg.norm_custom_bwd))
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return logits[:, 0], new_cache
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict):
+    """Prefill = full forward returning last-position logits.
+
+    The returned logits feed decode; cache population during prefill is a
+    serving-path optimization (hillclimb candidate) — the dry-run's prefill
+    cell measures the forward cost, which dominates."""
+    logits, _ = forward(params, cfg, batch)
+    return logits[:, -1]
+
+
+# ------------------------------------------------------------------- counts
+
+def num_params(cfg: ModelConfig) -> int:
+    from repro.models.common import spec_tree_num_params
+    return spec_tree_num_params(model_specs(cfg))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """MoE: params touched per token (for MODEL_FLOPS = 6*N_active*D)."""
+    total = num_params(cfg)
+    if cfg.family != "moe":
+        return total
+    grp, n_groups, rem = program_for(cfg)
+    e_params = 0
+    per_expert_per_layer = 0
+    specs = model_specs(cfg)
+    moe = specs["blocks"]["b0_moe"]["moe"]
+    import numpy as np
+    for name in ("wi", "wg", "wo"):
+        if name in moe:
+            # stacked shape = (n_groups, E, ...)
+            e_params += int(np.prod(moe[name].shape))
+            per_expert_per_layer += int(np.prod(moe[name].shape)) // (
+                cfg.n_experts * n_groups)
+    return total - e_params + n_groups * cfg.top_k * per_expert_per_layer

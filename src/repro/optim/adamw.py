@@ -1,0 +1,130 @@
+"""AdamW with dtype-configurable moments and ZeRO-1-style state sharding.
+
+No optax in this environment — this is the framework's own optimizer.
+
+Sharding: optimizer moments mirror the parameter logical axes but are
+resolved with an extra override (``embed -> ("data", "pod")``), which
+shards the dominant dimension of nearly every tensor across the data axes.
+XLA then emits the reduce-scatter (grads -> sharded update) and all-gather
+(updated params -> compute sharding) pairs of a classic ZeRO-1 — we only
+declare storage shardings and let SPMD place the collectives.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import active_ctx
+from repro.models.common import ParamSpec
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_apply", "opt_state_specs",
+           "lr_at_step", "global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"      # bf16 halves optimizer HBM (kimi)
+    zero1: bool = True                 # shard moments over data axes
+
+
+def lr_at_step(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def opt_state_specs(param_specs: Any, cfg: AdamWConfig) -> Any:
+    """ParamSpec tree for (m, v): same shapes/logical axes as params.
+
+    The ZeRO-1 data-axis sharding is applied at resolve time by the launch
+    code (rules override), not here — specs stay logical.
+    """
+    mk = lambda s: ParamSpec(s.shape, s.logical, "zeros")
+    m = jax.tree.map(mk, param_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    v = jax.tree.map(mk, param_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return {"m": m, "v": v, "step": ParamSpec((), (), "zeros")}
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.float32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def adamw_apply(grads: Any, state: dict, params: Any, cfg: AdamWConfig,
+                decay_mask: Optional[Any] = None):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1.0
+    lr = lr_at_step(cfg, step)
+
+    with jax.named_scope("f32c"):
+        gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+
+    bc1 = 1.0 - cfg.b1 ** step
+    bc2 = 1.0 - cfg.b2 ** step
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v, wd):
+        # f32c: the optimizer update is genuinely f32 (master math)
+        with jax.named_scope("f32c"):
+            return _upd_f32(p, g, m, v, wd)
+
+    def _upd_f32(p, g, m, v, wd):
+        gf = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(gf)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (delta + wd * pf)
+        return pf.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    # weight decay skips 1-D params (norm scales, biases) by default
+    if decay_mask is None:
+        decay_mask = jax.tree.map(
+            lambda p: cfg.weight_decay if p.ndim >= 2 else 0.0, params)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_w = jax.tree.leaves(decay_mask)
+    new = [upd(p, g, m, v, w)
+           for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in new])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in new])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,46 @@
+"""Serving steps: prefill and batched one-token decode with KV caches.
+
+``make_serve_step`` returns the function the ``decode_32k`` / ``long_500k``
+dry-run cells lower: one new token against a seq_len-deep cache, greedy or
+temperature sampling on-device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import decode_step, forward
+
+__all__ = ["make_serve_step", "make_prefill_step"]
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """prefill(params, batch) -> last-position logits [B, V]."""
+
+    def prefill_step(params, batch):
+        logits, _ = forward(params, cfg, batch)
+        with jax.named_scope("f32c"):
+            return logits[:, -1].astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
+    """serve_step(params, cache, token, pos, rng) ->
+    (next_token [B,1], logits [B,V], new_cache)."""
+
+    def serve_step(params, cache, token, pos, rng: Optional[jax.Array] = None):
+        logits, new_cache = decode_step(params, cfg, cache, token, pos)
+        with jax.named_scope("f32c"):
+            logits = logits.astype(jnp.float32)
+        if temperature > 0.0 and rng is not None:
+            next_tok = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok[:, None].astype(jnp.int32), logits, new_cache
+
+    return serve_step

@@ -1,0 +1,76 @@
+"""Training step: loss -> grads (with microbatch accumulation) -> AdamW.
+
+``make_train_step`` builds a pure function suitable for ``jax.jit`` with
+explicit in/out shardings (the launcher provides those from the spec
+trees).  Gradient accumulation is a ``lax.scan`` over microbatches —
+required at kimi-k2 scale where the MoE dispatch buffers cap the live
+tokens per device (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import lm_loss
+from repro.optim.adamw import AdamWConfig, adamw_apply, adamw_init
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+TrainState = dict  # {"params": ..., "opt": ..., "step": int32}
+
+
+def init_train_state(params: Any, opt_cfg: AdamWConfig) -> TrainState:
+    return {"params": params, "opt": adamw_init(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        B = x.shape[0]
+        assert B % n == 0, f"batch {B} not divisible by microbatches {n}"
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    accum_dtype: Optional[str] = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    n_mb = max(cfg.microbatches, 1)
+    acc_dt = jnp.dtype(accum_dtype) if accum_dtype else (
+        jnp.bfloat16 if cfg.family == "moe" and cfg.microbatches > 1
+        else jnp.float32)
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    def grads_of(params, batch):
+        if n_mb == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        mb = _split_microbatches(batch, n_mb)
+
+        def body(carry, mbatch):
+            loss_acc, gacc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(acc_dt) / n_mb, gacc, g)
+            return (loss_acc + l / n_mb, gacc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros), mb)
+        return loss, grads
+
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = grads_of(state["params"], batch)
+        new_params, new_opt, om = adamw_apply(
+            grads, state["opt"], state["params"], opt_cfg)
+        metrics = {"loss": loss, **om}
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            metrics,
+        )
+
+    return train_step

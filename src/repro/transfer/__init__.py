@@ -1,0 +1,7 @@
+"""Real asyncio transfer runtime: MDTP client + range-serving HTTP server."""
+
+from .client import MDTPClient, Replica, TransferReport, fetch_blob
+from .server import RangeServer, Throttle
+
+__all__ = ["MDTPClient", "Replica", "TransferReport", "fetch_blob",
+           "RangeServer", "Throttle"]

@@ -1,0 +1,140 @@
+"""Threaded HTTP/1.1 range server (no external deps).
+
+Serves files (or in-memory blobs) with:
+  * ``Range: bytes=a-b`` support (206 Partial Content) — the substrate MDTP
+    requests ride on,
+  * persistent connections (keep-alive) — the paper's one-session-per-server
+    requirement,
+  * optional per-connection bandwidth throttling and response latency, so
+    integration tests can reproduce heterogeneous replicas on localhost.
+
+This is the replica-store stand-in for the data pipeline and the
+checkpoint mirror in tests/examples.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import time
+from dataclasses import dataclass, field
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+__all__ = ["RangeServer", "Throttle"]
+
+
+@dataclass
+class Throttle:
+    bytes_per_s: float = 0.0      # 0 = unthrottled
+    latency_s: float = 0.0        # added before each response
+    chunk: int = 64 * 1024
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server_version = "repro-range/1.0"
+
+    def log_message(self, *a):   # silence
+        pass
+
+    def _blob(self) -> Optional[bytes]:
+        return self.server.blobs.get(self.path)  # type: ignore[attr-defined]
+
+    def do_HEAD(self):
+        blob = self._blob()
+        if blob is None:
+            self.send_error(404)
+            return
+        self.send_response(200)
+        self.send_header("Content-Length", str(len(blob)))
+        self.send_header("Accept-Ranges", "bytes")
+        self.end_headers()
+
+    def do_GET(self):
+        blob = self._blob()
+        if blob is None:
+            self.send_error(404)
+            return
+        throttle: Throttle = self.server.throttle  # type: ignore[attr-defined]
+        if throttle.latency_s > 0:
+            time.sleep(throttle.latency_s)
+        rng = self.headers.get("Range")
+        if rng and rng.startswith("bytes="):
+            try:
+                lo_s, hi_s = rng[len("bytes="):].split("-", 1)
+                lo = int(lo_s)
+                hi = int(hi_s) if hi_s else len(blob) - 1
+            except ValueError:
+                self.send_error(416)
+                return
+            hi = min(hi, len(blob) - 1)
+            if lo > hi:
+                self.send_error(416)
+                return
+            body = blob[lo:hi + 1]
+            self.send_response(206)
+            self.send_header("Content-Range",
+                             f"bytes {lo}-{hi}/{len(blob)}")
+        else:
+            body = blob
+            self.send_response(200)
+        self.send_header("Content-Length", str(len(body)))
+        self.send_header("Accept-Ranges", "bytes")
+        self.end_headers()
+        if throttle.bytes_per_s > 0:
+            sent = 0
+            t0 = time.monotonic()
+            while sent < len(body):
+                piece = body[sent:sent + throttle.chunk]
+                self.wfile.write(piece)
+                sent += len(piece)
+                target = sent / throttle.bytes_per_s
+                sleep = target - (time.monotonic() - t0)
+                if sleep > 0:
+                    time.sleep(sleep)
+        else:
+            self.wfile.write(body)
+
+
+class RangeServer:
+    """In-process replica server.  Register blobs or files by path."""
+
+    def __init__(self, throttle: Optional[Throttle] = None):
+        self._srv = ThreadingHTTPServer(("127.0.0.1", 0), _Handler)
+        self._srv.blobs = {}                      # type: ignore[attr-defined]
+        self._srv.throttle = throttle or Throttle()  # type: ignore[attr-defined]
+        self._thread = threading.Thread(target=self._srv.serve_forever,
+                                        daemon=True)
+
+    @property
+    def port(self) -> int:
+        return self._srv.server_address[1]
+
+    @property
+    def address(self) -> tuple[str, int]:
+        return ("127.0.0.1", self.port)
+
+    def add_blob(self, path: str, data: bytes) -> None:
+        if not path.startswith("/"):
+            path = "/" + path
+        self._srv.blobs[path] = data              # type: ignore[attr-defined]
+
+    def add_file(self, path: str, filename: str) -> None:
+        with open(filename, "rb") as f:
+            self.add_blob(path, f.read())
+
+    def start(self) -> "RangeServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._srv.shutdown()
+        self._srv.server_close()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()

@@ -1,0 +1,177 @@
+"""Unit + property tests for the MDTP bin-packing allocator (paper §IV-B)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.chunking import (
+    MB,
+    ChunkParams,
+    default_chunk_params,
+    fast_server_mask,
+    geometric_mean,
+    next_chunk_size,
+    round_chunk_sizes,
+)
+
+# ---------------------------------------------------------------- unit tests
+
+
+def test_table2_defaults():
+    """Paper Table II: 4/40 MB up to 8 GB, 16/160 MB above."""
+    small = default_chunk_params(1024**3)
+    assert (small.initial_chunk, small.large_chunk) == (4 * MB, 40 * MB)
+    edge = default_chunk_params(8 * 1024**3)
+    assert (edge.initial_chunk, edge.large_chunk) == (4 * MB, 40 * MB)
+    big = default_chunk_params(8 * 1024**3 + 1)
+    assert (big.initial_chunk, big.large_chunk) == (16 * MB, 160 * MB)
+
+
+def test_geometric_mean_matches_numpy():
+    ths = [12.0, 14.0, 15.0, 16.0, 18.0, 70.0]
+    expected = float(np.exp(np.mean(np.log(ths))))
+    assert math.isclose(geometric_mean(ths), expected, rel_tol=1e-12)
+
+
+def test_geometric_mean_ignores_unprobed():
+    assert geometric_mean([0.0, 0.0, 8.0, 2.0]) == pytest.approx(4.0)
+    assert geometric_mean([0.0, 0.0]) == 0.0
+
+
+def test_fast_mask_max_is_always_fast():
+    ths = [1.0, 2.0, 100.0]
+    mask = fast_server_mask(ths)
+    assert mask[2] is True or mask[2] == True  # noqa: E712
+    # all-equal: everyone fast
+    assert all(fast_server_mask([5.0, 5.0, 5.0]))
+
+
+def test_unprobed_server_gets_initial_chunk():
+    p = ChunkParams(initial_chunk=4 * MB, large_chunk=40 * MB)
+    assert next_chunk_size(0, [0.0, 50.0], p, 10**12) == 4 * MB
+
+
+def test_fastest_gets_large_chunk():
+    p = ChunkParams(initial_chunk=4 * MB, large_chunk=40 * MB)
+    assert next_chunk_size(1, [10.0, 50.0], p, 10**12) == 40 * MB
+
+
+def test_proportional_sizing():
+    """C_i = (L / th_max) * th_i  (paper §IV-B equation)."""
+    p = ChunkParams(initial_chunk=4 * MB, large_chunk=40 * MB)
+    ths = [10.0, 25.0, 50.0]
+    assert next_chunk_size(0, ths, p, 10**12) == round(40 * MB * 10 / 50)
+    assert next_chunk_size(1, ths, p, 10**12) == round(40 * MB * 25 / 50)
+    assert next_chunk_size(2, ths, p, 10**12) == 40 * MB
+
+
+def test_min_chunk_floor_and_remaining_clamp():
+    p = ChunkParams(initial_chunk=4 * MB, large_chunk=40 * MB, min_chunk=64 * 1024)
+    # glacial server: proportional size would be ~40 bytes -> floored
+    assert next_chunk_size(0, [1e-6, 50.0], p, 10**12) == 64 * 1024
+    # clamp to remaining
+    assert next_chunk_size(1, [10.0, 50.0], p, 1000) == 1000
+    assert next_chunk_size(1, [10.0, 50.0], p, 0) == 0
+
+
+def test_fast_get_large_mode():
+    """Algorithm 1 pseudocode: every server >= GM gets L."""
+    p = ChunkParams(4 * MB, 40 * MB, mode="fast_get_large")
+    ths = [10.0, 30.0, 50.0]  # GM ~= 24.7
+    assert next_chunk_size(1, ths, p, 10**12) == 40 * MB  # fast but not fastest
+    assert next_chunk_size(0, ths, p, 10**12) == round(40 * MB * 10 / 50)
+
+
+def test_round_chunk_sizes_consistency():
+    p = ChunkParams(4 * MB, 40 * MB)
+    ths = [0.0, 10.0, 50.0]
+    sizes = round_chunk_sizes(ths, p, 10**12)
+    assert sizes == [next_chunk_size(i, ths, p, 10**12) for i in range(3)]
+
+
+def test_invalid_params_rejected():
+    with pytest.raises(ValueError):
+        ChunkParams(initial_chunk=0, large_chunk=1)
+    with pytest.raises(ValueError):
+        ChunkParams(mode="bogus")
+
+
+# ------------------------------------------------------------ property tests
+
+_throughputs = st.lists(
+    st.one_of(st.just(0.0), st.floats(min_value=0.1, max_value=1e9)),
+    min_size=1, max_size=12,
+)
+_params = st.builds(
+    ChunkParams,
+    initial_chunk=st.integers(64 * 1024, 64 * MB),
+    large_chunk=st.integers(64 * 1024, 640 * MB),
+    min_chunk=st.integers(1024, 64 * 1024),
+    mode=st.sampled_from(["proportional", "fast_get_large"]),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(ths=_throughputs, params=_params, remaining=st.integers(0, 2**40))
+def test_size_bounds(ths, params, remaining):
+    """0 <= size <= remaining, and size <= max(L, C, min_chunk)."""
+    for i in range(len(ths)):
+        size = next_chunk_size(i, ths, params, remaining)
+        assert 0 <= size <= remaining
+        assert size <= max(params.large_chunk, params.initial_chunk,
+                           params.min_chunk)
+
+
+@settings(max_examples=200, deadline=None)
+@given(ths=_throughputs, params=_params)
+def test_probed_servers_never_starve(ths, params):
+    """With plenty remaining, every server gets at least min_chunk."""
+    remaining = 2**41
+    for i in range(len(ths)):
+        size = next_chunk_size(i, ths, params, remaining)
+        if ths[i] > 0:
+            assert size >= params.min_chunk
+        else:
+            assert size == min(params.initial_chunk, remaining)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    others=st.lists(st.floats(min_value=0.1, max_value=1e6), min_size=1, max_size=8),
+    lo=st.floats(min_value=0.1, max_value=1e6),
+    hi=st.floats(min_value=0.1, max_value=1e6),
+)
+def test_monotone_in_throughput(others, lo, hi):
+    """A faster observation never yields a smaller next chunk (proportional)."""
+    lo, hi = min(lo, hi), max(lo, hi)
+    p = ChunkParams(4 * MB, 40 * MB)
+    remaining = 2**41
+    s_lo = next_chunk_size(0, [lo] + others, p, remaining)
+    s_hi = next_chunk_size(0, [hi] + others, p, remaining)
+    assert s_hi >= s_lo
+
+
+@settings(max_examples=150, deadline=None)
+@given(ths=st.lists(st.floats(min_value=0.1, max_value=1e6), min_size=2, max_size=8))
+def test_bin_packing_deadline_property(ths):
+    """The paper's core invariant: every proportional chunk finishes within
+    (about) the fastest server's large-chunk time T = L / th_max."""
+    p = ChunkParams(4 * MB, 40 * MB, min_chunk=1)
+    T = p.large_chunk / max(ths)
+    for i, th in enumerate(ths):
+        size = next_chunk_size(i, ths, p, 2**41)
+        # round() adds at most 0.5 bytes -> up to 0.5/th seconds
+        assert size / th <= T + 0.5 / th + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(ths=st.lists(st.floats(min_value=0.01, max_value=1e8), min_size=1, max_size=10))
+def test_gm_between_min_and_max(ths):
+    gm = geometric_mean(ths)
+    assert min(ths) * 0.999 <= gm <= max(ths) * 1.001
+    mask = fast_server_mask(ths)
+    # the max-throughput server is always classified fast
+    assert mask[int(np.argmax(ths))]

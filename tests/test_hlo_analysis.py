@@ -1,0 +1,161 @@
+"""Unit + property tests for the roofline walker (the measurement tool
+every §Roofline/§Perf number flows through)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.launch.hlo_analysis import analyze_hlo, _shape_bytes
+
+
+def _mod(body: str, extra_comps: str = "") -> str:
+    return f"""HloModule m
+
+{extra_comps}
+ENTRY %main (p0: f32[4,4]) -> f32[4,4] {{
+  %p0 = f32[4,4]{{1,0}} parameter(0)
+{body}
+}}
+"""
+
+
+def test_dot_flops_and_bf16_charge():
+    hlo = _mod("""  ROOT %d = f32[128,64]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+""").replace("%p0 = f32[4,4]{1,0} parameter(0)",
+             "%a = f32[128,256]{1,0} parameter(0)\n"
+             "  %b = f32[256,64]{1,0} parameter(1)")
+    c = analyze_hlo(hlo)
+    assert c.flops == 2 * 128 * 64 * 256
+    # dot reads/writes charged at bf16 width (the MXU contract)
+    expect = (128 * 256 + 256 * 64 + 128 * 64) * 2
+    assert c.bytes_accessed == expect
+
+
+def test_while_trip_count_multiplies():
+    extra = """%body (t: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %t = (s32[], f32[64,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%t), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %y = f32[64,64]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %r = (s32[], f32[64,64]{1,0}) tuple(%i2, %y)
+}
+
+%cond (t: (s32[], f32[64,64])) -> pred[] {
+  %t = (s32[], f32[64,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+"""
+    body = """  %zero = s32[] constant(0)
+  %x0 = f32[64,64]{1,0} parameter(1)
+  %init = (s32[], f32[64,64]{1,0}) tuple(%zero, %x0)
+  %w = (s32[], f32[64,64]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[64,64]{1,0} get-tuple-element(%w), index=1
+"""
+    hlo = f"""HloModule m
+
+{extra}
+ENTRY %main (p0: f32[4,4], x0: f32[64,64]) -> f32[64,64] {{
+  %p0 = f32[4,4]{{1,0}} parameter(0)
+{body}}}
+"""
+    c = analyze_hlo(hlo)
+    assert c.flops == 7 * 2 * 64 * 64 * 64  # trip count from %cond constant
+
+
+def test_collective_bytes_and_types():
+    hlo = _mod("""  %ar = f32[4,4]{1,0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+  ROOT %c = f32[4,4]{1,0} copy(%ar)
+""", extra_comps="""%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+""")
+    c = analyze_hlo(hlo)
+    assert c.collective_count == 1
+    assert c.collective_bytes == 4 * 4 * 4  # small f32: kept at f32
+    assert "all-reduce" in c.collectives
+
+
+def test_copy_reducer_allreduce_is_free():
+    """psum_invariant (copy-reducer) moves no new data."""
+    hlo = _mod("""  %ar = f32[4,4]{1,0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%cp
+  ROOT %c = f32[4,4]{1,0} copy(%ar)
+""", extra_comps="""%cp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %k = f32[] copy(%a)
+}
+""")
+    c = analyze_hlo(hlo)
+    assert c.collective_bytes == 0
+    assert c.collective_count == 0
+
+
+def test_large_f32_collective_charged_bf16():
+    n = 2048 * 2048  # > 1M elems triggers the framework dtype invariant
+    hlo = f"""HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {{
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}}
+
+ENTRY %main (p0: f32[2048,2048]) -> f32[2048,2048] {{
+  %p0 = f32[2048,2048]{{1,0}} parameter(0)
+  %ar = f32[2048,2048]{{1,0}} all-reduce(%p0), replica_groups={{{{0,1}}}}, to_apply=%add
+  ROOT %c = f32[2048,2048]{{1,0}} copy(%ar)
+}}
+"""
+    c = analyze_hlo(hlo)
+    assert c.collective_bytes == n * 2  # bf16-normalized
+
+
+def test_f32c_marker_keeps_f32_charge():
+    hlo = _mod("""  %e = f32[4,4]{1,0} exponential(%p0), metadata={op_name="jit(f)/f32c/exp"}
+  ROOT %m = f32[4,4]{1,0} multiply(%e, %e), metadata={op_name="jit(f)/mul"}
+""")
+    c = analyze_hlo(hlo)
+    # exp: read 64B (param, f32 unknown-origin) + write 64B (f32c)
+    # mul: read resolved... exp marked f32c -> full width; mul unmarked
+    # f32 compute -> result half width.
+    exp_bytes = 64 + 64
+    mul_bytes = 64 + 64 + 32  # two reads of marked exp + half-width write
+    assert c.bytes_accessed == exp_bytes + mul_bytes
+
+
+def test_dus_in_place_accounting():
+    hlo = _mod("""  %big = f32[1024,1024]{1,0} parameter(1)
+  %upd = f32[1,1024]{1,0} parameter(2)
+  %i = s32[] constant(3)
+  %z = s32[] constant(0)
+  ROOT %dus = f32[1024,1024]{1,0} dynamic-update-slice(%big, %upd, %i, %z)
+""")
+    c = analyze_hlo(hlo)
+    assert c.bytes_accessed == 2 * 1024 * 4  # 2x the slice, not the buffer
+
+
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(2, 64))
+@settings(max_examples=25, deadline=None)
+def test_dot_flops_formula_property(m, n, k):
+    hlo = f"""HloModule m
+
+ENTRY %main (a: bf16[{m},{k}], b: bf16[{k},{n}]) -> bf16[{m},{n}] {{
+  %a = bf16[{m},{k}]{{1,0}} parameter(0)
+  %b = bf16[{k},{n}]{{1,0}} parameter(1)
+  ROOT %d = bf16[{m},{n}]{{1,0}} dot(%a, %b), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+}}
+"""
+    c = analyze_hlo(hlo)
+    assert c.flops == 2 * m * n * k
+    assert c.bytes_accessed == 2 * (m * k + k * n + m * n)
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8

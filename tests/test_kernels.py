@@ -1,0 +1,146 @@
+"""Pallas kernel validation (interpret mode) vs pure-jnp oracles.
+
+Shape/dtype sweeps per the assignment: every kernel is allclose-checked
+against its ref.py across head dims (incl. kimi's 112 -> lane-padding
+path), GQA ratios, causal/window combinations and dtypes.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attention_ref, flash_attention, rmsnorm, rmsnorm_ref
+
+
+def _qkv(key, B, Sq, Sk, H, KV, hd, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, Sq, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (B, Sk, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (B, Sk, KV, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("hd", [64, 112, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_causal_head_dims(hd, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 256, 256, 4, 2, hd, dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("G", [1, 2, 8])
+def test_flash_gqa_ratios(G):
+    H = 8
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 128, 128, H, H // G, 64,
+                   jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 128, 511])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 512, 512, 4, 1, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_non_causal():
+    """Bidirectional (whisper-encoder style)."""
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, 128, 256, 4, 4, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_ragged_seq_padding():
+    """Sq=Sk=200 pads to 256-blocks; padded keys must not leak."""
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 200, 200, 2, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, blk_q=128, blk_k=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("blk", [(64, 64), (128, 256), (256, 128)])
+def test_flash_block_shape_sweep(blk):
+    bq, bk = blk
+    q, k, v = _qkv(jax.random.PRNGKey(5), 1, 512, 512, 2, 1, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, blk_q=bq, blk_k=bk,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_custom_scale():
+    """gemma3-style attn scale override."""
+    q, k, v = _qkv(jax.random.PRNGKey(6), 1, 128, 128, 4, 1, 128, jnp.float32)
+    scale = 1.0 / math.sqrt(256.0)
+    out = flash_attention(q, k, v, causal=True, scale=scale, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, scale=scale)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_matches_model_attention():
+    """The kernel agrees with the production XLA attention layer."""
+    from repro.configs import reduced_config
+    from repro.models.layers import attention
+    from repro.models.common import init_params
+    from repro.models.transformer import model_specs
+
+    cfg = reduced_config("qwen3-1.7b").replace(qk_norm=False)
+    specs = model_specs(cfg)["blocks"]["b0_attn"]["attn"]
+    p = init_params(jax.random.PRNGKey(0), specs, jnp.float32)
+    p = jax.tree.map(lambda a: a[0], p)  # unstack layer dim
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+
+    xla_out = attention(p, cfg, x, causal=True)
+
+    # reproduce q/k/v exactly, then kernel-attend
+    import jax.numpy as jnp2
+    q = jnp2.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp2.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp2.einsum("bsd,dnh->bsnh", x, p["wv"])
+    from repro.models.layers import rope_sin_cos, apply_rope
+    pos = jnp2.arange(64, dtype=jnp2.int32)
+    sin, cos = rope_sin_cos(pos, cfg.hd, cfg.rope_theta)
+    q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+    o = flash_attention(q, k, v, causal=True, interpret=True)
+    kern_out = jnp2.einsum("bsnh,nhd->bsd", o, p["wo"])
+    np.testing.assert_allclose(np.asarray(kern_out), np.asarray(xla_out),
+                               atol=5e-4, rtol=5e-4)
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+@pytest.mark.parametrize("shape", [(64, 256), (3, 7, 512), (1000, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_shapes(shape, dtype):
+    kx, ks = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, shape, jnp.float32).astype(dtype)
+    scale = jax.random.normal(ks, shape[-1:], jnp.float32) * 0.1 + 1.0
+    out = rmsnorm(x, scale, interpret=True)
+    ref = rmsnorm_ref(x.reshape(-1, shape[-1]), scale).reshape(shape)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_rmsnorm_fused_residual():
+    kx, kr = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (128, 256))
+    r = jax.random.normal(kr, (128, 256))
+    scale = jnp.ones((256,))
+    out = rmsnorm(x, scale, residual=r, interpret=True)
+    ref = rmsnorm_ref(x, scale, residual=r)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)

@@ -1,0 +1,142 @@
+"""Hypothesis property tests over the whole transfer system's invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Aria2Policy,
+    BitTorrentPolicy,
+    ChunkParams,
+    MDTPPolicy,
+    StaticChunkingPolicy,
+    simulate,
+)
+from repro.core.simulator import ServerSpec
+
+MB = 1024 * 1024
+
+_server_sets = st.lists(
+    st.tuples(
+        st.floats(min_value=0.5, max_value=200.0),   # MiB/s
+        st.floats(min_value=0.0, max_value=0.2),     # rtt
+    ),
+    min_size=1,
+    max_size=8,
+)
+_policies = st.sampled_from(["mdtp", "mdtp_fgl", "static", "aria2", "bt"])
+
+
+def _policy(name):
+    return {
+        "mdtp": lambda: MDTPPolicy(),
+        "mdtp_fgl": lambda: MDTPPolicy(
+            params=ChunkParams(2 * MB, 20 * MB, mode="fast_get_large")
+        ),
+        "static": lambda: StaticChunkingPolicy(),
+        "aria2": lambda: Aria2Policy(),
+        "bt": lambda: BitTorrentPolicy(),
+    }[name]()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    servers=_server_sets,
+    size_mb=st.integers(min_value=1, max_value=512),
+    policy=_policies,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_transfer_invariants(servers, size_mb, policy, seed):
+    """For ANY servers/size/policy/seed:
+    1. the transfer completes,
+    2. delivered ranges exactly tile [0, size) (each byte exactly once),
+    3. completion time respects the aggregate-capacity lower bound,
+    4. per-server bytes are non-negative and sum to the file size."""
+    specs = [
+        ServerSpec(name=f"s{i}", bandwidth=bw * MB, rtt=rtt)
+        for i, (bw, rtt) in enumerate(servers)
+    ]
+    size = size_mb * MB
+    r = simulate(_policy(policy), specs, size, seed=seed)
+    r.check_integrity()
+    assert sum(r.bytes_per_server) == size
+    agg = sum(s.bandwidth for s in specs)
+    assert r.total_time >= size / agg * 0.999
+    assert all(b >= 0 for b in r.bytes_per_server)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    servers=_server_sets,
+    size_mb=st.integers(min_value=8, max_value=256),
+    fail_t=st.floats(min_value=0.1, max_value=5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_failure_reallocation_invariant(servers, size_mb, fail_t, seed):
+    """Kill one replica mid-transfer: MDTP must still deliver every byte
+    exactly once via reallocation (framework checkpoint-restore relies on
+    this)."""
+    specs = [
+        ServerSpec(name=f"s{i}", bandwidth=bw * MB, rtt=rtt)
+        for i, (bw, rtt) in enumerate(servers)
+    ]
+    # survivor guaranteed:
+    specs.append(ServerSpec(name="survivor", bandwidth=20 * MB, rtt=0.01))
+    specs[0] = ServerSpec(
+        name="victim", bandwidth=specs[0].bandwidth, rtt=specs[0].rtt,
+        fail_at=fail_t,
+    )
+    size = size_mb * MB
+    r = simulate(MDTPPolicy(), specs, size, seed=seed)
+    r.check_integrity()
+    assert sum(r.bytes_per_server) == size
+    late = [c for c in r.chunks if c.server == 0 and c.t_request > fail_t]
+    assert late == []
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ths=st.lists(
+        st.one_of(st.just(0.0), st.floats(min_value=0.01, max_value=1e7)),
+        min_size=1, max_size=10,
+    ),
+    remaining=st.integers(0, 2**40),
+)
+def test_jax_allocator_matches_python(ths, remaining):
+    """jax_alloc.chunk_sizes must mirror chunking.round_chunk_sizes to
+    float32 precision (<= 64 bytes at 160 MB chunk scale)."""
+    jnp_mod = pytest.importorskip("jax.numpy")
+    from repro.core.chunking import round_chunk_sizes
+    from repro.core.jax_alloc import chunk_sizes
+
+    params = ChunkParams(4 * MB, 40 * MB)
+    py = np.array(round_chunk_sizes(ths, params, remaining), dtype=np.float64)
+    jx = np.array(chunk_sizes(jnp_mod.asarray(ths, jnp_mod.float32),
+                              float(remaining), params))
+    # float32 ulp at 2**40 is 2**17; tolerance covers the remaining-clamp case
+    tol = np.maximum(64.0, np.abs(py) * 2e-7)
+    np.testing.assert_allclose(jx, py, atol=float(tol.max()))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rates=st.lists(st.floats(min_value=2.0, max_value=100.0), min_size=2, max_size=6),
+    size_mb=st.integers(min_value=32, max_value=512),
+)
+def test_jax_sim_matches_python_sim(rates, size_mb):
+    """The on-device simulator and the Python simulator agree (no jitter)."""
+    from repro.core.jax_sim import simulate_transfer
+
+    rtt = 0.02
+    size = size_mb * MB
+    params = ChunkParams(2 * MB, 20 * MB)
+    specs = [ServerSpec(name=f"s{i}", bandwidth=r * MB, rtt=rtt, jitter=0.0)
+             for i, r in enumerate(rates)]
+    py = simulate(MDTPPolicy(params=params), specs, size, seed=0)
+    jx = simulate_transfer([r * MB for r in rates], rtt, size, params)
+    assert float(jx.total_time) == pytest.approx(py.total_time, rel=0.02)
+    np.testing.assert_allclose(
+        np.array(jx.bytes_per_server), np.array(py.bytes_per_server),
+        rtol=0.05, atol=2 * params.large_chunk,
+    )

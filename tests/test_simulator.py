@@ -1,0 +1,205 @@
+"""Discrete-event simulator + policy behavior tests (paper §VI/§VII)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aria2Policy,
+    BitTorrentPolicy,
+    MDTPPolicy,
+    StaticChunkingPolicy,
+    simulate,
+)
+from repro.core.simulator import ServerSpec
+from repro.core.scenarios import (
+    GB,
+    MBPS,
+    bittorrent_seeders,
+    paper_balanced,
+    paper_baseline,
+    with_added_latency,
+    with_throttled_fastest,
+)
+
+MB = 1024 * 1024
+SMALL = 256 * MB  # keep tests fast
+
+
+def _mk(rates, **kw):
+    return [
+        ServerSpec(name=f"s{i}", bandwidth=r * MBPS, rtt=kw.pop("rtt", 0.02), **kw)
+        for i, r in enumerate(rates)
+    ]
+
+
+@pytest.mark.parametrize(
+    "policy_cls", [MDTPPolicy, StaticChunkingPolicy, Aria2Policy, BitTorrentPolicy]
+)
+def test_integrity_every_byte_once(policy_cls):
+    r = simulate(policy_cls(), _mk([5, 10, 20, 40]), SMALL, seed=7)
+    r.check_integrity()
+    assert sum(r.bytes_per_server) == SMALL
+
+
+def test_deterministic_given_seed():
+    a = simulate(MDTPPolicy(), paper_baseline(), SMALL, seed=3)
+    b = simulate(MDTPPolicy(), paper_baseline(), SMALL, seed=3)
+    assert a.total_time == b.total_time
+    assert a.bytes_per_server == b.bytes_per_server
+
+
+def test_cannot_beat_aggregate_capacity():
+    servers = _mk([10, 20, 30])
+    r = simulate(MDTPPolicy(), servers, SMALL, seed=0)
+    lower_bound = SMALL / sum(s.bandwidth for s in servers)
+    assert r.total_time >= lower_bound * 0.999
+
+
+def test_single_server_degenerates_to_sequential():
+    """One replica: time ~= size/bw + per-chunk RTTs (queuing Model B)."""
+    servers = _mk([10], rtt=0.0)
+    r = simulate(MDTPPolicy(), servers, SMALL, seed=0)
+    assert r.total_time == pytest.approx(SMALL / (10 * MBPS), rel=1e-6)
+
+
+def test_piecewise_bandwidth_profile():
+    """A throttle mid-transfer must slow the finish in a predictable way."""
+    # 10 MiB/s for 5 s, then 5 MiB/s. 100 MiB transfer, rtt=0.
+    spec = ServerSpec(name="s", bandwidth=10 * MBPS, rtt=0.0,
+                      profile=((5.0, 5 * MBPS),))
+    r = simulate(StaticChunkingPolicy(chunk_size=100 * MB), [spec], 100 * MB)
+    # 50 MiB in first 5 s, remaining 50 MiB at 5 MiB/s = 10 s -> 15 s total
+    assert r.total_time == pytest.approx(15.0, rel=1e-6)
+
+
+def test_server_failure_is_tolerated_and_bytes_conserved():
+    servers = [
+        ServerSpec(name="dies", bandwidth=30 * MBPS, rtt=0.01, fail_at=2.0),
+        ServerSpec(name="ok1", bandwidth=10 * MBPS, rtt=0.01),
+        ServerSpec(name="ok2", bandwidth=10 * MBPS, rtt=0.01),
+    ]
+    r = simulate(MDTPPolicy(), servers, SMALL, seed=1)
+    r.check_integrity()
+    assert sum(r.bytes_per_server) == SMALL
+    # the dead server delivered only what it could before t=2
+    assert r.bytes_per_server[0] <= 30 * MBPS * 2.0
+    # and was marked dead: no request *started* after the failure
+    late = [c for c in r.chunks if c.server == 0 and c.t_request > 2.0]
+    assert late == []
+
+
+def test_all_servers_fail_raises():
+    servers = [ServerSpec(name="a", bandwidth=10 * MBPS, fail_at=1.0)]
+    with pytest.raises(RuntimeError):
+        simulate(MDTPPolicy(), servers, SMALL, seed=0)
+
+
+def test_mdtp_retry_after_recovers_capacity():
+    """With retry enabled, a transiently-down server rejoins the pool."""
+    servers = [
+        ServerSpec(name="flappy", bandwidth=40 * MBPS, rtt=0.01,
+                   avail_up=2.0, avail_down=1.0),
+        ServerSpec(name="steady", bandwidth=10 * MBPS, rtt=0.01),
+    ]
+    for seed in range(20):
+        no_retry = simulate(MDTPPolicy(), servers, SMALL, seed=seed)
+        if not any(c.truncated for c in no_retry.chunks):
+            continue  # flappy never flapped on this seed; try another
+        retry = simulate(MDTPPolicy(retry_after=0.5), servers, SMALL, seed=seed)
+        retry.check_integrity()
+        # rejoining the fast flappy server must help
+        assert retry.total_time < no_retry.total_time
+        assert retry.bytes_per_server[0] > no_retry.bytes_per_server[0]
+        return
+    pytest.fail("no seed produced a mid-transfer flap; recalibrate test")
+
+
+def test_mdtp_completion_spread_beats_static_small_chunks():
+    """Bin-packing goal: all replicas finish ~together (paper §IV-B)."""
+    servers = _mk([5, 10, 20, 60])
+    mdtp = simulate(MDTPPolicy(), servers, SMALL, seed=2)
+    static = simulate(StaticChunkingPolicy(chunk_size=16 * MB), servers, SMALL, seed=2)
+    assert mdtp.completion_spread() <= static.completion_spread() + 1e-9
+
+
+def test_mdtp_load_proportional_to_capacity():
+    servers = _mk([10, 20, 40])
+    r = simulate(MDTPPolicy(), servers, 2 * SMALL, seed=0)
+    shares = np.array(r.bytes_per_server) / (2 * SMALL)
+    expect = np.array([10, 20, 40]) / 70
+    np.testing.assert_allclose(shares, expect, atol=0.05)
+
+
+def test_mdtp_equal_request_counts_balanced_servers():
+    """Paper Fig. 5c: near-equal replicas -> equal request counts."""
+    r = simulate(MDTPPolicy(), paper_balanced(jitter=0.0), 8 * GB, seed=0)
+    counts = r.requests_per_server
+    assert max(counts) - min(counts) <= 2
+
+
+def test_aria2_uses_5_of_6_replicas():
+    """Paper Fig. 5a: Aria2 at 83% utilization, slowest parked."""
+    r = simulate(Aria2Policy(), paper_baseline(jitter=0.0), 4 * GB, seed=0)
+    assert r.utilization(min_frac=0.01) == pytest.approx(5 / 6)
+    slowest = int(np.argmin([s.bandwidth for s in paper_baseline()]))
+    assert r.bytes_per_server[slowest] < 0.01 * 4 * GB
+
+
+def test_aria2_overloads_fastest(rng_seed=0):
+    """Paper Fig. 5b: most packets go to the fastest replica."""
+    r = simulate(Aria2Policy(), paper_baseline(jitter=0.0), 4 * GB, seed=rng_seed)
+    fastest = int(np.argmax([s.bandwidth for s in paper_baseline()]))
+    assert int(np.argmax(r.packets_per_server)) == fastest
+
+
+def test_mdtp_beats_aria2_paper_band():
+    """Paper §VII-B: 10-22% improvement over Aria2 across file sizes."""
+    servers = paper_baseline()
+    for size in (1 * GB, 4 * GB):
+        t_mdtp = simulate(MDTPPolicy(), servers, size, seed=11).total_time
+        t_aria = simulate(Aria2Policy(), servers, size, seed=11).total_time
+        gain = (t_aria - t_mdtp) / t_aria
+        assert 0.05 <= gain <= 0.30, f"{size}: gain {gain:.2%} out of band"
+
+
+def test_bittorrent_slower_and_noisier():
+    """Paper Fig. 2a: BT ~2x slower with far higher variance.
+
+    The gap comes from seeder-availability gaps, which need transfers long
+    enough for flaps to accumulate (the paper's clearest gap is at 32/64 GB;
+    4 GB keeps the test fast while well past the flap timescale)."""
+    times_bt, times_mdtp = [], []
+    for seed in range(4):
+        times_bt.append(
+            simulate(BitTorrentPolicy(), bittorrent_seeders(), 4 * GB,
+                     seed=seed).total_time
+        )
+        times_mdtp.append(
+            simulate(MDTPPolicy(), paper_baseline(), 4 * GB, seed=seed).total_time
+        )
+    assert np.mean(times_bt) > 1.5 * np.mean(times_mdtp)
+    assert np.std(times_bt) > 3 * np.std(times_mdtp)
+
+
+def test_added_latency_hurts_mdtp_least():
+    """Paper Fig. 3: MDTP adapts to +0.5 s latency on the fastest server."""
+    base, lat = paper_baseline(jitter=0.0), with_added_latency(paper_baseline(jitter=0.0))
+    deltas = {}
+    for cls in (MDTPPolicy, Aria2Policy):
+        t0 = simulate(cls(), base, 4 * GB, seed=0).total_time
+        t1 = simulate(cls(), lat, 4 * GB, seed=0).total_time
+        deltas[cls().name] = t1 - t0
+    assert deltas["mdtp"] < deltas["aria2"]
+
+
+def test_throttle_hurts_mdtp_least():
+    """Paper Fig. 4: throttling the fastest replica to 500 Mbps."""
+    base = paper_baseline(jitter=0.0)
+    thr = with_throttled_fastest(base)
+    d = {}
+    for cls in (MDTPPolicy, Aria2Policy):
+        t0 = simulate(cls(), base, 4 * GB, seed=0).total_time
+        t1 = simulate(cls(), thr, 4 * GB, seed=0).total_time
+        d[cls().name] = t1 - t0
+    assert d["mdtp"] > 0  # throttle must bite
+    assert d["mdtp"] <= d["aria2"] + 1e-6

@@ -1,0 +1,114 @@
+"""Integration tests: real asyncio MDTP client over localhost HTTP mirrors."""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.chunking import ChunkParams
+from repro.transfer import MDTPClient, RangeServer, Replica, Throttle, fetch_blob
+
+MB = 1024 * 1024
+
+
+def _mirrors(blob, throttles):
+    servers = []
+    for th in throttles:
+        s = RangeServer(throttle=th).start()
+        s.add_blob("/data", blob)
+        servers.append(s)
+    return servers
+
+
+@pytest.fixture
+def blob():
+    rng = np.random.default_rng(0)
+    return rng.integers(0, 256, size=8 * MB, dtype=np.uint8).tobytes()
+
+
+def test_roundtrip_integrity(blob):
+    servers = _mirrors(blob, [Throttle(bytes_per_s=30 * MB),
+                              Throttle(bytes_per_s=60 * MB),
+                              Throttle(bytes_per_s=120 * MB)])
+    try:
+        replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
+        params = ChunkParams(initial_chunk=256 * 1024, large_chunk=MB)
+        data, report = fetch_blob(replicas, len(blob), params=params)
+        assert hashlib.sha256(data).hexdigest() == hashlib.sha256(blob).hexdigest()
+        # every mirror contributed, and the 4x-faster mirror beat the
+        # slowest.  (Strict ordering of the top two is NOT asserted: on a
+        # loaded single-core CI box the wall-clock throughput estimates of
+        # the 60 vs 120 MB/s mirrors can transiently invert — the
+        # steady-state proportionality claim is covered deterministically
+        # by the simulator tests.)
+        contributions = [report.bytes_per_replica[r.name] for r in replicas]
+        assert all(c > 0 for c in contributions)
+        assert contributions[2] > contributions[0]
+        assert report.failed_replicas == []
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def test_adaptive_chunks_scale_with_throughput(blob):
+    """Slow mirror must get smaller requests, not fewer-by-starvation —
+    the paper's load-proportionality claim on the real runtime."""
+    servers = _mirrors(blob, [Throttle(bytes_per_s=15 * MB),
+                              Throttle(bytes_per_s=120 * MB)])
+    try:
+        replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
+        params = ChunkParams(initial_chunk=128 * 1024, large_chunk=MB)
+        data, report = fetch_blob(replicas, len(blob), params=params)
+        assert bytes(data) == blob
+        slow, fast = (report.bytes_per_replica[r.name] for r in replicas)
+        assert fast > 2 * slow
+        # request counts stay comparable (sizes adapt instead) — Fig. 5c
+        rs, rf = (report.requests_per_replica[r.name] for r in replicas)
+        assert rs >= max(1, rf // 4)
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def test_mirror_death_mid_transfer(blob):
+    """Kill a mirror while it still owes bytes: the range pool reassigns its
+    outstanding range and the transfer completes exactly."""
+    victim = RangeServer(throttle=Throttle(bytes_per_s=4 * MB)).start()
+    victim.add_blob("/data", blob)
+    healthy = RangeServer(throttle=Throttle(bytes_per_s=60 * MB)).start()
+    healthy.add_blob("/data", blob)
+    try:
+        replicas = [Replica("127.0.0.1", victim.port, "/data"),
+                    Replica("127.0.0.1", healthy.port, "/data")]
+        import threading
+        killer = threading.Timer(0.15, victim.stop)
+        killer.start()
+        params = ChunkParams(initial_chunk=256 * 1024, large_chunk=MB)
+        data, report = fetch_blob(replicas, len(blob), params=params,
+                                  max_failures=2)
+        assert bytes(data) == blob
+    finally:
+        healthy.stop()
+        try:
+            victim.stop()
+        except Exception:
+            pass
+
+
+def test_all_mirrors_dead_raises(blob):
+    s = RangeServer().start()
+    s.add_blob("/data", blob[:MB])
+    port = s.port
+    s.stop()
+    with pytest.raises((IOError, OSError)):
+        fetch_blob([Replica("127.0.0.1", port, "/data")], MB)
+
+
+def test_blob_size_head(blob):
+    s = RangeServer().start()
+    s.add_blob("/data", blob)
+    try:
+        data, _ = fetch_blob([Replica("127.0.0.1", s.port, "/data")])
+        assert bytes(data) == blob
+    finally:
+        s.stop()
