@@ -1,0 +1,211 @@
+"""Autotuner fusion benchmark: one compiled sweep vs the per-point loop.
+
+Measures the tentpole claim of the traced-chunk-params refactor: the whole
+(C, L) × Monte-Carlo-seed grid evaluates in ONE jit-compiled device call
+(`repro.core.autotune._fused_sweep`), where the old implementation paid a
+fresh ``jax.jit`` trace per grid point because ``ChunkParams`` was a static
+argument.  The per-point baseline below reproduces that old cost model
+exactly — chunk sizes as static jit args, one compile per distinct (C, L).
+
+Also micro-benchmarks the Python discrete-event simulator's optimized
+inner loops (bisect profile/downtime lookup, heap-based reclaim pool)
+against naive reference implementations kept inline here.
+
+Rows: ``name,us_per_call,derived[,extra...]`` like every other section.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import heapq
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit  # noqa: F401  (also wires sys.path to src/)
+
+from repro.core.autotune import (
+    _fused_sweep, autotune_chunk_params, autotune_batch, default_grid)
+from repro.core.jax_alloc import ChunkArrays
+from repro.core.jax_sim import SimConfig, simulate_core
+from repro.core.scenarios import GB, paper_baseline
+from repro.core.simulator import ServerSpec, TransferState, simulate
+from repro.core.mdtp import MDTPPolicy
+
+MB = 1024 * 1024
+
+
+# --------------------------------------------------------------------------
+# Section 1: fused sweep vs per-point static-params loop
+# --------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "l", "m", "mode", "config"))
+def _per_point_static(bw, rtt, throttle_t, throttle_bw, seeds, file_size,
+                      *, c, l, m, mode, config):
+    """The OLD cost model: chunk geometry baked into the jaxpr, so every
+    distinct (C, L) is its own trace + compile (seeds still vmapped)."""
+    chunk = ChunkArrays(jnp.float32(c), jnp.float32(l), jnp.float32(m))
+
+    def one(seed):
+        return simulate_core(bw, rtt, throttle_t, throttle_bw, seed, chunk,
+                             file_size, mode=mode, config=config).total_time
+
+    return jax.vmap(one)(seeds)
+
+
+def tuner_sweep(n_seeds: int = 8, file_gb: int = 2, n_scenarios: int = 32,
+                scenario_seeds: int = 2) -> None:
+    servers = paper_baseline()
+    bw = jnp.asarray([s.bandwidth for s in servers], jnp.float32)
+    n = bw.shape[0]
+    rtt = jnp.full((n,), 0.03, jnp.float32)
+    throttle_t = jnp.full((n,), jnp.inf, jnp.float32)
+    throttle_bw = bw
+    grid = default_grid()
+    cfg = SimConfig(jitter=0.1)
+    seeds = jnp.arange(n_seeds)
+    file_size = jnp.float32(file_gb * GB)
+
+    # -- baseline: per-point compile (fresh cache, like the old tuner) ----
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    base_times = []
+    for c, l in grid:
+        ts = _per_point_static(
+            bw, rtt, throttle_t, throttle_bw, seeds, file_size,
+            c=c, l=l, m=64 * 1024, mode="proportional", config=cfg)
+        base_times.append(float(jnp.mean(ts)))
+    t_base = time.perf_counter() - t0
+    emit(f"autotune/per_point/{file_gb}GB", t_base * 1e6 / len(grid),
+         f"{t_base:.3f}", f"grid={len(grid)}", f"n_seeds={n_seeds}")
+
+    # -- fused: one compile for the whole lattice -------------------------
+    jax.clear_caches()
+    grid_c = jnp.asarray([c for c, _ in grid], jnp.float32)
+    grid_l = jnp.asarray([l for _, l in grid], jnp.float32)
+    grid_m = jnp.full((len(grid),), 64 * 1024, jnp.float32)
+    t0 = time.perf_counter()
+    fused = _fused_sweep(bw, rtt, throttle_t, throttle_bw, file_size,
+                         grid_c, grid_l, grid_m, seeds,
+                         mode="proportional", config=cfg)
+    fused.block_until_ready()
+    t_fused_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fused = _fused_sweep(bw, rtt, throttle_t, throttle_bw, file_size,
+                         grid_c, grid_l, grid_m, seeds,
+                         mode="proportional", config=cfg)
+    fused.block_until_ready()
+    t_fused_warm = time.perf_counter() - t0
+
+    emit(f"autotune/fused_cold/{file_gb}GB", t_fused_cold * 1e6 / len(grid),
+         f"{t_fused_cold:.3f}", f"speedup={t_base / t_fused_cold:.1f}x")
+    emit(f"autotune/fused_warm/{file_gb}GB", t_fused_warm * 1e6 / len(grid),
+         f"{t_fused_warm:.3f}", f"speedup={t_base / t_fused_warm:.1f}x")
+
+    fused_mean = np.asarray(jnp.mean(fused, axis=1))
+    agree = int(np.argmin(fused_mean)) == int(np.argmin(base_times))
+    emit(f"autotune/argmin_agree/{file_gb}GB", 0.0, agree)
+
+    # -- end-to-end public API + scenario batch ---------------------------
+    t0 = time.perf_counter()
+    res = autotune_chunk_params([float(b) for b in bw], 0.03, file_gb * GB,
+                                jitter=0.1, n_seeds=n_seeds)
+    t_api = time.perf_counter() - t0
+    emit(f"autotune/api/{file_gb}GB", t_api * 1e6, f"{res.predicted_time:.2f}",
+         f"C={res.params.initial_chunk // MB}MB",
+         f"L={res.params.large_chunk // MB}MB")
+
+    rng = np.random.default_rng(0)
+    scen = rng.uniform(5, 100, size=(n_scenarios, n)) * MB
+    t0 = time.perf_counter()
+    batch = autotune_batch(scen, 0.03, file_gb * GB,
+                           n_seeds=scenario_seeds, jitter=0.1)
+    t_batch = time.perf_counter() - t0
+    cells = scen.shape[0] * len(grid) * scenario_seeds
+    emit(f"autotune/batch{n_scenarios}", t_batch * 1e6 / cells,
+         f"{t_batch:.3f}", f"cells={cells}",
+         f"distinct_winners={len({r.params.as_triple() for r in batch})}")
+
+
+# --------------------------------------------------------------------------
+# Section 2: Python simulator inner-loop micro-benchmarks
+# --------------------------------------------------------------------------
+
+class _NaivePool:
+    """The pre-optimization reclaim pool: list.pop(0) + full re-sort."""
+
+    def __init__(self):
+        self._pool = []
+
+    def reclaim(self, start, length):
+        self._pool.append((start, length))
+        self._pool.sort()
+
+    def allocate(self, nbytes):
+        if self._pool:
+            start, length = self._pool[0]
+            take = min(length, nbytes)
+            if take == length:
+                self._pool.pop(0)
+            else:
+                self._pool[0] = (start + take, length - take)
+            return start, take
+        return 0, 0
+
+
+def _pool_workload(pool_reclaim, pool_allocate, n_ops: int) -> float:
+    rng = np.random.default_rng(0)
+    starts = rng.integers(0, 1 << 40, size=n_ops)
+    t0 = time.perf_counter()
+    for i in range(n_ops):
+        pool_reclaim(int(starts[i]), 1 << 20)
+        if i % 2:
+            pool_allocate(1 << 19)
+    return time.perf_counter() - t0
+
+
+def pysim_micro(n_ops: int = 20_000) -> None:
+    # reclaim-pool: heap vs naive sorted list
+    naive = _NaivePool()
+    t_naive = _pool_workload(naive.reclaim, naive.allocate, n_ops)
+    state = TransferState(file_size=1 << 50, n_servers=1)
+    t_heap = _pool_workload(state.reclaim, state.allocate, n_ops)
+    emit("pysim/pool_naive", t_naive * 1e6 / n_ops, f"{t_naive:.3f}")
+    emit("pysim/pool_heap", t_heap * 1e6 / n_ops, f"{t_heap:.3f}",
+         f"speedup={t_naive / max(t_heap, 1e-9):.1f}x")
+
+    # profile/downtime lookup: a many-breakpoint throttled+flapping server
+    profile = tuple((float(t), (50 + (t % 7) * 10) * MB)
+                    for t in range(1, 200))
+    spec = ServerSpec(name="s0", bandwidth=100 * MB, rtt=0.005,
+                      profile=profile, avail_up=30.0, avail_down=0.2)
+    peers = [ServerSpec(name=f"p{i}", bandwidth=40 * MB, rtt=0.005)
+             for i in range(3)]
+    t0 = time.perf_counter()
+    res = simulate(MDTPPolicy(), [spec] + peers, 4 * GB, seed=0)
+    t_sim = time.perf_counter() - t0
+    emit("pysim/throttled_flap_4GB", t_sim * 1e6, f"{res.total_time:.2f}",
+         f"chunks={len(res.chunks)}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-seeds", type=int, default=8)
+    ap.add_argument("--file-gb", type=int, default=2,
+                    help="Table II small-file regime by default; compile "
+                         "cost is file-size independent (size is traced)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller scenario batch / micro-bench op counts")
+    args = ap.parse_args(argv)
+    tuner_sweep(n_seeds=args.n_seeds, file_gb=args.file_gb,
+                n_scenarios=8 if args.quick else 32,
+                scenario_seeds=1 if args.quick else 2)
+    pysim_micro(n_ops=5_000 if args.quick else 20_000)
+
+
+if __name__ == "__main__":
+    main()

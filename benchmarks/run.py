@@ -25,7 +25,8 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-fidelity reps/sizes (slow)")
     ap.add_argument("--skip", nargs="*", default=[],
-                    help="section names to skip (fig2 fig3 fig4 fig5 table2 restore roofline)")
+                    help="section names to skip (fig2 fig3 fig4 fig5 table2 "
+                         "autotune restore roofline)")
     args = ap.parse_args(argv)
 
     reps = 10 if args.full else 2
@@ -56,6 +57,10 @@ def main(argv=None) -> None:
         + (["--sizes", "2", "32"] if not args.full
            else ["--sizes", "2", "8", "32", "64"])
     ))
+
+    from . import autotune_bench
+    run("autotune", lambda: autotune_bench.main(
+        [] if args.full else ["--quick"]))
 
     # Framework-layer benches (present once the substrates land).
     try:

@@ -1,0 +1,96 @@
+"""Version-compatibility shims over drifting JAX APIs.
+
+The repo pins one JAX, but these symbols moved across nearby releases and
+the code is written against the newest spelling.  Each shim prefers the
+new name and falls back to the old one, so the same source runs on either
+side of the rename:
+
+* ``pltpu.CompilerParams`` (new) vs ``pltpu.TPUCompilerParams`` (old) —
+  :func:`tpu_compiler_params`.
+* ``jax.shard_map`` with ``axis_names=`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` with ``auto=`` (old) —
+  :func:`shard_map`.
+* ``Compiled.cost_analysis()`` returning a dict (new) vs a one-element
+  list of dicts (old) — :func:`cost_analysis_dict`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+__all__ = ["tpu_compiler_params", "shard_map", "cost_analysis_dict",
+           "any_axis_bound", "axis_size"]
+
+
+def axis_size(axis_name) -> Any:
+    """``jax.lax.axis_size`` (new) or the bound-axis env lookup (old)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax._src import core as _core
+    return _core.get_axis_env().axis_size(axis_name)
+
+
+def any_axis_bound(axis_names) -> bool:
+    """True when tracing inside a region where any of ``axis_names`` is a
+    bound mapped axis (shard_map / pmap body).
+
+    Old-JAX stand-in for the ``jax.typeof(x).vma`` manual-region check:
+    versions without varying-manual-axes typing still record bound axis
+    sizes in the trace-local axis env, which this inspects.
+    """
+    try:
+        from jax._src import core as _core
+        env = _core.get_axis_env()
+        return any(env.axis_exists(a) for a in axis_names)
+    except Exception:
+        return False
+
+
+def tpu_compiler_params(**kwargs) -> Any:
+    """Build Pallas-TPU compiler params under either class name."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+              axis_names: Optional[set] = None, check_rep=None, **kwargs):
+    """``jax.shard_map`` if present, else the experimental spelling.
+
+    The new API expresses partial-manual mode as ``axis_names={...}``; the
+    old one as ``auto=<complement>``.  ``check_rep`` defaults to False on
+    the fallback because the old implementation cannot verify replication
+    under ``auto``.
+    """
+    if hasattr(jax, "shard_map"):
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        if check_rep is not None:
+            kwargs["check_rep"] = check_rep
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # Partial-auto mode (``auto=``) exists in old JAX but lowers
+    # ``axis_index`` to a PartitionId op XLA's SPMD partitioner rejects, so
+    # fall back to FULL manual: mesh axes outside ``axis_names`` are simply
+    # not mentioned in the specs → replicated instead of auto-sharded.
+    # Numerically identical; XLA loses the auto axes' sharding inside the
+    # region, which only costs memory/collectives, not correctness.
+    kwargs["check_rep"] = bool(check_rep) if check_rep is not None else False
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Flat cost dict from ``Compiled.cost_analysis()`` on any version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})

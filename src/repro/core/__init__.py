@@ -5,8 +5,12 @@
 * ``simulator`` — discrete-event multi-source transfer simulator.
 * ``mdtp`` / ``static_chunking`` / ``aria2`` / ``bittorrent`` — policies.
 * ``jax_alloc`` / ``jax_sim`` — vectorized JAX allocator + on-device
-  event simulator (vmappable).
-* ``autotune`` — automatic chunk-size selection (paper §VIII-A).
+  event simulator.  Chunk geometry, file size, and seed are traced
+  inputs (``ChunkArrays``), so whole (C, L) × seed × scenario sweeps
+  vmap through ONE compiled call.
+* ``autotune`` — automatic chunk-size selection (paper §VIII-A): fused
+  single-compile grid search plus the batched ``autotune_batch`` /
+  ``sweep_scenarios`` scenario-matrix API.
 * ``scenarios`` — calibrated FABRIC-testbed stand-ins.
 """
 
@@ -33,7 +37,14 @@ from .mdtp import MDTPPolicy
 from .static_chunking import StaticChunkingPolicy, default_static_chunk
 from .aria2 import Aria2Policy
 from .bittorrent import BitTorrentPolicy
-from .autotune import AutotuneResult, autotune_chunk_params, default_grid
+from .jax_alloc import ChunkArrays
+from .autotune import (
+    AutotuneResult,
+    autotune_batch,
+    autotune_chunk_params,
+    default_grid,
+    sweep_scenarios,
+)
 
 __all__ = [
     "ChunkParams", "default_chunk_params", "fast_server_mask",
@@ -43,5 +54,7 @@ __all__ = [
     "TransferState", "Wait", "simulate",
     "MDTPPolicy", "StaticChunkingPolicy", "default_static_chunk",
     "Aria2Policy", "BitTorrentPolicy",
-    "AutotuneResult", "autotune_chunk_params", "default_grid",
+    "ChunkArrays",
+    "AutotuneResult", "autotune_chunk_params", "autotune_batch",
+    "sweep_scenarios", "default_grid",
 ]

@@ -2,18 +2,24 @@
 
 The paper: *"Our future work will explore how to automatically choose these
 chunk sizes based on network conditions and file sizes."*  This module does
-that with the on-device simulator: a (C, L) grid is evaluated for the
-observed bandwidth/RTT vector by ``vmap``-ing ``jax_sim.simulate_transfer``
-over the whole grid in one call, optionally Monte-Carlo-averaged over
-jitter seeds, and the minimizing pair is returned.
+that with the on-device simulator, and — because chunk geometry is a traced
+:class:`~repro.core.jax_alloc.ChunkArrays` input, not a static jit argument
+— the **entire** (C, L) × Monte-Carlo-seed sweep is one ``vmap(vmap(...))``
+over :func:`~repro.core.jax_sim.simulate_core`: one compile, one device
+call, regardless of grid size.  The batched API (:func:`sweep_scenarios` /
+:func:`autotune_batch`) stacks a third ``vmap`` over an ``[S, N]``
+bandwidth/RTT matrix so thousands of (scenario, C, L, seed) cells evaluate
+in a single call.
 
 The framework's data plane calls this with live throughput estimates to
 re-tune chunk sizes between transfers (e.g. between checkpoint-restore
-waves), amortizing one device call across thousands of scenario sims.
+waves — ``MDTPClient.retune``), amortizing one device call across
+thousands of scenario sims.
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -21,10 +27,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .chunking import MB, ChunkParams
-from .jax_sim import SimConfig, simulate_transfer
+from .chunking import DEFAULT_MIN_CHUNK, MB, ChunkParams
+from .jax_alloc import ChunkArrays
+from .jax_sim import SimConfig, _prep, simulate_core
 
-__all__ = ["AutotuneResult", "default_grid", "autotune_chunk_params"]
+__all__ = [
+    "AutotuneResult",
+    "default_grid",
+    "autotune_chunk_params",
+    "autotune_batch",
+    "sweep_scenarios",
+]
 
 
 @dataclass(frozen=True)
@@ -55,6 +68,51 @@ def default_grid() -> list[tuple[int, int]]:
     return grid
 
 
+def _sweep_core(bw, rtt, throttle_t, throttle_bw, file_size,
+                grid_c, grid_l, grid_min, seeds, *, mode, config):
+    """``[G]`` grid × ``[K]`` seeds → ``[G, K]`` total times, one trace.
+
+    Inner vmap over Monte-Carlo seeds, outer vmap over the stacked grid
+    axis; every argument of ``simulate_core`` is traced, so this is a
+    single jaxpr for any grid.
+    """
+    def one(c, l, m, seed):
+        return simulate_core(
+            bw, rtt, throttle_t, throttle_bw, seed,
+            ChunkArrays(c, l, m), file_size, mode=mode, config=config,
+        ).total_time
+
+    per_seed = jax.vmap(one, in_axes=(None, None, None, 0))
+    return jax.vmap(per_seed, in_axes=(0, 0, 0, None))(
+        grid_c, grid_l, grid_min, seeds)
+
+
+def _sweep_core_batch(bw, rtt, throttle_t, throttle_bw, file_size,
+                      grid_c, grid_l, grid_min, seeds, *, mode, config):
+    """Leading ``[S]`` scenario axis on bandwidth/rtt/throttle/file_size →
+    ``[S, G, K]`` times; the third vmap stacked on the same core."""
+    f = functools.partial(_sweep_core, mode=mode, config=config)
+    return jax.vmap(f, in_axes=(0, 0, 0, 0, 0, None, None, None, None))(
+        bw, rtt, throttle_t, throttle_bw, file_size,
+        grid_c, grid_l, grid_min, seeds)
+
+
+#: One compile covers the whole (C, L) × seed sweep; tests assert the cache
+#: holds a single entry after an arbitrary-size grid search.
+_fused_sweep = jax.jit(_sweep_core, static_argnames=("mode", "config"))
+
+#: Scenario-batched variant — still one compile for the whole lattice.
+_fused_sweep_batch = jax.jit(
+    _sweep_core_batch, static_argnames=("mode", "config"))
+
+
+def _grid_arrays(grid) -> tuple[jax.Array, jax.Array, jax.Array]:
+    grid_c = jnp.asarray([c for c, _ in grid], jnp.float32)
+    grid_l = jnp.asarray([l for _, l in grid], jnp.float32)
+    grid_min = jnp.full((len(grid),), DEFAULT_MIN_CHUNK, jnp.float32)
+    return grid_c, grid_l, grid_min
+
+
 def autotune_chunk_params(
     bandwidth: Sequence[float],
     rtt,
@@ -66,39 +124,120 @@ def autotune_chunk_params(
 ) -> AutotuneResult:
     """Pick (C, L) minimizing simulated transfer time.
 
+    The whole grid × seed sweep runs as ONE jit-compiled device call
+    (chunk sizes are traced inputs riding a vmap axis) — no per-grid-point
+    retrace, so wall time is dominated by the simulation itself rather
+    than Python dispatch and compilation.
+
     Args:
       bandwidth: per-server bytes/s estimates (live throughput observations).
       rtt: scalar or per-server request RTT in seconds.
       file_size: bytes.
       grid: candidate (C, L) pairs; default = paper Table II sweep.
       jitter: lognormal sigma; with ``n_seeds > 1`` times are averaged over
-        seeds (Monte-Carlo via an extra vmap axis).
+        seeds (Monte-Carlo via the inner vmap axis).
     """
     grid = list(grid or default_grid())
-    bw = jnp.asarray(bandwidth, jnp.float32)
+    bw, rtt, throttle_t, throttle_bw = _prep(
+        bandwidth, rtt, None, None)
     cfg = SimConfig(jitter=jitter)
+    grid_c, grid_l, grid_min = _grid_arrays(grid)
+    seeds = jnp.arange(max(n_seeds, 1))
 
-    # The grid cannot be a vmap axis (ChunkParams is static), so evaluate
-    # each (C, L) as its own jit call but vmap the Monte-Carlo seeds inside.
-    times = []
-    for c, l in grid:
-        params = ChunkParams(initial_chunk=c, large_chunk=l, mode=mode)
-        if n_seeds == 1:
-            res = simulate_transfer(bw, rtt, file_size, params, config=cfg)
-            times.append(float(res.total_time))
-        else:
-            def one(seed):
-                return simulate_transfer(
-                    bw, rtt, file_size, params, seed=seed, config=cfg
-                ).total_time
-            ts = jax.vmap(one)(jnp.arange(n_seeds))
-            times.append(float(jnp.mean(ts)))
+    times_gk = _fused_sweep(
+        bw, rtt, throttle_t, throttle_bw, jnp.float32(file_size),
+        grid_c, grid_l, grid_min, seeds, mode=mode, config=cfg,
+    )
+    times = np.asarray(jnp.mean(times_gk, axis=1), np.float64)
 
     best = int(np.argmin(times))
     c, l = grid[best]
     return AutotuneResult(
         params=ChunkParams(initial_chunk=c, large_chunk=l, mode=mode),
-        predicted_time=times[best],
+        predicted_time=float(times[best]),
         grid=grid,
-        predicted_times=times,
+        predicted_times=[float(t) for t in times],
     )
+
+
+def sweep_scenarios(
+    bandwidth,
+    rtt,
+    file_size,
+    grid: Sequence[tuple[int, int]] | None = None,
+    throttle_t=None,
+    throttle_bw=None,
+    jitter: float = 0.0,
+    n_seeds: int = 1,
+    mode: str = "proportional",
+) -> jax.Array:
+    """Seed-averaged predicted times for a batch of scenarios.
+
+    Args:
+      bandwidth: ``[S, N]`` bytes/s — one row per scenario.
+      rtt: scalar, ``[N]``, or ``[S, N]`` seconds.
+      file_size: scalar or ``[S]`` bytes (per-scenario object sizes).
+      grid: candidate (C, L) pairs; default = paper Table II sweep.
+      throttle_t / throttle_bw: optional ``[S, N]`` Fig.-4-style throttle
+        breakpoints (time, post-throttle rate).
+
+    Returns:
+      ``[S, G]`` float32 matrix of seed-averaged predicted transfer times —
+      every (scenario, C, L, seed) cell simulated in one device call.
+    """
+    grid = list(grid or default_grid())
+    bw = jnp.asarray(bandwidth, jnp.float32)
+    if bw.ndim != 2:
+        raise ValueError(f"bandwidth must be [S, N], got shape {bw.shape}")
+    bw, rtt, throttle_t, throttle_bw = _prep(
+        bw, rtt, throttle_t, throttle_bw)
+    s = bw.shape[0]
+    file_size = jnp.broadcast_to(
+        jnp.asarray(file_size, jnp.float32), (s,))
+    cfg = SimConfig(jitter=jitter)
+    grid_c, grid_l, grid_min = _grid_arrays(grid)
+    seeds = jnp.arange(max(n_seeds, 1))
+
+    times_sgk = _fused_sweep_batch(
+        bw, rtt, throttle_t, throttle_bw, file_size,
+        grid_c, grid_l, grid_min, seeds, mode=mode, config=cfg,
+    )
+    return jnp.mean(times_sgk, axis=2)
+
+
+def autotune_batch(
+    bandwidth,
+    rtt,
+    file_size,
+    grid: Sequence[tuple[int, int]] | None = None,
+    throttle_t=None,
+    throttle_bw=None,
+    jitter: float = 0.0,
+    n_seeds: int = 1,
+    mode: str = "proportional",
+) -> list[AutotuneResult]:
+    """Per-scenario chunk-size selection over an ``[S, N]`` scenario batch.
+
+    A thin argmin over :func:`sweep_scenarios` — the full (scenario, C, L,
+    seed) lattice is simulated in one fused device call, then each
+    scenario's minimizing (C, L) pair is reported as its own
+    :class:`AutotuneResult` (same order as the bandwidth rows).
+    """
+    grid = list(grid or default_grid())
+    times_sg = np.asarray(sweep_scenarios(
+        bandwidth, rtt, file_size, grid=grid,
+        throttle_t=throttle_t, throttle_bw=throttle_bw,
+        jitter=jitter, n_seeds=n_seeds, mode=mode,
+    ), np.float64)
+
+    results = []
+    for row in times_sg:
+        best = int(np.argmin(row))
+        c, l = grid[best]
+        results.append(AutotuneResult(
+            params=ChunkParams(initial_chunk=c, large_chunk=l, mode=mode),
+            predicted_time=float(row[best]),
+            grid=grid,
+            predicted_times=[float(t) for t in row],
+        ))
+    return results

@@ -40,6 +40,7 @@ from dataclasses import dataclass, replace
 from typing import Sequence
 
 __all__ = [
+    "DEFAULT_MIN_CHUNK",
     "ChunkParams",
     "default_chunk_params",
     "geometric_mean",
@@ -55,6 +56,10 @@ _SMALL_FILE_LIMIT = 8 * 1024 * MB  # <= 8 GB
 _SMALL_PARAMS = (4 * MB, 40 * MB)
 _LARGE_PARAMS = (16 * MB, 160 * MB)
 
+#: floor for adaptive sizes, shared by ChunkParams and the autotuner's
+#: sweep geometry so the scored and adopted min_chunk cannot diverge.
+DEFAULT_MIN_CHUNK = 64 * 1024
+
 
 @dataclass(frozen=True)
 class ChunkParams:
@@ -67,13 +72,16 @@ class ChunkParams:
         (Algorithm 1 line 2).
       min_chunk: floor for adaptive sizes so a glacial server still makes
         progress and ``round()`` can never emit a zero-byte request.
-      mode: ``"proportional"`` (paper prose, default) or
-        ``"fast_get_large"`` (paper pseudocode).
+      mode: ``"proportional"`` (paper prose, default),
+        ``"fast_get_large"`` (paper pseudocode), or ``"static"`` (every
+        probed server gets exactly ``large_chunk`` — the fixed-chunk
+        baseline, used to fold static chunking into the adaptive code
+        path via ``C == L == chunk``).
     """
 
     initial_chunk: int = _SMALL_PARAMS[0]
     large_chunk: int = _SMALL_PARAMS[1]
-    min_chunk: int = 64 * 1024
+    min_chunk: int = DEFAULT_MIN_CHUNK
     mode: str = "proportional"
 
     def __post_init__(self) -> None:
@@ -81,11 +89,16 @@ class ChunkParams:
             raise ValueError("chunk sizes must be positive")
         if self.min_chunk <= 0:
             raise ValueError("min_chunk must be positive")
-        if self.mode not in ("proportional", "fast_get_large"):
+        if self.mode not in ("proportional", "fast_get_large", "static"):
             raise ValueError(f"unknown mode: {self.mode!r}")
 
     def with_mode(self, mode: str) -> "ChunkParams":
         return replace(self, mode=mode)
+
+    def as_triple(self) -> tuple[int, int, int]:
+        """The ``(C, L, min_chunk)`` geometry, mode stripped — the data
+        half of the allocator, as consumed by the traced JAX path."""
+        return (self.initial_chunk, self.large_chunk, self.min_chunk)
 
 
 def default_chunk_params(file_size: int, mode: str = "proportional") -> ChunkParams:
@@ -145,6 +158,9 @@ def next_chunk_size(
         # Not yet probed: uniform initial chunk (Algorithm 1 lines 5-10).
         return min(params.initial_chunk, remaining)
 
+    if params.mode == "static":
+        # Fixed-chunk baseline: throughput is ignored, every request is L.
+        return min(max(params.large_chunk, params.min_chunk), remaining)
     th_max = max(t for t in throughputs if t > 0.0)
     if params.mode == "fast_get_large":
         gm = geometric_mean(throughputs)

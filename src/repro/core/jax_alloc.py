@@ -5,6 +5,13 @@ jit/vmap-friendly: a single fused computation over the throughput vector,
 usable inside ``lax.while_loop`` (the on-device transfer simulator) and
 ``vmap`` (Monte-Carlo sweeps / the chunk-size autotuner).
 
+Chunk geometry is **data, not code**: the ``(C, L, min_chunk)`` triple is
+carried as a :class:`ChunkArrays` pytree of traced scalars, so a whole
+(C, L) grid can ride a ``vmap`` axis through one compiled simulator —
+the autotuner evaluates its entire sweep in a single device call instead
+of re-tracing per grid point.  Only ``mode`` (a branch structure) stays
+static.
+
 All sizes are float32 bytes here; the integer clamping semantics of the
 Python allocator are reproduced with ``jnp.round``.  float32 is exact to
 ~16 bytes at the 160 MB chunk scale, far below the allocator's 64 KiB
@@ -13,12 +20,61 @@ Python allocator are reproduced with ``jnp.round``.  float32 is exact to
 
 from __future__ import annotations
 
+from typing import NamedTuple, Union
+
 import jax
 import jax.numpy as jnp
 
 from .chunking import ChunkParams
 
-__all__ = ["chunk_sizes", "geometric_mean"]
+__all__ = ["ChunkArrays", "as_chunk_arrays", "chunk_sizes", "geometric_mean"]
+
+
+class ChunkArrays(NamedTuple):
+    """Traced ``(C, L, min_chunk)`` triple of the MDTP allocator.
+
+    A pytree of float32 scalars (or batched arrays under ``vmap``), so the
+    chunk geometry flows through ``jax.jit`` as a runtime input — sweeping
+    a grid of candidate sizes costs one compile, not one per point.
+    """
+
+    initial_chunk: jax.Array
+    large_chunk: jax.Array
+    min_chunk: jax.Array
+
+    @classmethod
+    def from_params(cls, params: ChunkParams) -> "ChunkArrays":
+        return cls(
+            initial_chunk=jnp.float32(params.initial_chunk),
+            large_chunk=jnp.float32(params.large_chunk),
+            min_chunk=jnp.float32(params.min_chunk),
+        )
+
+
+ChunkParamsLike = Union[ChunkParams, ChunkArrays, tuple]
+
+
+def as_chunk_arrays(
+    params: ChunkParamsLike, mode: str | None = None
+) -> tuple[ChunkArrays, str]:
+    """Normalize any chunk-parameter form to ``(ChunkArrays, mode)``.
+
+    Accepts a :class:`~repro.core.chunking.ChunkParams` (mode read from it
+    unless overridden), a :class:`ChunkArrays`, or a bare ``(C, L, min)``
+    triple of scalars/arrays.
+    """
+    if isinstance(params, ChunkParams):
+        return ChunkArrays.from_params(params), (mode or params.mode)
+    if isinstance(params, ChunkArrays):
+        arrays = params
+    else:
+        c, l, m = params
+        arrays = ChunkArrays(
+            jnp.asarray(c, jnp.float32),
+            jnp.asarray(l, jnp.float32),
+            jnp.asarray(m, jnp.float32),
+        )
+    return arrays, (mode or "proportional")
 
 
 def geometric_mean(throughputs: jax.Array) -> jax.Array:
@@ -33,7 +89,8 @@ def geometric_mean(throughputs: jax.Array) -> jax.Array:
 def chunk_sizes(
     throughputs: jax.Array,
     remaining: jax.Array,
-    params: ChunkParams,
+    params: ChunkParamsLike,
+    mode: str | None = None,
 ) -> jax.Array:
     """Vector of next-request sizes, one per server.
 
@@ -44,11 +101,16 @@ def chunk_sizes(
     Args:
       throughputs: ``[N]`` float32, bytes/s; ``<= 0`` = not yet probed.
       remaining: scalar, unassigned bytes.
-      params: allocator constants (static — baked into the jaxpr).
+      params: allocator constants — a static ``ChunkParams`` or a traced
+        ``ChunkArrays`` / ``(C, L, min)`` triple (vmappable).
+      mode: static branch selector; defaults to ``params.mode`` for
+        ``ChunkParams`` and ``"proportional"`` otherwise.  ``"static"``
+        gives every probed server exactly ``L`` (fixed-chunk baseline).
 
     Returns:
       ``[N]`` float32 sizes, clamped to ``remaining``; 0 when done.
     """
+    arrays, mode = as_chunk_arrays(params, mode)
     th = throughputs.astype(jnp.float32)
     remaining = jnp.asarray(remaining, jnp.float32)
     probed = th > 0.0
@@ -56,17 +118,19 @@ def chunk_sizes(
     th_max = jnp.max(jnp.where(probed, th, -jnp.inf))
     th_max = jnp.where(any_probed, th_max, 1.0)  # avoid -inf division
 
-    C = jnp.float32(params.initial_chunk)
-    L = jnp.float32(params.large_chunk)
+    C = arrays.initial_chunk
+    L = arrays.large_chunk
 
     proportional = jnp.round(L * th / th_max)
-    if params.mode == "fast_get_large":
+    if mode == "fast_get_large":
         gm = geometric_mean(th)
         adaptive = jnp.where(th >= gm, L, proportional)
+    elif mode == "static":
+        adaptive = jnp.broadcast_to(L, th.shape)
     else:
         adaptive = jnp.where(th >= th_max, L, proportional)
 
     size = jnp.where(probed, adaptive, C)
-    size = jnp.maximum(size, jnp.float32(params.min_chunk))
+    size = jnp.maximum(size, arrays.min_chunk)
     size = jnp.minimum(size, remaining)
     return jnp.where(remaining > 0.0, size, 0.0)

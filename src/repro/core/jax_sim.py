@@ -9,9 +9,17 @@ that path needs the Python simulator's range-reclaim pool.
 Why this exists (hardware adaptation): the paper picks chunk sizes
 empirically and leaves automatic selection to future work (§VIII-A).
 Expressing the whole transfer as a pure JAX function makes the evaluation
-loop *vmappable*: thousands of (bandwidth vector, C, L) scenarios simulate
-in one device call, which is what ``repro.core.autotune`` uses to pick
-chunk sizes — a TPU-native replacement for the paper's manual grid.
+loop *vmappable*: thousands of (bandwidth vector, C, L, seed) scenarios
+simulate in one device call, which is what ``repro.core.autotune`` uses to
+pick chunk sizes — a TPU-native replacement for the paper's manual grid.
+
+Every quantity that varies across a sweep is a **traced input**: the
+chunk geometry rides a :class:`~repro.core.jax_alloc.ChunkArrays` pytree,
+the file size is a traced scalar, and the PRNG seed is a traced int.  Only
+``mode`` (allocator branch structure) and :class:`SimConfig` (loop bounds /
+jitter switch) are static — so an arbitrary (C, L) × seed × scenario grid
+compiles exactly once.  Static chunking is the same code path with
+``C == L == chunk`` under ``mode="static"``, not a separate jaxpr.
 
 Cross-checked against the Python simulator in tests (same scenario → same
 completion time within float tolerance).
@@ -20,15 +28,20 @@ completion time within float tolerance).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from .chunking import ChunkParams
-from .jax_alloc import chunk_sizes
+from .jax_alloc import ChunkArrays, ChunkParamsLike, as_chunk_arrays, chunk_sizes
 
-__all__ = ["SimConfig", "JaxSimResult", "simulate_transfer", "simulate_static"]
+__all__ = [
+    "SimConfig",
+    "JaxSimResult",
+    "simulate_core",
+    "simulate_transfer",
+    "simulate_static",
+]
 
 _INF = jnp.float32(jnp.inf)
 
@@ -78,14 +91,12 @@ def _chunk_duration(
     return rtt + dur
 
 
-def _make_step(params: Optional[ChunkParams], static_chunk: Optional[float],
-               cfg: SimConfig, file_size: float):
-    """Build the while-loop body for either MDTP or static chunking."""
-
-    def next_size(th: jax.Array, remaining: jax.Array, i: jax.Array) -> jax.Array:
-        if static_chunk is not None:
-            return jnp.minimum(jnp.float32(static_chunk), remaining)
-        return chunk_sizes(th, remaining, params)[i]
+def _make_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
+               file_size: jax.Array):
+    """Build the while-loop body.  ``chunk`` / ``file_size`` are tracers
+    (closed over — lax.while_loop hoists them as loop constants); ``mode``
+    selects the allocator branch, ``mode="static"`` being the fixed-chunk
+    baseline."""
 
     def body(args):
         state, bw0, throttle_t, bw1, rtt = args
@@ -105,10 +116,10 @@ def _make_step(params: Optional[ChunkParams], static_chunk: Optional[float],
         # accumulation absorbs sub-eps residues at 64 GB scale, so anything
         # below ~2 ulp of the file size counts as done (planning tool — the
         # byte-exact path is the Python simulator / real client).
-        remaining = jnp.maximum(jnp.float32(file_size) - state.cursor, 0.0)
-        eps = jnp.float32(file_size) * jnp.float32(3e-7) + jnp.float32(1.0)
+        remaining = jnp.maximum(file_size - state.cursor, 0.0)
+        eps = file_size * jnp.float32(3e-7) + jnp.float32(1.0)
         remaining = jnp.where(remaining <= eps, 0.0, remaining)
-        size = next_size(th, remaining, i)
+        size = chunk_sizes(th, remaining, chunk, mode=mode)[i]
         active = size > 0.0
 
         key, sub = jax.random.split(state.key)
@@ -142,22 +153,25 @@ def _make_step(params: Optional[ChunkParams], static_chunk: Optional[float],
     return cond, body
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("params", "file_size", "config", "static_chunk"),
-)
-def _simulate(
+def simulate_core(
     bandwidth: jax.Array,
     rtt: jax.Array,
     throttle_t: jax.Array,
     throttle_bw: jax.Array,
     seed: jax.Array,
+    chunk: ChunkArrays,
+    file_size: jax.Array,
     *,
-    params: Optional[ChunkParams],
-    static_chunk: Optional[float],
-    file_size: float,
+    mode: str,
     config: SimConfig,
 ) -> JaxSimResult:
+    """Pure traced core: one transfer, every sweepable quantity an array.
+
+    All positional arguments are traced (``chunk`` is a pytree of scalars,
+    ``file_size``/``seed`` scalars) so callers may ``vmap`` over any of
+    them — the autotuner stacks a (C, L) grid, a seed axis, and a scenario
+    axis on top of this single function and compiles once.
+    """
     n = bandwidth.shape[0]
     state = _State(
         t_free=jnp.zeros((n,), jnp.float32),
@@ -171,7 +185,8 @@ def _simulate(
         it=jnp.int32(0),
         key=jax.random.PRNGKey(seed),
     )
-    cond, body = _make_step(params, static_chunk, config, file_size)
+    file_size = jnp.asarray(file_size, jnp.float32)
+    cond, body = _make_step(chunk, mode, config, file_size)
     final, *_ = jax.lax.while_loop(
         cond, body,
         (state, bandwidth.astype(jnp.float32), throttle_t.astype(jnp.float32),
@@ -185,29 +200,52 @@ def _simulate(
     )
 
 
+_simulate = jax.jit(simulate_core, static_argnames=("mode", "config"))
+
+
+def _prep(bandwidth, rtt, throttle_t, throttle_bw):
+    """Normalize scenario inputs: broadcast rtt/throttle args to the
+    bandwidth shape — ``[N]`` single-scenario or ``[S, N]`` batched."""
+    bandwidth = jnp.asarray(bandwidth, jnp.float32)
+    shape = bandwidth.shape
+    rtt = jnp.broadcast_to(jnp.asarray(rtt, jnp.float32), shape)
+    if throttle_t is None:
+        throttle_t = jnp.full(shape, jnp.inf, jnp.float32)
+    else:
+        throttle_t = jnp.broadcast_to(
+            jnp.asarray(throttle_t, jnp.float32), shape)
+    if throttle_bw is None:
+        throttle_bw = bandwidth
+    else:
+        throttle_bw = jnp.broadcast_to(
+            jnp.asarray(throttle_bw, jnp.float32), shape)
+    return bandwidth, rtt, throttle_t, throttle_bw
+
+
 def simulate_transfer(
     bandwidth,
     rtt,
     file_size: float,
-    params: ChunkParams,
+    params: ChunkParamsLike,
     throttle_t=None,
     throttle_bw=None,
     seed: int = 0,
     config: SimConfig = SimConfig(),
+    mode: str | None = None,
 ) -> JaxSimResult:
-    """MDTP transfer on-device.  All array args are per-server ``[N]``."""
-    bandwidth = jnp.asarray(bandwidth, jnp.float32)
-    n = bandwidth.shape[0]
-    rtt = jnp.broadcast_to(jnp.asarray(rtt, jnp.float32), (n,))
-    if throttle_t is None:
-        throttle_t = jnp.full((n,), jnp.inf, jnp.float32)
-    if throttle_bw is None:
-        throttle_bw = bandwidth
+    """MDTP transfer on-device.  All array args are per-server ``[N]``.
+
+    ``params`` may be a static ``ChunkParams`` or a traced ``ChunkArrays``
+    / ``(C, L, min)`` triple; either way the chunk geometry enters the
+    compiled function as data, so calls differing only in chunk sizes,
+    file size, or seed share one executable.
+    """
+    chunk, mode = as_chunk_arrays(params, mode)
+    bandwidth, rtt, throttle_t, throttle_bw = _prep(
+        bandwidth, rtt, throttle_t, throttle_bw)
     return _simulate(
-        bandwidth, rtt, jnp.asarray(throttle_t, jnp.float32),
-        jnp.asarray(throttle_bw, jnp.float32), seed,
-        params=params, static_chunk=None,
-        file_size=float(file_size), config=config,
+        bandwidth, rtt, throttle_t, throttle_bw, seed, chunk,
+        jnp.float32(file_size), mode=mode, config=config,
     )
 
 
@@ -221,17 +259,14 @@ def simulate_static(
     seed: int = 0,
     config: SimConfig = SimConfig(),
 ) -> JaxSimResult:
-    """Static-chunking transfer on-device (Rodriguez baseline)."""
-    bandwidth = jnp.asarray(bandwidth, jnp.float32)
-    n = bandwidth.shape[0]
-    rtt = jnp.broadcast_to(jnp.asarray(rtt, jnp.float32), (n,))
-    if throttle_t is None:
-        throttle_t = jnp.full((n,), jnp.inf, jnp.float32)
-    if throttle_bw is None:
-        throttle_bw = bandwidth
-    return _simulate(
-        bandwidth, rtt, jnp.asarray(throttle_t, jnp.float32),
-        jnp.asarray(throttle_bw, jnp.float32), seed,
-        params=None, static_chunk=float(chunk_size),
-        file_size=float(file_size), config=config,
+    """Static-chunking transfer on-device (Rodriguez baseline).
+
+    Same code path as :func:`simulate_transfer` with ``C == L == chunk``
+    under ``mode="static"`` — not a separately compiled jaxpr.
+    """
+    c = jnp.float32(chunk_size)
+    return simulate_transfer(
+        bandwidth, rtt, file_size, ChunkArrays(c, c, c),
+        throttle_t=throttle_t, throttle_bw=throttle_bw,
+        seed=seed, config=config, mode="static",
     )

@@ -27,6 +27,7 @@ Design notes
 
 from __future__ import annotations
 
+import bisect
 import heapq
 import math
 from dataclasses import dataclass, field
@@ -180,6 +181,10 @@ class TransferState:
         Reclaimed ranges are drained before fresh cursor bytes so failed
         chunks are retried promptly.  Returns ``(start, length)``;
         ``length == 0`` when nothing is left.
+
+        The pool is a min-heap keyed on range start (ranges never overlap),
+        so drain/return are O(log P) instead of the O(P log P) of a sorted
+        list rebuilt on every reclaim.
         """
         if nbytes <= 0:
             return (self._cursor, 0)
@@ -187,9 +192,10 @@ class TransferState:
             start, length = self._pool[0]
             take = min(length, nbytes)
             if take == length:
-                self._pool.pop(0)
+                heapq.heappop(self._pool)
             else:
-                self._pool[0] = (start + take, length - take)
+                # shrunk head keeps its heap position (start only grows)
+                heapq.heapreplace(self._pool, (start + take, length - take))
             return (start, take)
         take = min(nbytes, self.file_size - self._cursor)
         start = self._cursor
@@ -199,8 +205,7 @@ class TransferState:
     def reclaim(self, start: int, length: int) -> None:
         """Return an undelivered sub-range to the pool (failure path)."""
         if length > 0:
-            self._pool.append((start, length))
-            self._pool.sort()
+            heapq.heappush(self._pool, (start, length))
 
     # -- results ------------------------------------------------------------
     def record(self, rec: ChunkRecord) -> None:
@@ -279,41 +284,68 @@ class SimResult:
 
 
 class _ServerRuntime:
-    """Per-server dynamic state: availability intervals and failure."""
+    """Per-server dynamic state: availability intervals and failure.
+
+    Downtime intervals are merged into a disjoint sorted list and the
+    bandwidth profile flattened into parallel arrays at construction, so
+    the per-segment lookups inside ``transfer`` are ``bisect`` O(log K)
+    instead of linear scans — these run once per rate/availability segment
+    of every chunk, the hottest loop of the Python simulator.
+    """
 
     def __init__(self, spec: ServerSpec, rng: np.random.Generator, horizon: float):
         self.spec = spec
-        self.down: list[tuple[float, float]] = []
+        down: list[tuple[float, float]] = []
         if spec.fail_at < _INF:
-            self.down.append((spec.fail_at, _INF))
+            down.append((spec.fail_at, _INF))
         if spec.avail_up > 0.0 and spec.avail_down > 0.0:
             t = float(rng.exponential(spec.avail_up))
             while t < horizon:
                 d = float(rng.exponential(spec.avail_down))
-                self.down.append((t, t + d))
+                down.append((t, t + d))
                 t += d + float(rng.exponential(spec.avail_up))
-            self.down.sort()
+        down.sort()
+        # Merge overlaps (fail_at can overlap a flap) — disjoint intervals
+        # make the bisect lookups exact.
+        merged: list[tuple[float, float]] = []
+        for s, e in down:
+            if merged and s <= merged[-1][1]:
+                prev_s, prev_e = merged[-1]
+                merged[-1] = (prev_s, max(prev_e, e))
+            else:
+                merged.append((s, e))
+        self.down = merged
+        self._down_starts = [s for s, _ in merged]
+        self._down_ends = [e for _, e in merged]
+        #: rate at t = _rates[bisect_right(_rate_times, t)]
+        self._rate_times = [start for start, _ in spec.profile]
+        self._rates = [spec.bandwidth] + [bw for _, bw in spec.profile]
 
     def is_up(self, t: float) -> bool:
         return self.next_downtime_covering(t) is None
 
     def next_downtime_covering(self, t: float) -> Optional[tuple[float, float]]:
-        for s, e in self.down:
-            if s <= t < e:
-                return (s, e)
-            if s > t:
-                break
+        i = bisect.bisect_right(self._down_starts, t) - 1
+        if i >= 0 and self._down_ends[i] > t:
+            return self.down[i]
         return None
 
     def next_down_after(self, t: float) -> float:
-        for s, e in self.down:
-            if e > t:
-                return s if s > t else t
+        i = bisect.bisect_right(self._down_ends, t)
+        if i < len(self.down):
+            return max(self._down_starts[i], t)
         return _INF
 
     def next_up_time(self, t: float) -> float:
         cov = self.next_downtime_covering(t)
         return cov[1] if cov else t
+
+    def bandwidth_at(self, t: float) -> float:
+        return self._rates[bisect.bisect_right(self._rate_times, t)]
+
+    def next_rate_boundary(self, t: float) -> float:
+        j = bisect.bisect_right(self._rate_times, t)
+        return self._rate_times[j] if j < len(self._rate_times) else _INF
 
     def transfer(
         self, t0: float, nbytes: int, rng: np.random.Generator, first_use: bool
@@ -332,22 +364,15 @@ class _ServerRuntime:
             )
         t = t0 + spec.rtt + (spec.connect_latency if first_use else 0.0)
         remaining = float(nbytes)
-        boundaries = spec.rate_boundaries()
         while remaining > 0.0:
             down = self.next_downtime_covering(t)
             if down is not None:
                 return (t, nbytes - int(round(remaining)))
-            rate = spec.bandwidth_at(t) * scale
+            rate = self.bandwidth_at(t) * scale
             if rate <= 0.0:
                 return (t, nbytes - int(round(remaining)))
             # Next moment the rate function or availability changes.
-            horizon = _INF
-            for b in boundaries:
-                if b > t:
-                    horizon = b
-                    break
-            nd = self.next_down_after(t)
-            horizon = min(horizon, nd)
+            horizon = min(self.next_rate_boundary(t), self.next_down_after(t))
             dt_need = remaining / rate
             if t + dt_need <= horizon:
                 return (t + dt_need, nbytes)

@@ -215,4 +215,7 @@ def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
             return x
     except Exception:
         pass
+    from repro.compat import any_axis_bound
+    if any_axis_bound(ctx.mesh.axis_names):
+        return x
     return jax.lax.with_sharding_constraint(x, ctx.sharding(logical))

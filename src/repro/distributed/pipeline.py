@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distributed.context import constrain
 from repro.models.common import ModelConfig
 from repro.models.layers import apply_norm
@@ -138,7 +139,7 @@ def make_pp_forward(cfg: ModelConfig, mesh, n_microbatches: int,
     def forward(params, tokens):
         x = _positions_embed(cfg, params, tokens)
         xs = _split_microbatches(x, M)
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             pipelined, mesh=mesh,
             in_specs=(P(stage_axis), P()),
             out_specs=(P(stage_axis), P(stage_axis)),

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 __all__ = ["ssm_scan_bh"]
 
 
@@ -103,7 +105,7 @@ def ssm_scan_bh(
         out_specs=pl.BlockSpec((1, chunk, Hb, P), lambda b, c: (b, c, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, S, Hb, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((Hb, P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, Bm, Cm)

@@ -212,7 +212,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     print(ma)
-    ca = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
 
     hlo = compiled.as_text()

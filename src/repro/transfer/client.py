@@ -49,6 +49,9 @@ class TransferReport:
     requests_per_replica: dict
     failed_replicas: list
     refetched_ranges: int
+    #: final per-replica estimator values (bytes/s; 0 = never observed) —
+    #: the live inputs the autotuner re-tunes chunk sizes from.
+    observed_throughputs: dict = field(default_factory=dict)
 
     @property
     def throughput(self) -> float:
@@ -122,6 +125,39 @@ class MDTPClient:
         self._alpha = ewma_alpha
         self.retry_after = retry_after
         self.max_failures = max_failures
+        #: report of the most recent ``fetch`` (None before the first one).
+        self.last_report: Optional[TransferReport] = None
+
+    def retune(self, file_size: int, **autotune_kw):
+        """Re-tune chunk sizes from the last transfer's live throughputs.
+
+        Runs the fused on-device grid sweep (``repro.core.autotune`` — one
+        compiled call for the whole (C, L) × seed lattice) against the
+        per-replica throughputs observed during the previous ``fetch`` and
+        adopts the winning ``ChunkParams`` for subsequent transfers.
+        Typical use: between checkpoint-restore waves, where mirror
+        conditions drift but the replica set is stable.
+
+        Returns the ``AutotuneResult``; raises if no transfer has been
+        observed yet or no replica produced a throughput sample.
+        """
+        from repro.core.autotune import autotune_chunk_params
+
+        if self.last_report is None:
+            raise RuntimeError("retune() needs a completed fetch() first")
+        # Replicas with no sample (failed / never dispatched) are excluded,
+        # mirroring how fetch() retires them — a 0-throughput entry would
+        # otherwise dominate every simulated grid point.
+        bw = [b for r in self.replicas
+              if (b := self.last_report.observed_throughputs.get(r.name, 0.0))
+              > 0.0]
+        if not bw:
+            raise RuntimeError("no throughput observations to retune from")
+        autotune_kw.setdefault("rtt", 0.03)
+        res = autotune_chunk_params(bw, file_size=int(file_size),
+                                    **autotune_kw)
+        self._params_arg = res.params
+        return res
 
     def _make_conn(self, replica: Replica) -> "_Conn":
         """Connection factory — subclasses may translate offsets (the data
@@ -220,7 +256,12 @@ class MDTPClient:
             total_bytes=size, elapsed=time.monotonic() - t0,
             bytes_per_replica=bytes_per, requests_per_replica=reqs_per,
             failed_replicas=failed, refetched_ranges=refetched,
+            observed_throughputs={
+                r.name: float(est[i].value)
+                for i, r in enumerate(self.replicas)
+            },
         )
+        self.last_report = report
         return buf, report
 
     async def blob_size(self) -> int:

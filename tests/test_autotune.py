@@ -1,0 +1,160 @@
+"""Tuner-fusion tests: the traced-chunk-params sweep must be a drop-in
+replacement for the old per-point grid search — one compile, same argmin,
+same times — and the traced simulator must still track the Python one."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.autotune import (  # noqa: E402
+    _fused_sweep,
+    autotune_batch,
+    autotune_chunk_params,
+    default_grid,
+    sweep_scenarios,
+)
+from repro.core.chunking import ChunkParams  # noqa: E402
+from repro.core.jax_alloc import ChunkArrays, chunk_sizes  # noqa: E402
+from repro.core.jax_sim import SimConfig, simulate_static, simulate_transfer  # noqa: E402
+from repro.core.mdtp import MDTPPolicy  # noqa: E402
+from repro.core.simulator import ServerSpec, simulate  # noqa: E402
+from repro.core.static_chunking import StaticChunkingPolicy  # noqa: E402
+
+MB = 1024 * 1024
+GB = 1024 * MB
+
+BW = [50.0 * MB, 30.0 * MB, 10.0 * MB, 80.0 * MB]
+
+
+def test_fused_sweep_single_compile():
+    """An arbitrary (C, L) grid costs exactly ONE jit compile — chunk sizes
+    are traced data, not static args, so no per-grid-point retrace."""
+    jax.clear_caches()
+    assert _fused_sweep._cache_size() == 0
+    grid = [(c * MB, l * MB) for c in (1, 2, 3, 5, 7) for l in (16, 32, 64)]
+    autotune_chunk_params(BW, 0.03, 2 * GB, grid=grid)
+    assert _fused_sweep._cache_size() == 1
+    # different grid VALUES (same shape) must hit the same executable
+    grid2 = [(c * 2, l * 2) for c, l in grid]
+    autotune_chunk_params(BW, 0.03, 4 * GB, grid=grid2, n_seeds=1)
+    assert _fused_sweep._cache_size() == 1
+
+
+def test_fused_matches_per_point():
+    """Fused vmapped sweep == the old per-point evaluation: same predicted
+    time per grid point (float tolerance) and same argmin."""
+    res = autotune_chunk_params(BW, 0.03, 2 * GB)
+    per_point = [
+        float(simulate_transfer(BW, 0.03, 2 * GB, ChunkParams(c, l)).total_time)
+        for c, l in default_grid()
+    ]
+    np.testing.assert_allclose(res.predicted_times, per_point, rtol=1e-6)
+    assert np.argmin(res.predicted_times) == np.argmin(per_point)
+    best_c, best_l = default_grid()[int(np.argmin(per_point))]
+    assert (res.params.initial_chunk, res.params.large_chunk) == (best_c, best_l)
+
+
+def test_fused_matches_per_point_monte_carlo():
+    """Seed-averaged (jitter) sweep == per-point seed-vmapped means."""
+    cfg = SimConfig(jitter=0.2)
+    grid = default_grid()[:6]
+    res = autotune_chunk_params(BW, 0.03, 2 * GB, grid=grid,
+                                jitter=0.2, n_seeds=4)
+    for (c, l), t_fused in zip(grid, res.predicted_times):
+        ts = [float(simulate_transfer(BW, 0.03, 2 * GB, ChunkParams(c, l),
+                                      seed=s, config=cfg).total_time)
+              for s in range(4)]
+        assert t_fused == pytest.approx(float(np.mean(ts)), rel=1e-5)
+
+
+def test_traced_params_match_python_sim():
+    """Traced-chunk-params simulate_transfer still cross-checks against the
+    Python discrete-event simulator."""
+    rates = [20.0, 35.0, 7.5, 55.0]
+    rtt, size = 0.02, 256 * MB
+    params = ChunkParams(2 * MB, 20 * MB)
+    specs = [ServerSpec(name=f"s{i}", bandwidth=r * MB, rtt=rtt)
+             for i, r in enumerate(rates)]
+    py = simulate(MDTPPolicy(params=params), specs, size, seed=0)
+    jx = simulate_transfer([r * MB for r in rates], rtt, size, params)
+    assert float(jx.total_time) == pytest.approx(py.total_time, rel=0.02)
+    np.testing.assert_allclose(
+        np.asarray(jx.bytes_per_server), np.asarray(py.bytes_per_server),
+        rtol=0.05, atol=2 * params.large_chunk)
+
+
+def test_static_mode_matches_python_sim():
+    """simulate_static (now the C == L == chunk fold of the adaptive path)
+    still matches the Python static-chunking policy."""
+    rates = [20.0, 35.0, 7.5]
+    rtt, size, chunk = 0.02, 256 * MB, 8 * MB
+    specs = [ServerSpec(name=f"s{i}", bandwidth=r * MB, rtt=rtt)
+             for i, r in enumerate(rates)]
+    py = simulate(StaticChunkingPolicy(chunk_size=chunk), specs, size, seed=0)
+    jx = simulate_static([r * MB for r in rates], rtt, size, chunk)
+    assert float(jx.total_time) == pytest.approx(py.total_time, rel=0.02)
+
+
+def test_chunk_arrays_matches_chunk_params():
+    """jax_alloc.chunk_sizes gives identical sizes whether the geometry
+    arrives as a static ChunkParams or a traced ChunkArrays triple."""
+    th = jnp.asarray([10 * MB, 0.0, 45 * MB, 3 * MB], jnp.float32)
+    params = ChunkParams(4 * MB, 40 * MB)
+    for remaining in (0.0, 1 * MB, 10 * GB):
+        via_params = chunk_sizes(th, remaining, params)
+        via_arrays = chunk_sizes(
+            th, remaining, ChunkArrays.from_params(params), mode=params.mode)
+        via_triple = chunk_sizes(th, remaining, params.as_triple())
+        np.testing.assert_array_equal(np.asarray(via_params),
+                                      np.asarray(via_arrays))
+        np.testing.assert_array_equal(np.asarray(via_params),
+                                      np.asarray(via_triple))
+
+
+def test_sweep_scenarios_batch():
+    """[S, N] scenario batch: row 0 of the fused lattice == the unbatched
+    sweep of that scenario; argmins agree with autotune_batch."""
+    scen = np.asarray([BW, [20.0 * MB] * 4, [5.0 * MB, 90.0 * MB,
+                                             40.0 * MB, 10.0 * MB]])
+    grid = default_grid()
+    times = np.asarray(sweep_scenarios(scen, 0.03, 2 * GB, grid=grid))
+    assert times.shape == (3, len(grid))
+    single = autotune_chunk_params(BW, 0.03, 2 * GB, grid=grid)
+    np.testing.assert_allclose(times[0], single.predicted_times, rtol=1e-6)
+
+    results = autotune_batch(scen, 0.03, 2 * GB, grid=grid)
+    assert len(results) == 3
+    for row, res in zip(times, results):
+        c, l = grid[int(np.argmin(row))]
+        assert (res.params.initial_chunk, res.params.large_chunk) == (c, l)
+        assert res.predicted_time == pytest.approx(float(row.min()), rel=1e-6)
+
+
+def test_batch_per_scenario_file_sizes():
+    """Per-scenario file sizes ride the same fused call."""
+    scen = np.asarray([BW, BW])
+    times = np.asarray(sweep_scenarios(
+        scen, 0.03, np.asarray([1 * GB, 4 * GB]), grid=default_grid()[:4]))
+    # same bandwidths, 4x the bytes -> strictly longer predicted times
+    assert (times[1] > times[0]).all()
+
+
+def test_client_retune_adopts_winner():
+    """The data-plane retune hook feeds observed throughputs to the fused
+    tuner and adopts the winning params for the next transfer."""
+    from repro.transfer.client import MDTPClient, Replica, TransferReport
+
+    replicas = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b")]
+    client = MDTPClient(replicas)
+    with pytest.raises(RuntimeError):
+        client.retune(2 * GB)
+    client.last_report = TransferReport(
+        total_bytes=1, elapsed=1.0, bytes_per_replica={}, requests_per_replica={},
+        failed_replicas=[], refetched_ranges=0,
+        observed_throughputs={"h0:1": 50.0 * MB, "h1:2": 10.0 * MB})
+    res = client.retune(2 * GB)
+    assert client._params_arg == res.params
+    expect = autotune_chunk_params([50.0 * MB, 10.0 * MB], 0.03, 2 * GB)
+    assert res.params == expect.params

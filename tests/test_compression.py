@@ -64,6 +64,7 @@ _MULTIDEV_PROG = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.optim.compression import (
         compressed_mean, compressed_reduce_scatter)
 
@@ -74,7 +75,7 @@ _MULTIDEV_PROG = textwrap.dedent("""
     # ---- compressed_reduce_scatter: int8 wire, f32 shard out
     def rs(g):
         return compressed_reduce_scatter(g[0], "data")
-    out = jax.shard_map(rs, mesh=mesh, in_specs=P("data"),
+    out = shard_map(rs, mesh=mesh, in_specs=P("data"),
                         out_specs=P("data"))(g_local)
     got = np.asarray(out).reshape(-1)          # concat of 8 shards
     want = np.asarray(jnp.mean(g_local, axis=0)).reshape(-1)
@@ -83,7 +84,7 @@ _MULTIDEV_PROG = textwrap.dedent("""
     assert err.max() < max(tol, 0.05), ("rs", err.max())
 
     # ---- wire dtype check: the only full-size collective is int8
-    txt = jax.jit(jax.shard_map(rs, mesh=mesh, in_specs=P("data"),
+    txt = jax.jit(shard_map(rs, mesh=mesh, in_specs=P("data"),
                                 out_specs=P("data"))
                   ).lower(g_local).compile().as_text()
     a2a = [l for l in txt.splitlines() if "all-to-all" in l
@@ -97,7 +98,7 @@ _MULTIDEV_PROG = textwrap.dedent("""
     # ---- compressed_mean matches exact within quant tolerance
     def cm(g):
         return compressed_mean(g[0], ("data",))
-    out2 = jax.shard_map(cm, mesh=mesh, in_specs=P("data"),
+    out2 = shard_map(cm, mesh=mesh, in_specs=P("data"),
                          out_specs=P())(g_local)
     err2 = np.abs(np.asarray(out2) - want)
     assert err2.max() < max(tol, 0.05), ("mean", err2.max())

@@ -4,6 +4,8 @@ every §Roofline/§Perf number flows through)."""
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.launch.hlo_analysis import analyze_hlo, _shape_bytes
