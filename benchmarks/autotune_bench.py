@@ -1,15 +1,24 @@
-"""Autotuner fusion benchmark: one compiled sweep vs the per-point loop.
+"""Autotuner benchmarks: sweep fusion, simulator engines, Python micro.
 
-Measures the tentpole claim of the traced-chunk-params refactor: the whole
-(C, L) × Monte-Carlo-seed grid evaluates in ONE jit-compiled device call
+Section 1 measures the PR-1 claim: the whole (C, L) × Monte-Carlo-seed
+grid evaluates in ONE jit-compiled device call
 (`repro.core.autotune._fused_sweep`), where the old implementation paid a
 fresh ``jax.jit`` trace per grid point because ``ChunkParams`` was a static
 argument.  The per-point baseline below reproduces that old cost model
 exactly — chunk sizes as static jit args, one compile per distinct (C, L).
+Both sides run the event engine so the comparison isolates fusion.
 
-Also micro-benchmarks the Python discrete-event simulator's optimized
-inner loops (bisect profile/downtime lookup, heap-based reclaim pool)
-against naive reference implementations kept inline here.
+Section 2 measures the PR-2 claim: the round-synchronous engines retire a
+whole round per device step instead of one chunk, so the default Table II
+sweep at N=8 replicas / 1 GB runs ≥5× faster steady-state on
+``engine="round"`` (and ``engine="scan"`` with a right-sized trip bound)
+than on ``engine="event"``.  A regret row quantifies the approximation:
+the event-engine time of the round engine's chosen (C, L) vs the event
+engine's own best.
+
+Section 3 micro-benchmarks the Python discrete-event simulator's
+optimized inner loops (bisect profile/downtime lookup, heap-based reclaim
+pool) against naive reference implementations kept inline here.
 
 Rows: ``name,us_per_call,derived[,extra...]`` like every other section.
 """
@@ -83,7 +92,8 @@ def tuner_sweep(n_seeds: int = 8, file_gb: int = 2, n_scenarios: int = 32,
     emit(f"autotune/per_point/{file_gb}GB", t_base * 1e6 / len(grid),
          f"{t_base:.3f}", f"grid={len(grid)}", f"n_seeds={n_seeds}")
 
-    # -- fused: one compile for the whole lattice -------------------------
+    # -- fused: one compile for the whole lattice (same event engine as
+    # the per-point baseline, so this isolates the fusion win) ------------
     jax.clear_caches()
     grid_c = jnp.asarray([c for c, _ in grid], jnp.float32)
     grid_l = jnp.asarray([l for _, l in grid], jnp.float32)
@@ -91,13 +101,13 @@ def tuner_sweep(n_seeds: int = 8, file_gb: int = 2, n_scenarios: int = 32,
     t0 = time.perf_counter()
     fused = _fused_sweep(bw, rtt, throttle_t, throttle_bw, file_size,
                          grid_c, grid_l, grid_m, seeds,
-                         mode="proportional", config=cfg)
+                         mode="proportional", config=cfg, engine="event")
     fused.block_until_ready()
     t_fused_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
     fused = _fused_sweep(bw, rtt, throttle_t, throttle_bw, file_size,
                          grid_c, grid_l, grid_m, seeds,
-                         mode="proportional", config=cfg)
+                         mode="proportional", config=cfg, engine="event")
     fused.block_until_ready()
     t_fused_warm = time.perf_counter() - t0
 
@@ -132,7 +142,86 @@ def tuner_sweep(n_seeds: int = 8, file_gb: int = 2, n_scenarios: int = 32,
 
 
 # --------------------------------------------------------------------------
-# Section 2: Python simulator inner-loop micro-benchmarks
+# Section 2: simulator engine comparison (event vs round vs scan)
+# --------------------------------------------------------------------------
+
+def engine_compare(n_replicas: int = 8, file_gb: int = 1, n_seeds: int = 8,
+                   reps: int = 3) -> None:
+    """Steady-state cost of the default Table II fused sweep per engine.
+
+    The acceptance configuration of the round-synchronous-core PR: N=8
+    replicas, 1 GB file, full Table II grid × ``n_seeds`` Monte-Carlo
+    seeds.  All engines compute the same lattice; ``round`` retires one
+    round per device step instead of one chunk (O(#rounds) trip count)
+    and ``scan`` runs a fixed right-sized trip count (the vmap-friendly,
+    differentiable variant).
+    """
+    # paper_baseline's six rates plus two mid-band paths -> N=8
+    rates = [12, 14, 15, 16, 18, 25, 40, 70][:n_replicas]
+    bw = jnp.asarray([r * MB for r in rates], jnp.float32)
+    n = bw.shape[0]
+    rtt = jnp.full((n,), 0.03, jnp.float32)
+    throttle_t = jnp.full((n,), jnp.inf, jnp.float32)
+    throttle_bw = bw
+    grid = default_grid()
+    grid_c = jnp.asarray([c for c, _ in grid], jnp.float32)
+    grid_l = jnp.asarray([l for _, l in grid], jnp.float32)
+    grid_m = jnp.full((len(grid),), 64 * 1024, jnp.float32)
+    seeds = jnp.arange(n_seeds)
+    file_size = jnp.float32(file_gb * GB)
+    # scan bound: ceil(max file / min L) + 2 (every round moves >= L bytes)
+    scan_rounds = int(np.ceil(file_gb * GB / min(l for _, l in grid))) + 2
+
+    warm = {}
+    for engine in ("event", "round", "scan"):
+        cfg = SimConfig(jitter=0.1,
+                        max_rounds=scan_rounds if engine == "scan" else 1024)
+
+        def sweep():
+            out = _fused_sweep(
+                bw, rtt, throttle_t, throttle_bw, file_size,
+                grid_c, grid_l, grid_m, seeds,
+                mode="proportional", config=cfg, engine=engine)
+            out.block_until_ready()
+            return out
+
+        t0 = time.perf_counter()
+        out = sweep()                              # compile + first run
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = sweep()
+        warm[engine] = (time.perf_counter() - t0) / reps
+        extras = [f"cold={t_cold:.3f}s", f"n={n}", f"grid={len(grid)}",
+                  f"n_seeds={n_seeds}"]
+        if engine != "event":
+            extras.append(f"speedup={warm['event'] / warm[engine]:.1f}x")
+        if engine == "scan":
+            extras.append(f"max_rounds={scan_rounds}")
+        emit(f"autotune/engine_{engine}/{file_gb}GBx{n}",
+             warm[engine] * 1e6, f"{warm[engine] * 1e3:.1f}ms", *extras)
+
+    # approximation quality: event-engine time of the round engine's pick
+    # vs the event engine's own best (jitter-free, single seed)
+    cfg0 = SimConfig()
+    ev = np.asarray(_fused_sweep(
+        bw, rtt, throttle_t, throttle_bw, file_size, grid_c, grid_l,
+        grid_m, jnp.arange(1), mode="proportional", config=cfg0,
+        engine="event"))[:, 0]
+    rd = np.asarray(_fused_sweep(
+        bw, rtt, throttle_t, throttle_bw, file_size, grid_c, grid_l,
+        grid_m, jnp.arange(1), mode="proportional", config=cfg0,
+        engine="round"))[:, 0]
+    regret = (ev[int(rd.argmin())] - ev.min()) / ev.min()
+    emit(f"autotune/engine_regret/{file_gb}GBx{n}", 0.0,
+         f"{regret:.4f}",
+         f"event_pick={grid[int(ev.argmin())][1] // MB}MB",
+         f"round_pick={grid[int(rd.argmin())][1] // MB}MB",
+         f"max_grid_dev={float(np.max(np.abs(ev - rd) / ev)):.4f}")
+
+
+# --------------------------------------------------------------------------
+# Section 3: Python simulator inner-loop micro-benchmarks
 # --------------------------------------------------------------------------
 
 class _NaivePool:
@@ -204,6 +293,8 @@ def main(argv=None) -> None:
     tuner_sweep(n_seeds=args.n_seeds, file_gb=args.file_gb,
                 n_scenarios=8 if args.quick else 32,
                 scenario_seeds=1 if args.quick else 2)
+    engine_compare(n_seeds=4 if args.quick else 8,
+                   reps=2 if args.quick else 3)
     pysim_micro(n_ops=5_000 if args.quick else 20_000)
 
 

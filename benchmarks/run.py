@@ -12,6 +12,8 @@ artifacts are available.
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import traceback
 
@@ -27,7 +29,15 @@ def main(argv=None) -> None:
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (fig2 fig3 fig4 fig5 table2 "
                          "autotune restore roofline)")
+    ap.add_argument("--json", nargs="?", const="BENCH_autotune.json",
+                    default=None, metavar="PATH",
+                    help="also dump every emitted row as machine-readable "
+                         "JSON (default path: BENCH_autotune.json) so the "
+                         "perf trajectory is tracked across PRs")
     args = ap.parse_args(argv)
+
+    from .common import reset_rows
+    reset_rows()
 
     reps = 10 if args.full else 2
     sizes = [1, 2, 4, 8, 16, 32, 64] if args.full else [1, 4, 16, 64]
@@ -73,6 +83,30 @@ def main(argv=None) -> None:
         run("roofline", lambda: roofline.report_main([]))
     except ImportError:
         pass
+
+    if args.json:
+        from .common import emitted_rows
+        payload = {
+            "schema": 1,
+            "driver": "benchmarks.run",
+            "args": {"full": args.full, "skip": args.skip},
+            "platform": {
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+            },
+            "failed_sections": failures,
+            "rows": emitted_rows(),
+        }
+        try:
+            import jax
+            payload["platform"]["jax"] = jax.__version__
+            payload["platform"]["backend"] = jax.default_backend()
+        except Exception:
+            pass
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.json} ({len(payload['rows'])} rows)",
+              flush=True)
 
     if failures:
         print(f"# FAILED sections: {failures}", file=sys.stderr)

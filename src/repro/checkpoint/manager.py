@@ -27,6 +27,7 @@ Fault-tolerance inventory (tested in tests/test_checkpoint.py):
 
 from __future__ import annotations
 
+import bisect
 import json
 import os
 import shutil
@@ -112,6 +113,79 @@ def latest_step(root: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+class _StreamingRestore:
+    """Range sink for ``MDTPClient.fetch``: overlap network with H2D.
+
+    Ranges land in a preallocated buffer, and the moment the last byte of
+    a leaf's range arrives that leaf is ``device_put`` — so host→device
+    transfers of early leaves run while later leaves are still on the
+    wire, instead of serially after the whole blob is buffered.  Each byte
+    is delivered exactly once by the client (reclaimed ranges are
+    re-fetched, never re-delivered), so per-leaf countdowns are exact.
+    """
+
+    def __init__(self, manifest: dict, like: Any,
+                 shardings: Optional[Any] = None):
+        leaves, self._treedef = _leaf_paths(like)
+        by_key = {e["key"]: e for e in manifest["leaves"]}
+        shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                        if shardings is not None else [None] * len(leaves))
+        self._buf = bytearray(int(manifest["total_bytes"]))
+        self._out: list = [None] * len(leaves)
+        # slots ordered by blob offset for bisect lookup of landed ranges
+        order = sorted(
+            range(len(leaves)), key=lambda i: by_key[leaves[i][0]]["offset"])
+        self._entries = []
+        self._remaining = []
+        self._slot_of = []
+        self._shards = []
+        self._starts = []
+        for i in order:
+            e = by_key[leaves[i][0]]
+            self._entries.append(e)
+            self._remaining.append(int(e["nbytes"]))
+            self._slot_of.append(i)
+            self._shards.append(shard_leaves[i])
+            self._starts.append(int(e["offset"]))
+        # zero-byte leaves (empty arrays) have nothing on the wire
+        for j, rem in enumerate(self._remaining):
+            if rem == 0:
+                self._materialize(j)
+
+    def sink(self, start: int, data: bytes) -> None:
+        end = start + len(data)
+        self._buf[start:end] = data
+        j = max(bisect.bisect_right(self._starts, start) - 1, 0)
+        while j < len(self._entries) and self._starts[j] < end:
+            e = self._entries[j]
+            leaf_end = self._starts[j] + int(e["nbytes"])
+            overlap = min(end, leaf_end) - max(start, self._starts[j])
+            if overlap > 0:
+                self._remaining[j] -= overlap
+                if self._remaining[j] == 0:
+                    self._materialize(j)
+            j += 1
+
+    def _materialize(self, j: int) -> None:
+        e = self._entries[j]
+        arr = np.frombuffer(
+            self._buf, dtype=np.dtype(e["dtype"]),
+            count=int(np.prod(e["shape"])) if e["shape"] else 1,
+            offset=int(e["offset"])).reshape(e["shape"])
+        shd = self._shards[j]
+        self._out[self._slot_of[j]] = (
+            jax.device_put(arr, shd) if shd is not None
+            else jax.device_put(arr))
+
+    def finish(self) -> Any:
+        missing = [self._entries[j]["key"]
+                   for j, r in enumerate(self._remaining) if r != 0]
+        if missing:
+            raise IOError(f"restore incomplete, leaves missing bytes: "
+                          f"{missing[:5]}")
+        return jax.tree_util.tree_unflatten(self._treedef, self._out)
+
+
 def _rebuild(manifest: dict, blob: bytes, like: Any,
              shardings: Optional[Any] = None) -> Any:
     leaves, treedef = _leaf_paths(like)
@@ -145,7 +219,10 @@ def restore_checkpoint(
     manifest, so this may be abstract).  ``replicas``: mirror list — when
     given, ``data.bin`` is fetched with MDTP multi-source ranges instead of
     local reads (``root`` is then only used to discover the step if not
-    given and may not exist locally).
+    given and may not exist locally), **streamed**: each leaf is
+    ``device_put`` as soon as its byte range completes, overlapping the
+    network transfer with host→device copies instead of buffering the
+    whole blob first.
     """
     if step is None:
         step = latest_step(root)
@@ -165,18 +242,19 @@ def restore_checkpoint(
             msize = await mclient.blob_size()
             mbuf, _ = await mclient.fetch(msize)
             manifest = json.loads(bytes(mbuf).decode())
+            stream = _StreamingRestore(manifest, like, shardings)
             dclient = MDTPClient([Replica(r.host, r.port, r.path + "/" + _DATA)
                                   for r in base])
-            blob, report = await dclient.fetch(manifest["total_bytes"])
-            return manifest, bytes(blob), report
+            _, report = await dclient.fetch(
+                manifest["total_bytes"], sink=stream.sink)
+            return stream.finish()
 
-        manifest, blob, report = asyncio.run(run())
-    else:
-        with open(os.path.join(d, _MANIFEST)) as f:
-            manifest = json.load(f)
-        with open(os.path.join(d, _DATA), "rb") as f:
-            blob = f.read()
+        return asyncio.run(run()), step
 
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    with open(os.path.join(d, _DATA), "rb") as f:
+        blob = f.read()
     return _rebuild(manifest, blob, like, shardings), step
 
 

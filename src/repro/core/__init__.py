@@ -5,12 +5,15 @@
 * ``simulator`` — discrete-event multi-source transfer simulator.
 * ``mdtp`` / ``static_chunking`` / ``aria2`` / ``bittorrent`` — policies.
 * ``jax_alloc`` / ``jax_sim`` — vectorized JAX allocator + on-device
-  event simulator.  Chunk geometry, file size, and seed are traced
-  inputs (``ChunkArrays``), so whole (C, L) × seed × scenario sweeps
-  vmap through ONE compiled call.
+  simulators.  Chunk geometry, file size, and seed are traced inputs
+  (``ChunkArrays``), so whole (C, L) × seed × scenario sweeps vmap
+  through ONE compiled call.  Three loop engines: ``event`` (exact,
+  O(#chunks) steps), ``round`` (round-synchronous, O(#rounds) vector
+  steps) and ``scan`` (fixed trip count, reverse-differentiable).
 * ``autotune`` — automatic chunk-size selection (paper §VIII-A): fused
-  single-compile grid search plus the batched ``autotune_batch`` /
-  ``sweep_scenarios`` scenario-matrix API.
+  single-compile grid search (round engine by default) plus the batched
+  ``autotune_batch`` / ``sweep_scenarios`` scenario-matrix API and the
+  gradient polish ``tune_chunk_params_grad``.
 * ``scenarios`` — calibrated FABRIC-testbed stand-ins.
 """
 
@@ -37,13 +40,15 @@ from .mdtp import MDTPPolicy
 from .static_chunking import StaticChunkingPolicy, default_static_chunk
 from .aria2 import Aria2Policy
 from .bittorrent import BitTorrentPolicy
-from .jax_alloc import ChunkArrays
+from .jax_alloc import ChunkArrays, round_allocate
 from .autotune import (
     AutotuneResult,
+    GradTuneResult,
     autotune_batch,
     autotune_chunk_params,
     default_grid,
     sweep_scenarios,
+    tune_chunk_params_grad,
 )
 
 __all__ = [
@@ -54,7 +59,8 @@ __all__ = [
     "TransferState", "Wait", "simulate",
     "MDTPPolicy", "StaticChunkingPolicy", "default_static_chunk",
     "Aria2Policy", "BitTorrentPolicy",
-    "ChunkArrays",
-    "AutotuneResult", "autotune_chunk_params", "autotune_batch",
-    "sweep_scenarios", "default_grid",
+    "ChunkArrays", "round_allocate",
+    "AutotuneResult", "GradTuneResult", "autotune_chunk_params",
+    "autotune_batch", "sweep_scenarios", "default_grid",
+    "tune_chunk_params_grad",
 ]

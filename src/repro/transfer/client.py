@@ -20,6 +20,7 @@ mirrors).
 from __future__ import annotations
 
 import asyncio
+import heapq
 import time
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
@@ -52,6 +53,10 @@ class TransferReport:
     #: final per-replica estimator values (bytes/s; 0 = never observed) —
     #: the live inputs the autotuner re-tunes chunk sizes from.
     observed_throughputs: dict = field(default_factory=dict)
+    #: measured per-replica request RTT in seconds (min over connect time
+    #: and header turnarounds; 0 = never measured).  Feeds ``retune`` so
+    #: the simulated sweep uses live latencies, not a guessed constant.
+    observed_rtts: dict = field(default_factory=dict)
 
     @property
     def throughput(self) -> float:
@@ -59,16 +64,31 @@ class TransferReport:
 
 
 class _Conn:
-    """One persistent HTTP/1.1 connection."""
+    """One persistent HTTP/1.1 connection.
+
+    Collects per-connection RTT samples: the TCP connect time on session
+    establishment, then the request-write → status-line turnaround of
+    every range request.  Consumers drain ``take_rtt_samples()`` and
+    min-aggregate — the minimum turnaround is the standard queuing-free
+    RTT proxy (the connect sample matters: header turnarounds include
+    server think time).
+    """
 
     def __init__(self, replica: Replica):
         self.replica = replica
         self.reader: Optional[asyncio.StreamReader] = None
         self.writer: Optional[asyncio.StreamWriter] = None
+        self._rtt_samples: list[float] = []
+
+    def take_rtt_samples(self) -> list[float]:
+        samples, self._rtt_samples = self._rtt_samples, []
+        return samples
 
     async def connect(self):
+        t0 = time.monotonic()
         self.reader, self.writer = await asyncio.open_connection(
             self.replica.host, self.replica.port)
+        self._rtt_samples.append(time.monotonic() - t0)
 
     async def close(self):
         if self.writer is not None:
@@ -86,10 +106,13 @@ class _Conn:
                f"Host: {self.replica.host}\r\n"
                f"Range: bytes={start}-{end}\r\n"
                f"Connection: keep-alive\r\n\r\n")
+        t_send = time.monotonic()
         self.writer.write(req.encode())
         await self.writer.drain()
-        # status line + headers
+        # status line + headers; first line back measures the header
+        # turnaround (request RTT + server think time)
         status = await self.reader.readline()
+        self._rtt_samples.append(time.monotonic() - t_send)
         if not status:
             raise ConnectionError("connection closed")
         code = int(status.split()[1])
@@ -128,15 +151,19 @@ class MDTPClient:
         #: report of the most recent ``fetch`` (None before the first one).
         self.last_report: Optional[TransferReport] = None
 
+    #: fallback request RTT (s) for replicas that never produced a sample —
+    #: ~WAN RTT between FABRIC sites, matching the simulator scenarios.
+    DEFAULT_RTT = 0.03
+
     def retune(self, file_size: int, **autotune_kw):
-        """Re-tune chunk sizes from the last transfer's live throughputs.
+        """Re-tune chunk sizes from the last transfer's live observations.
 
         Runs the fused on-device grid sweep (``repro.core.autotune`` — one
         compiled call for the whole (C, L) × seed lattice) against the
-        per-replica throughputs observed during the previous ``fetch`` and
-        adopts the winning ``ChunkParams`` for subsequent transfers.
-        Typical use: between checkpoint-restore waves, where mirror
-        conditions drift but the replica set is stable.
+        per-replica throughputs AND measured request RTTs observed during
+        the previous ``fetch`` and adopts the winning ``ChunkParams`` for
+        subsequent transfers.  Typical use: between checkpoint-restore
+        waves, where mirror conditions drift but the replica set is stable.
 
         Returns the ``AutotuneResult``; raises if no transfer has been
         observed yet or no replica produced a throughput sample.
@@ -147,13 +174,19 @@ class MDTPClient:
             raise RuntimeError("retune() needs a completed fetch() first")
         # Replicas with no sample (failed / never dispatched) are excluded,
         # mirroring how fetch() retires them — a 0-throughput entry would
-        # otherwise dominate every simulated grid point.
-        bw = [b for r in self.replicas
-              if (b := self.last_report.observed_throughputs.get(r.name, 0.0))
-              > 0.0]
+        # otherwise dominate every simulated grid point.  RTTs stay aligned
+        # with the surviving bandwidth entries.
+        bw, rtts = [], []
+        for r in self.replicas:
+            b = self.last_report.observed_throughputs.get(r.name, 0.0)
+            if b <= 0.0:
+                continue
+            bw.append(b)
+            rtt = self.last_report.observed_rtts.get(r.name, 0.0)
+            rtts.append(rtt if rtt > 0.0 else self.DEFAULT_RTT)
         if not bw:
             raise RuntimeError("no throughput observations to retune from")
-        autotune_kw.setdefault("rtt", 0.03)
+        autotune_kw.setdefault("rtt", rtts)
         res = autotune_chunk_params(bw, file_size=int(file_size),
                                     **autotune_kw)
         self._params_arg = res.params
@@ -174,38 +207,65 @@ class MDTPClient:
         buf = bytearray(size) if sink is None else None
 
         cursor = 0
-        pool: list[tuple[int, int]] = []         # reclaimed (start, len)
+        # reclaimed (start, len) min-heap keyed on range start (ranges never
+        # overlap) — push/pop are O(log P), vs the O(P log P) full re-sort
+        # the old list paid on every failure/short-read
+        pool: list[tuple[int, int]] = []
         bytes_per = {r.name: 0 for r in self.replicas}
         reqs_per = {r.name: 0 for r in self.replicas}
+        rtt_min = [0.0] * n                      # 0 = no sample yet
         failed: list[str] = []
         refetched = 0
         lock = asyncio.Lock()
         done_bytes = 0
         t0 = time.monotonic()
 
+        # bytes currently on the wire somewhere; a worker that sees no
+        # unassigned bytes must NOT exit while another worker still owes a
+        # range — if that worker's replica dies, the reclaimed range needs
+        # a surviving taker (the mirror-death fault-tolerance contract).
+        inflight = 0
+
         async def allocate(nbytes: int) -> tuple[int, int]:
-            nonlocal cursor
+            nonlocal cursor, inflight
             async with lock:
                 if pool:
-                    s, ln = pool.pop(0)
+                    s, ln = pool[0]
                     take = min(ln, nbytes)
-                    if take < ln:
-                        pool.insert(0, (s + take, ln - take))
+                    if take == ln:
+                        heapq.heappop(pool)
+                    else:
+                        # shrunk head keeps its heap position (start grows)
+                        heapq.heapreplace(pool, (s + take, ln - take))
+                    inflight += take
                     return s, take
                 take = min(nbytes, size - cursor)
                 s = cursor
                 cursor += take
+                inflight += take
                 return s, take
 
+        def observe_rtt(i: int, sample: float) -> None:
+            if sample > 0.0:
+                rtt_min[i] = (sample if rtt_min[i] <= 0.0
+                              else min(rtt_min[i], sample))
+
         async def worker(i: int):
-            nonlocal done_bytes, refetched
+            nonlocal done_bytes, refetched, inflight
             conn = self._make_conn(self.replicas[i])
             failures = 0
             while True:
                 async with lock:
                     remaining = (size - cursor) + sum(l for _, l in pool)
+                    outstanding = inflight
                 if remaining <= 0:
-                    break
+                    if outstanding <= 0:
+                        break
+                    # nothing to draw NOW, but a peer still owes a range:
+                    # if its replica dies the range returns to the pool
+                    # and this worker must be alive to take it over
+                    await asyncio.sleep(0.005)
+                    continue
                 want = next_chunk_size(i, [e.value for e in est], params,
                                        remaining)
                 if want <= 0:
@@ -219,8 +279,8 @@ class MDTPClient:
                     data = await conn.fetch_range(start, start + length - 1)
                 except (ConnectionError, OSError, asyncio.IncompleteReadError):
                     async with lock:
-                        pool.append((start, length))
-                        pool.sort()
+                        heapq.heappush(pool, (start, length))
+                        inflight -= length
                         refetched += 1
                     failures += 1
                     await conn.close()
@@ -231,20 +291,40 @@ class MDTPClient:
                     if self.retry_after > 0:
                         await asyncio.sleep(self.retry_after)
                     continue
-                elapsed = time.monotonic() - t_req
-                est[i].observe(len(data), elapsed)
-                if sink is None:
-                    buf[start:start + len(data)] = data
-                else:
-                    sink(start, data)
+                except BaseException:
+                    # cancellation / unexpected error: release the range so
+                    # peers waiting on in-flight work aren't stranded
+                    async with lock:
+                        heapq.heappush(pool, (start, length))
+                        inflight -= length
+                    raise
+                try:
+                    elapsed = time.monotonic() - t_req
+                    est[i].observe(len(data), elapsed)
+                    for sample in conn.take_rtt_samples():
+                        observe_rtt(i, sample)
+                    if sink is None:
+                        buf[start:start + len(data)] = data
+                    else:
+                        sink(start, data)
+                except BaseException:
+                    # e.g. the user-supplied sink raised (disk full): the
+                    # bytes were NOT delivered — reclaim the whole range
+                    # and settle the in-flight count before propagating
+                    async with lock:
+                        heapq.heappush(pool, (start, length))
+                        inflight -= length
+                    raise
                 async with lock:
                     bytes_per[self.replicas[i].name] += len(data)
                     reqs_per[self.replicas[i].name] += 1
                     done_bytes += len(data)
-                if len(data) < length:   # truncated: server sent short range
-                    async with lock:
-                        pool.append((start + len(data), length - len(data)))
-                        pool.sort()
+                    inflight -= length
+                    if len(data) < length:   # truncated: short range — the
+                        # tail re-enters the pool atomically with the
+                        # inflight decrement so no peer can exit between
+                        heapq.heappush(
+                            pool, (start + len(data), length - len(data)))
             await conn.close()
 
         await asyncio.gather(*(worker(i) for i in range(len(self.replicas))))
@@ -258,6 +338,10 @@ class MDTPClient:
             failed_replicas=failed, refetched_ranges=refetched,
             observed_throughputs={
                 r.name: float(est[i].value)
+                for i, r in enumerate(self.replicas)
+            },
+            observed_rtts={
+                r.name: float(rtt_min[i])
                 for i, r in enumerate(self.replicas)
             },
         )

@@ -42,12 +42,16 @@ def test_fused_sweep_single_compile():
     assert _fused_sweep._cache_size() == 1
 
 
-def test_fused_matches_per_point():
-    """Fused vmapped sweep == the old per-point evaluation: same predicted
-    time per grid point (float tolerance) and same argmin."""
-    res = autotune_chunk_params(BW, 0.03, 2 * GB)
+@pytest.mark.parametrize("engine", ["event", "round", "scan"])
+def test_fused_matches_per_point(engine):
+    """Fused vmapped sweep == the old per-point evaluation under EVERY
+    engine: same predicted time per grid point (float tolerance) and same
+    argmin."""
+    cfg = (SimConfig(max_rounds=2048) if engine == "scan" else SimConfig())
+    res = autotune_chunk_params(BW, 0.03, 2 * GB, engine=engine)
     per_point = [
-        float(simulate_transfer(BW, 0.03, 2 * GB, ChunkParams(c, l)).total_time)
+        float(simulate_transfer(BW, 0.03, 2 * GB, ChunkParams(c, l),
+                                config=cfg, engine=engine).total_time)
         for c, l in default_grid()
     ]
     np.testing.assert_allclose(res.predicted_times, per_point, rtol=1e-6)
@@ -56,12 +60,30 @@ def test_fused_matches_per_point():
     assert (res.params.initial_chunk, res.params.large_chunk) == (best_c, best_l)
 
 
+def test_round_engine_tracks_event_engine_on_grid():
+    """The O(#rounds) sweep approximates the O(#chunks) sweep: same argmin
+    on the Table II grid, every grid point within a documented 8% (exact
+    on the paper's C == L/10 geometry, loosest at probe-heavy C >= L/2.5
+    where server clocks desync by multiple rounds)."""
+    res_r = autotune_chunk_params(BW, 0.03, 2 * GB, engine="round")
+    res_e = autotune_chunk_params(BW, 0.03, 2 * GB, engine="event")
+    assert res_r.params == res_e.params
+    np.testing.assert_allclose(
+        res_r.predicted_times, res_e.predicted_times, rtol=0.08)
+    # the default Table II pairing (C = L/10) is where the round
+    # assumption is exact — these grid points must agree tightly
+    for (c, l), tr, te in zip(default_grid(), res_r.predicted_times,
+                              res_e.predicted_times):
+        if l == 10 * c:
+            assert tr == pytest.approx(te, rel=2e-3), (c, l)
+
+
 def test_fused_matches_per_point_monte_carlo():
     """Seed-averaged (jitter) sweep == per-point seed-vmapped means."""
     cfg = SimConfig(jitter=0.2)
     grid = default_grid()[:6]
     res = autotune_chunk_params(BW, 0.03, 2 * GB, grid=grid,
-                                jitter=0.2, n_seeds=4)
+                                jitter=0.2, n_seeds=4, engine="event")
     for (c, l), t_fused in zip(grid, res.predicted_times):
         ts = [float(simulate_transfer(BW, 0.03, 2 * GB, ChunkParams(c, l),
                                       seed=s, config=cfg).total_time)

@@ -1,7 +1,10 @@
 """Smoke-bench guard: the autotune section of ``benchmarks.run`` must
-complete (and demonstrate its speedup) in under a minute on one CPU core,
-so the tuner-fusion claim stays continuously verified."""
+complete (and demonstrate its speedups) quickly on one CPU core, so the
+tuner-fusion and round-engine claims stay continuously verified, and the
+``--json`` artifact (BENCH_autotune.json — the cross-PR perf trajectory)
+must be valid machine-readable JSON."""
 
+import json
 import os
 import subprocess
 import sys
@@ -11,13 +14,20 @@ import pytest
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def test_autotune_bench_smoke():
+@pytest.fixture(scope="module")
+def bench_run(tmp_path_factory):
+    json_path = tmp_path_factory.mktemp("bench") / "BENCH_autotune.json"
     res = subprocess.run(
         [sys.executable, "-m", "benchmarks.run",
          "--skip", "fig2", "fig3", "fig4", "fig5", "table2", "roofline",
-         "restore"],
-        capture_output=True, text=True, cwd=_ROOT, timeout=120,
+         "restore", "--json", str(json_path)],
+        capture_output=True, text=True, cwd=_ROOT, timeout=300,
     )
+    return res, json_path
+
+
+def test_autotune_bench_smoke(bench_run):
+    res, _ = bench_run
     assert res.returncode == 0, res.stderr[-2000:]
     out = res.stdout
     assert "# === autotune ===" in out
@@ -32,3 +42,47 @@ def test_autotune_bench_smoke():
     agree = [l for l in out.splitlines()
              if l.startswith("autotune/argmin_agree")]
     assert agree and agree[0].endswith("True"), agree
+
+
+def test_round_engine_bench_speedup(bench_run):
+    """The round engine's steady-state win over the event engine shows in
+    the bench (headline >= 5x idle; loose 2x floor against CI noise), and
+    its argmin regret under the event metric stays small."""
+    res, _ = bench_run
+    out = res.stdout
+    row = [l for l in out.splitlines()
+           if l.startswith("autotune/engine_round")]
+    assert row, out
+    speedup = float(row[0].rsplit("speedup=", 1)[1].split(",")[0].rstrip("x"))
+    assert speedup >= 2.0, row[0]
+    regret = [l for l in out.splitlines()
+              if l.startswith("autotune/engine_regret")]
+    assert regret, out
+    assert float(regret[0].split(",")[2]) <= 0.02, regret[0]
+
+
+def test_bench_json_artifact_valid(bench_run):
+    """--json writes well-formed JSON carrying µs/call for every emitted
+    row, including the event-vs-round engine comparison."""
+    res, json_path = bench_run
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert json_path.exists()
+    payload = json.loads(json_path.read_text())
+    assert payload["schema"] == 1
+    assert payload["failed_sections"] == []
+    names = [r["name"] for r in payload["rows"]]
+    assert any(n.startswith("autotune/engine_event") for n in names)
+    assert any(n.startswith("autotune/engine_round") for n in names)
+    for row in payload["rows"]:
+        assert isinstance(row["us_per_call"], float)
+
+
+def test_committed_bench_json_tracks_engines():
+    """The committed BENCH_autotune.json (perf trajectory across PRs) is
+    valid and records both simulator engines."""
+    path = os.path.join(_ROOT, "BENCH_autotune.json")
+    assert os.path.exists(path), "BENCH_autotune.json must be committed"
+    payload = json.loads(open(path).read())
+    names = [r["name"] for r in payload["rows"]]
+    assert any(n.startswith("autotune/engine_event") for n in names)
+    assert any(n.startswith("autotune/engine_round") for n in names)
