@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import argparse
 import functools
-import heapq
 import time
 
 import jax

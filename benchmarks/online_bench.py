@@ -1,0 +1,191 @@
+"""Online-tuner scenario replay: static one-shot grid vs MCGrad vs bandit.
+
+The paper's Fig. 6/7 events — a mirror throttled mid-transfer, a latency
+step on the fastest path, a mirror dying outright — are exactly where a
+one-shot (C, L) choice goes stale.  This harness replays those events as
+**wave-synchronous traces** (the checkpoint-restore wave loop's mechanics:
+the blob moves in fixed-size waves, each wave a fresh simulated transfer
+under the conditions in force at that point of the trace) and compares
+tuning policies:
+
+* ``static`` — the fused grid sweep once, on the pre-shift fleet, never
+  re-tuned (today's offline default);
+* ``grid``   — re-run the grid sweep every wave from measured telemetry;
+* ``mcgrad`` — jitter-smoothed Monte-Carlo gradient descent per wave
+  (``repro.core.online.MCGradTuner``);
+* ``bandit`` — discounted-UCB over grid-seeded arms, rewarded by the
+  *measured* wave throughput, drift-reset on fleet changes
+  (``repro.core.online.BanditTuner``).
+
+Every policy sees identical information: the same pre-shift seed, then
+only what the waves measure (per-replica delivered-bytes/second, wave
+throughput).  The derived column is total simulated trace seconds;
+``vs_static`` in the extras is the online policy's improvement.  Rows land
+in ``BENCH_online.json`` via ``python -m benchmarks.run --json`` (the
+driver merges rather than clobbers, so the autotune and online artifacts
+can accumulate side by side).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .common import emit  # noqa: F401  (also wires sys.path to src/)
+
+from repro.core.autotune import autotune_chunk_params
+from repro.core.jax_sim import simulate_transfer
+from repro.core.online import (
+    BanditTuner,
+    GridTuner,
+    MCGradTuner,
+    Telemetry,
+    rtt_corrected_bandwidth,
+)
+from repro.core.scenarios import GB, MBPS, paper_baseline
+
+MB = 1024 * 1024
+
+
+class ReplayTrace:
+    """Piecewise-constant fleet conditions: ``pre`` until ``shift_wave``
+    waves have completed, ``post`` after.  A dead replica keeps its slot
+    with bandwidth 0.0 (positional identity is what the bandit's drift
+    detector keys on).  Each trace carries its own wave calibration: the
+    bandwidth events (throttle, death) bite hardest over many short
+    waves, while a latency step reshapes the per-wave optimum only when
+    waves are long enough for RTT amortization to dominate."""
+
+    def __init__(self, name, bw_pre, rtt_pre, bw_post, rtt_post,
+                 shift_wave, total_bytes, wave_bytes):
+        self.name = name
+        self.bw_pre, self.rtt_pre = tuple(bw_pre), tuple(rtt_pre)
+        self.bw_post, self.rtt_post = tuple(bw_post), tuple(rtt_post)
+        self.shift_wave = shift_wave
+        self.total_bytes = int(total_bytes)
+        self.wave_bytes = int(wave_bytes)
+
+    def at(self, wave_i):
+        if wave_i >= self.shift_wave:
+            return self.bw_post, self.rtt_post
+        return self.bw_pre, self.rtt_pre
+
+
+def make_traces(quick: bool) -> list[ReplayTrace]:
+    """The three Fig. 6/7-shaped events on the calibrated FABRIC fleet."""
+    servers = paper_baseline(jitter=0.0)
+    bw = tuple(float(s.bandwidth) for s in servers)
+    rtt = tuple(float(s.rtt) for s in servers)
+    fastest = max(range(len(bw)), key=lambda i: bw[i])
+    throttled = list(bw)
+    throttled[fastest] = 6 * MBPS          # hard throttle, 70 -> 6 MiB/s
+    lat = list(rtt)
+    lat[fastest] = rtt[fastest] + 0.5      # paper §VII-C: +0.5 s requests
+    dead = list(bw)
+    dead[fastest] = 0.0                    # mirror death
+    return [
+        ReplayTrace("throttle", bw, rtt, throttled, rtt,
+                    shift_wave=2, total_bytes=2 * GB, wave_bytes=256 * MB),
+        ReplayTrace("latency_step", bw, rtt, bw, lat,
+                    shift_wave=1, total_bytes=(4 if quick else 6) * GB,
+                    wave_bytes=1 * GB),
+        ReplayTrace("mirror_death", bw, rtt, dead, rtt,
+                    shift_wave=2, total_bytes=2 * GB, wave_bytes=256 * MB),
+    ]
+
+
+def replay(trace: ReplayTrace, tuner):
+    """Run one policy through one trace.
+
+    Returns ``(sim_seconds, retunes, wall_seconds)`` — simulated trace
+    time, adopted re-tunes, and the policy's own planning wall-clock.
+    """
+    total_bytes, wave_bytes = trace.total_bytes, trace.wave_bytes
+    n = len(trace.bw_pre)
+    t_wall = time.perf_counter()
+    # Every policy starts from the same information: a one-shot grid tune
+    # on the pre-shift fleet (what a prior probing transfer observed).
+    seed_tel = Telemetry(trace.bw_pre, trace.rtt_pre, float(wave_bytes))
+    params = None
+    if tuner is not None:
+        params = tuner.update(seed_tel)
+    if params is None:
+        params = autotune_chunk_params(
+            list(trace.bw_pre), list(trace.rtt_pre),
+            int(wave_bytes)).params
+
+    moved, elapsed, wave_i, retunes = 0, 0.0, 0, 0
+    while moved < total_bytes:
+        wave = min(wave_bytes, total_bytes - moved)
+        bw, rtt = trace.at(wave_i)
+        live = [i for i in range(n) if bw[i] > 0.0]
+        res = simulate_transfer([bw[i] for i in live],
+                                [rtt[i] for i in live],
+                                wave, params, engine="round")
+        t = float(res.total_time)
+        bps = np.asarray(res.bytes_per_server)
+        elapsed += t
+        moved += wave
+        wave_i += 1
+        if tuner is not None and moved < total_bytes:
+            # Telemetry as an RTT-aware client estimator reports it: the
+            # per-request reading is s / (rtt + s / bw) (the estimator's
+            # elapsed window spans the request round-trip), then the
+            # separately-measured RTT inverts the bias back to the line
+            # rate — the same correction ``rtt_corrected_bandwidth``
+            # offers the real client.
+            reqs = np.asarray(res.requests_per_server)
+            obs = [0.0] * n
+            for k, i in enumerate(live):
+                b, r = float(bps[k]), int(reqs[k])
+                if b <= 0.0 or r <= 0:
+                    continue
+                s = b / r
+                per_request = s / (rtt[i] + s / bw[i])
+                obs[i] = rtt_corrected_bandwidth(per_request, rtt[i], s)
+            new = tuner.update(Telemetry(
+                bandwidth=tuple(obs), rtt=tuple(rtt),
+                remaining_bytes=float(min(wave_bytes, total_bytes - moved)),
+                measured_throughput=wave / max(t, 1e-9),
+                elapsed=elapsed))
+            if new is not None:
+                if new != params:
+                    retunes += 1
+                params = new
+    return elapsed, retunes, time.perf_counter() - t_wall
+
+
+def make_policies(quick: bool) -> dict:
+    return {
+        "grid": GridTuner(),
+        "mcgrad": MCGradTuner(
+            steps=25 if quick else 40,
+            n_seeds=6 if quick else 8,
+            max_rounds=192),
+        "bandit": BanditTuner(n_arms=3),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter trace, fewer MC seeds / descent steps")
+    args = ap.parse_args(argv)
+
+    for trace in make_traces(args.quick):
+        t_static, _, wall = replay(trace, None)
+        emit(f"online/{trace.name}/static", wall * 1e6, f"{t_static:.2f}",
+             f"waves={-(-trace.total_bytes // trace.wave_bytes)}",
+             f"wave_mb={trace.wave_bytes // MB}",
+             f"shift_wave={trace.shift_wave}")
+        for pname, tuner in make_policies(args.quick).items():
+            t, retunes, wall = replay(trace, tuner)
+            gain = (t_static - t) / t_static
+            emit(f"online/{trace.name}/{pname}", wall * 1e6, f"{t:.2f}",
+                 f"retunes={retunes}", f"vs_static={gain * 100:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ import numpy as np
 from .common import GB, emit
 from repro.core import ChunkParams, MDTPPolicy, simulate
 from repro.core.autotune import autotune_chunk_params, default_grid
-from repro.core.scenarios import MBPS, paper_baseline
+from repro.core.scenarios import paper_baseline
 
 MB = 1024 * 1024
 

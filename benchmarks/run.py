@@ -7,19 +7,106 @@ so ``python -m benchmarks.run`` finishes in a few minutes on one CPU core;
 ``--full`` matches the paper's 10 repetitions and full size ladder.
 Framework-layer benchmarks (roofline, restore) appear as sections when their
 artifacts are available.
+
+``--json PATH`` serializes the emitted rows.  An existing file is MERGED,
+not clobbered: rows re-emitted this run replace their previous versions,
+rows from skipped sections survive — so ``BENCH_autotune.json`` and
+``BENCH_online.json`` each accumulate a per-PR trajectory no matter which
+section subset a given invocation ran.
+
+``--check [PATH]`` is the CI perf guard: re-run the smoke-sized autotune
+sweep and compare its steady-state rows against the committed bench JSON
+(default ``BENCH_autotune.json``); any row slower than ``3x`` the
+committed number exits nonzero.  The tolerance is deliberately generous —
+CI machines differ from the machines that produced the artifact — so only
+an order-of-magnitude-class regression (a lost fusion, a retrace per grid
+point, an accidentally-eager loop) trips it.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 import traceback
 
+#: perf-guard tolerance: fail only on > 3x the committed steady-state cost.
+CHECK_TOLERANCE = 3.0
+
+#: row-name prefixes the guard compares — jit-compiled steady-state (warm)
+#: numbers only: they are stable across machines at the tens-of-ms scale.
+#: Cold-compile rows, correctness/derived rows, and the pure-Python
+#: microsecond micros (pysim/*) are machine noise, not perf signal.
+CHECK_ROW_PREFIXES = (
+    "autotune/fused_warm/",
+    "autotune/engine_round/",
+    "autotune/engine_scan/",
+)
+
 
 def _section(title: str) -> None:
     print(f"# === {title} ===", flush=True)
+
+
+def _merged_rows(path: str, new_rows: list[dict]) -> list[dict]:
+    """Merge this run's rows into an existing bench file's rows: re-emitted
+    names are replaced in place, absent ones survive, brand-new ones
+    append — a partial (``--skip``-heavy) run can't erase history."""
+    try:
+        with open(path) as f:
+            old_rows = json.load(f).get("rows", [])
+    except (OSError, ValueError):
+        return new_rows
+    by_name = {r["name"]: r for r in new_rows}
+    merged = [by_name.pop(r["name"], r) for r in old_rows]
+    return merged + [r for r in new_rows if r["name"] in by_name]
+
+
+def perf_check(path: str) -> int:
+    """Run the smoke sweep; compare steady-state rows against ``path``."""
+    from .common import emitted_rows, reset_rows
+
+    try:
+        with open(path) as f:
+            committed = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"# check: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    base = {r["name"]: float(r["us_per_call"]) for r in committed["rows"]}
+
+    reset_rows()
+    from . import autotune_bench
+    _section("perf-check smoke sweep")
+    autotune_bench.main(["--quick"])
+
+    compared, failures = 0, []
+    for row in emitted_rows():
+        name = row["name"]
+        if not any(name.startswith(p) for p in CHECK_ROW_PREFIXES):
+            continue
+        ref = base.get(name, 0.0)
+        if ref <= 0.0:
+            continue
+        ratio = row["us_per_call"] / ref
+        compared += 1
+        verdict = "ok" if ratio <= CHECK_TOLERANCE else "REGRESSION"
+        print(f"# check {name}: {row['us_per_call']:.0f}us vs committed "
+              f"{ref:.0f}us ({ratio:.2f}x) {verdict}", flush=True)
+        if ratio > CHECK_TOLERANCE:
+            failures.append(name)
+    if compared == 0:
+        print(f"# check: no comparable steady-state rows found in {path}",
+              file=sys.stderr)
+        return 1
+    if failures:
+        print(f"# check FAILED (>{CHECK_TOLERANCE:g}x): {failures}",
+              file=sys.stderr)
+        return 1
+    print(f"# check passed: {compared} rows within "
+          f"{CHECK_TOLERANCE:g}x of {path}", flush=True)
+    return 0
 
 
 def main(argv=None) -> None:
@@ -28,13 +115,23 @@ def main(argv=None) -> None:
                     help="paper-fidelity reps/sizes (slow)")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (fig2 fig3 fig4 fig5 table2 "
-                         "autotune restore roofline)")
+                         "autotune online restore roofline)")
     ap.add_argument("--json", nargs="?", const="BENCH_autotune.json",
                     default=None, metavar="PATH",
                     help="also dump every emitted row as machine-readable "
-                         "JSON (default path: BENCH_autotune.json) so the "
-                         "perf trajectory is tracked across PRs")
+                         "JSON (default path: BENCH_autotune.json); an "
+                         "existing file is merged, not clobbered, so the "
+                         "perf trajectory accumulates across PRs")
+    ap.add_argument("--check", nargs="?", const="BENCH_autotune.json",
+                    default=None, metavar="PATH",
+                    help="CI perf guard: compare a smoke sweep against the "
+                         "committed bench JSON; exit nonzero on any "
+                         f"steady-state row regressing past "
+                         f"{CHECK_TOLERANCE:g}x")
     args = ap.parse_args(argv)
+
+    if args.check:
+        sys.exit(perf_check(args.check))
 
     from .common import reset_rows
     reset_rows()
@@ -72,6 +169,10 @@ def main(argv=None) -> None:
     run("autotune", lambda: autotune_bench.main(
         [] if args.full else ["--quick"]))
 
+    from . import online_bench
+    run("online", lambda: online_bench.main(
+        [] if args.full else ["--quick"]))
+
     # Framework-layer benches (present once the substrates land).
     try:
         from . import restore_bench
@@ -86,6 +187,9 @@ def main(argv=None) -> None:
 
     if args.json:
         from .common import emitted_rows
+        rows = emitted_rows()
+        if os.path.exists(args.json):
+            rows = _merged_rows(args.json, rows)
         payload = {
             "schema": 1,
             "driver": "benchmarks.run",
@@ -95,7 +199,7 @@ def main(argv=None) -> None:
                 "machine": platform.machine(),
             },
             "failed_sections": failures,
-            "rows": emitted_rows(),
+            "rows": rows,
         }
         try:
             import jax

@@ -39,7 +39,7 @@ from typing import Any, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.transfer.client import MDTPClient, Replica
+from repro.transfer.client import MDTPClient, NoTelemetryError, Replica
 
 __all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
            "latest_step"]
@@ -119,13 +119,22 @@ class _StreamingRestore:
     Ranges land in a preallocated buffer, and the moment the last byte of
     a leaf's range arrives that leaf is ``device_put`` — so host→device
     transfers of early leaves run while later leaves are still on the
-    wire, instead of serially after the whole blob is buffered.  Each byte
-    is delivered exactly once by the client (reclaimed ranges are
-    re-fetched, never re-delivered), so per-leaf countdowns are exact.
+    wire, instead of serially after the whole blob is buffered.
+
+    Deliveries may **overlap or repeat**: the sink tracks covered byte
+    intervals and only decrements per-leaf countdowns for bytes seen for
+    the first time, so a duplicated or partially-overlapping range (a
+    retried wave, a speculative re-fetch, a buggy transport) can neither
+    double-materialize a leaf nor drive a countdown negative.  The normal
+    client path still delivers each byte exactly once — the interval set
+    then holds one entry per contiguous landed region and costs O(log n)
+    per call.
     """
 
     def __init__(self, manifest: dict, like: Any,
                  shardings: Optional[Any] = None):
+        self._covered: list[tuple[int, int]] = []   # disjoint [s, e), sorted
+        self.duplicate_bytes = 0                    # re-delivered byte count
         leaves, self._treedef = _leaf_paths(like)
         by_key = {e["key"]: e for e in manifest["leaves"]}
         shard_leaves = (jax.tree_util.tree_leaves(shardings)
@@ -152,9 +161,52 @@ class _StreamingRestore:
             if rem == 0:
                 self._materialize(j)
 
+    def _claim_new(self, start: int, end: int) -> list[tuple[int, int]]:
+        """Merge ``[start, end)`` into the covered set; return only the
+        subspans that were not already covered (first-time bytes)."""
+        cov = self._covered
+        i = bisect.bisect_right(cov, (start,))
+        if i > 0 and cov[i - 1][1] >= start:
+            i -= 1
+        new = []
+        pos = start
+        ns, ne = start, end
+        j = i
+        while j < len(cov) and cov[j][0] <= end:
+            s, e = cov[j]
+            if pos < s:
+                new.append((pos, s))
+            pos = max(pos, e)
+            ns, ne = min(ns, s), max(ne, e)
+            j += 1
+        if pos < end:
+            new.append((pos, end))
+        cov[i:j] = [(ns, ne)]
+        return new
+
     def sink(self, start: int, data: bytes) -> None:
         end = start + len(data)
+        if end <= start:
+            return
         self._buf[start:end] = data
+        fresh = self._claim_new(start, end)
+        self.duplicate_bytes += (end - start) - sum(e - s for s, e in fresh)
+        # Two phases so an exception can't corrupt the accounting: pure
+        # counter arithmetic first (cannot throw; coverage is already
+        # committed, so a re-delivery after a failure below is a clean
+        # duplicate no-op), then the device_puts.  A leaf whose
+        # _materialize raises keeps remaining == 0 with its bytes safely
+        # in the buffer — finish() retries it from there.
+        completed = []
+        for span_start, span_end in fresh:
+            completed.extend(self._account(span_start, span_end))
+        for j in completed:
+            self._materialize(j)
+
+    def _account(self, start: int, end: int) -> list[int]:
+        """Decrement leaf countdowns for a first-time byte span; return the
+        indices of leaves that just completed."""
+        completed = []
         j = max(bisect.bisect_right(self._starts, start) - 1, 0)
         while j < len(self._entries) and self._starts[j] < end:
             e = self._entries[j]
@@ -163,8 +215,9 @@ class _StreamingRestore:
             if overlap > 0:
                 self._remaining[j] -= overlap
                 if self._remaining[j] == 0:
-                    self._materialize(j)
+                    completed.append(j)
             j += 1
+        return completed
 
     def _materialize(self, j: int) -> None:
         e = self._entries[j]
@@ -183,6 +236,11 @@ class _StreamingRestore:
         if missing:
             raise IOError(f"restore incomplete, leaves missing bytes: "
                           f"{missing[:5]}")
+        # retry any leaf whose earlier device_put failed transiently mid-
+        # stream (its bytes are complete in the buffer)
+        for j, r in enumerate(self._remaining):
+            if r == 0 and self._out[self._slot_of[j]] is None:
+                self._materialize(j)
         return jax.tree_util.tree_unflatten(self._treedef, self._out)
 
 
@@ -212,6 +270,8 @@ def restore_checkpoint(
     step: Optional[int] = None,
     shardings: Optional[Any] = None,
     replicas: Optional[Sequence[Replica]] = None,
+    tuner: Any = None,
+    wave_bytes: Optional[int] = None,
 ) -> tuple[Any, int]:
     """Restore (state, step).
 
@@ -223,6 +283,20 @@ def restore_checkpoint(
     ``device_put`` as soon as its byte range completes, overlapping the
     network transfer with host→device copies instead of buffering the
     whole blob first.
+
+    ``wave_bytes`` splits the blob fetch into sequential waves of that
+    many bytes and **re-tunes chunk geometry between waves** from the
+    previous wave's measured per-replica throughput and RTT — a long
+    multi-leaf restore then tracks mirror throttles and latency steps
+    mid-restore instead of riding its initial (C, L) to the end.  With a
+    ``tuner`` (a ``repro.core.online`` policy: ``BanditTuner``,
+    ``MCGradTuner``, ``GridTuner``) each wave boundary feeds the tuner
+    one telemetry snapshot — exactly one update per wave, so a bandit's
+    reward attribution stays aligned with the params the wave actually
+    ran under; without one, each boundary runs the client's fused grid
+    ``retune`` (skipped quietly when a wave produced no usable
+    observations).  A single-fetch restore (no ``wave_bytes``) instead
+    passes the tuner to the client's in-transfer telemetry hook.
     """
     if step is None:
         step = latest_step(root)
@@ -245,8 +319,44 @@ def restore_checkpoint(
             stream = _StreamingRestore(manifest, like, shardings)
             dclient = MDTPClient([Replica(r.host, r.port, r.path + "/" + _DATA)
                                   for r in base])
-            _, report = await dclient.fetch(
-                manifest["total_bytes"], sink=stream.sink)
+            total = int(manifest["total_bytes"])
+            if not wave_bytes or wave_bytes >= total:
+                await dclient.fetch(total, sink=stream.sink, tuner=tuner)
+                return stream.finish()
+            pos = 0
+            while pos < total:
+                n = min(int(wave_bytes), total - pos)
+                _, report = await dclient.fetch(n, sink=stream.sink,
+                                                offset=pos)
+                pos += n
+                if pos >= total:
+                    break
+                next_wave = min(int(wave_bytes), total - pos)
+                if tuner is None:
+                    try:
+                        dclient.retune(next_wave)
+                    except NoTelemetryError:
+                        pass    # wave yielded no live observations; a
+                        # real sweep failure (XlaRuntimeError) propagates
+                else:
+                    # per-wave telemetry snapshot from the wave's report.
+                    # The tuner is fed HERE only (not via the client's
+                    # in-fetch hook): one update per wave keeps a
+                    # bandit's reward attributed to the params the whole
+                    # wave actually ran under.
+                    from repro.core.online import Telemetry
+
+                    try:
+                        new = tuner.update(Telemetry.from_report(
+                            report, dclient.replicas, next_wave))
+                    except Exception:
+                        # same contract as the client's in-transfer hook:
+                        # a failing tuner must never fail a restore whose
+                        # waves are streaming fine — keep the current
+                        # geometry and carry on
+                        new = None
+                    if new is not None:
+                        dclient.adopt_params(new)
             return stream.finish()
 
         return asyncio.run(run()), step

@@ -14,6 +14,10 @@
   single-compile grid search (round engine by default) plus the batched
   ``autotune_batch`` / ``sweep_scenarios`` scenario-matrix API and the
   gradient polish ``tune_chunk_params_grad``.
+* ``online`` — online (C, L) tuning from live fleet telemetry: the
+  jitter-smoothed Monte-Carlo gradient tuner and the discounted-UCB
+  bandit with drift detection, consumed by ``MDTPClient.fetch(tuner=...)``
+  and the checkpoint-restore wave loop.
 * ``scenarios`` — calibrated FABRIC-testbed stand-ins.
 """
 
@@ -50,6 +54,14 @@ from .autotune import (
     sweep_scenarios,
     tune_chunk_params_grad,
 )
+from .online import (
+    BanditTuner,
+    GridTuner,
+    MCGradTuner,
+    Telemetry,
+    rtt_corrected_bandwidth,
+    tune_chunk_params_mcgrad,
+)
 
 __all__ = [
     "ChunkParams", "default_chunk_params", "fast_server_mask",
@@ -63,4 +75,6 @@ __all__ = [
     "AutotuneResult", "GradTuneResult", "autotune_chunk_params",
     "autotune_batch", "sweep_scenarios", "default_grid",
     "tune_chunk_params_grad",
+    "BanditTuner", "GridTuner", "MCGradTuner", "Telemetry",
+    "rtt_corrected_bandwidth", "tune_chunk_params_mcgrad",
 ]

@@ -45,8 +45,8 @@ from .jax_sim import (
     _CORES as _ENGINE_CORES,
     SimConfig,
     _prep,
+    _simulate,
     resolve_engine,
-    simulate_round_core,
     simulate_scan_core,
 )
 
@@ -322,6 +322,110 @@ class GradTuneResult:
         return len(self.loss_history)
 
 
+# -- shared z-space descent machinery (also used by repro.core.online) -----
+#
+# (C, L) are parameterized as ``floor + exp(z)``: C floored at ``min_chunk``
+# and L at ``file_size / (max_rounds - 2)``, which keeps the static scan
+# bound valid for every point the optimizer can visit.
+
+def _l_floor_for(min_chunk: float, file_size: float, max_rounds: int) -> float:
+    return max(float(min_chunk), float(file_size) / max(max_rounds - 2, 1))
+
+
+def _z_init(init: tuple[float, float], min_chunk: float,
+            l_floor: float) -> jax.Array:
+    return jnp.asarray([
+        np.log(max(init[0] - min_chunk, 1.0)),
+        np.log(max(init[1] - l_floor, 1.0)),
+    ], jnp.float32)
+
+
+def _z_decode(z, min_chunk: float, l_floor: float):
+    """Traced inverse of :func:`_z_init` — the point the loss evaluates."""
+    return min_chunk + jnp.exp(z[0]), l_floor + jnp.exp(z[1])
+
+
+def _adam_descend(vg, z: jax.Array, steps: int, lr: float, args=()):
+    """Adam on ``vg(z, *args)`` with best-seen tracking.
+
+    Returns ``(best_z, history)`` — ``best_z`` is the lowest-loss iterate
+    (never worse than the init), ``history`` the loss per step.  Stops
+    early on a non-finite loss or gradient (the bad step is recorded but
+    never adopted).  Inline Adam — two scalars don't warrant an optimizer
+    dependency.
+    """
+    m = jnp.zeros_like(z)
+    v = jnp.zeros_like(z)
+    b1, b2, adam_eps = 0.9, 0.999, 1e-8
+    history: list[float] = []
+    best_z, best_t = z, float("inf")
+    for t in range(1, max(steps, 1) + 1):
+        val, g = vg(z, *args)
+        val = float(val)
+        history.append(val)
+        if not np.isfinite(val) or not np.all(np.isfinite(np.asarray(g))):
+            break
+        if val < best_t:
+            best_t, best_z = val, z
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1**t)
+        vh = v / (1 - b2**t)
+        z = z - lr * mh / (jnp.sqrt(vh) + adam_eps)
+    return best_z, history
+
+
+def _exact_time(params: ChunkParams, bw, rtt_a, throttle_t, throttle_bw,
+                file_f, mode: str) -> float:
+    """Honest number for integer params: exact sizes, round core, no
+    jitter — the metric both gradient tuners report and compare on.
+    Routed through the cached jit dispatcher (an eager ``while_loop``
+    costs seconds; online tuners call this every update)."""
+    return float(_simulate(
+        bw, rtt_a, throttle_t, throttle_bw, jnp.int32(0),
+        ChunkArrays.from_params(params), file_f,
+        mode=mode, config=SimConfig(), engine="round",
+    ).total_time)
+
+
+def _finish_grad_tune(vg, vg_args, best_z, history,
+                      init: tuple[float, float], min_chunk: int,
+                      l_floor: float, mode: str,
+                      bw, rtt_a, throttle_t, throttle_bw,
+                      file_f) -> GradTuneResult:
+    """Round ``best_z`` to integer ``ChunkParams``, guarantee never-worse
+    than ``init`` on the EXACT metric (rounding can cross a round-count
+    jump), and report the (dT/dC, dT/dL) chain-rule gradient."""
+    c_best = int(round(min_chunk + float(np.exp(best_z[0]))))
+    l_best = int(round(l_floor + float(np.exp(best_z[1]))))
+    params = ChunkParams(
+        initial_chunk=max(c_best, min_chunk),
+        large_chunk=max(l_best, min_chunk),
+        min_chunk=min_chunk, mode=mode)
+    t_final = _exact_time(params, bw, rtt_a, throttle_t, throttle_bw,
+                          file_f, mode)
+    init_params = ChunkParams(
+        initial_chunk=max(int(round(init[0])), min_chunk),
+        large_chunk=max(int(round(init[1])), min_chunk),
+        min_chunk=min_chunk, mode=mode)
+    t_init = _exact_time(init_params, bw, rtt_a, throttle_t, throttle_bw,
+                         file_f, mode)
+    if t_init < t_final:
+        params, t_final = init_params, t_init
+    # grad w.r.t. (C, L) via the chain rule through the softplus-free
+    # floor+exp map: dT/dC = dT/dz0 / exp(z0) etc.
+    _, g = vg(best_z, *vg_args)
+    g = np.asarray(g, np.float64)
+    final_grad = (g[0] / max(float(np.exp(best_z[0])), 1e-30),
+                  g[1] / max(float(np.exp(best_z[1])), 1e-30))
+    return GradTuneResult(
+        params=params,
+        predicted_time=t_final,
+        loss_history=history,
+        final_grad=(float(final_grad[0]), float(final_grad[1])),
+    )
+
+
 def tune_chunk_params_grad(
     bandwidth: Sequence[float],
     rtt,
@@ -369,12 +473,11 @@ def tune_chunk_params_grad(
             bandwidth, rtt, int(file_size), grid=grid, mode=mode)
         init = (float(seed_res.params.initial_chunk),
                 float(seed_res.params.large_chunk))
-    l_floor = max(float(min_chunk), float(file_size) / max(max_rounds - 2, 1))
+    l_floor = _l_floor_for(min_chunk, file_size, max_rounds)
     cfg = SimConfig(max_rounds=max_rounds, exact_sizes=False)
 
     def total_time(z, bw, rtt_a, throttle_t, throttle_bw):
-        c = min_chunk + jnp.exp(z[0])
-        l = l_floor + jnp.exp(z[1])
+        c, l = _z_decode(z, min_chunk, l_floor)
         chunk = ChunkArrays(c, l, jnp.float32(min_chunk))
         return simulate_scan_core(
             bw, rtt_a, throttle_t, throttle_bw, 0, chunk, file_f,
@@ -382,66 +485,9 @@ def tune_chunk_params_grad(
         ).total_time
 
     vg = jax.jit(jax.value_and_grad(total_time))
-    z = jnp.asarray([
-        np.log(max(init[0] - min_chunk, 1.0)),
-        np.log(max(init[1] - l_floor, 1.0)),
-    ], jnp.float32)
-
-    # inline Adam — two scalars don't warrant an optimizer dependency
-    m = jnp.zeros_like(z)
-    v = jnp.zeros_like(z)
-    b1, b2, adam_eps = 0.9, 0.999, 1e-8
-    history: list[float] = []
-    best_z, best_t = z, float("inf")
-    for t in range(1, max(steps, 1) + 1):
-        val, g = vg(z, bw, rtt_a, throttle_t, throttle_bw)
-        val = float(val)
-        history.append(val)
-        if not np.isfinite(val) or not np.all(np.isfinite(np.asarray(g))):
-            break
-        if val < best_t:
-            best_t, best_z = val, z
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        mh = m / (1 - b1**t)
-        vh = v / (1 - b2**t)
-        z = z - lr * mh / (jnp.sqrt(vh) + adam_eps)
-
-    c_best = int(round(min_chunk + float(np.exp(best_z[0]))))
-    l_best = int(round(l_floor + float(np.exp(best_z[1]))))
-    params = ChunkParams(
-        initial_chunk=max(c_best, min_chunk),
-        large_chunk=max(l_best, min_chunk),
-        min_chunk=min_chunk, mode=mode)
-
-    def exact_time(p: ChunkParams) -> float:
-        # honest number for integer params: exact sizes, round core
-        return float(simulate_round_core(
-            bw, rtt_a, throttle_t, throttle_bw, jnp.int32(0),
-            ChunkArrays.from_params(p), file_f,
-            mode=mode, config=SimConfig(),
-        ).total_time)
-
-    t_final = exact_time(params)
-    # never-worse guarantee holds on the EXACT metric too, not just the
-    # relaxed loss: rounding best_z can cross a round-count jump, so fall
-    # back to the init point if the polished integer params lost to it
-    init_params = ChunkParams(
-        initial_chunk=max(int(round(init[0])), min_chunk),
-        large_chunk=max(int(round(init[1])), min_chunk),
-        min_chunk=min_chunk, mode=mode)
-    t_init = exact_time(init_params)
-    if t_init < t_final:
-        params, t_final = init_params, t_init
-    # grad w.r.t. (C, L) via the chain rule through the softplus-free
-    # floor+exp map: dT/dC = dT/dz0 / exp(z0) etc.
-    _, g = vg(best_z, bw, rtt_a, throttle_t, throttle_bw)
-    g = np.asarray(g, np.float64)
-    final_grad = (g[0] / max(float(np.exp(best_z[0])), 1e-30),
-                  g[1] / max(float(np.exp(best_z[1])), 1e-30))
-    return GradTuneResult(
-        params=params,
-        predicted_time=t_final,
-        loss_history=history,
-        final_grad=(float(final_grad[0]), float(final_grad[1])),
-    )
+    vg_args = (bw, rtt_a, throttle_t, throttle_bw)
+    z0 = _z_init(init, min_chunk, l_floor)
+    best_z, history = _adam_descend(vg, z0, steps, lr, args=vg_args)
+    return _finish_grad_tune(
+        vg, vg_args, best_z, history, init, min_chunk, l_floor, mode,
+        bw, rtt_a, throttle_t, throttle_bw, file_f)

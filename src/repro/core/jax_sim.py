@@ -70,7 +70,6 @@ Fig. 2/3 scenario suite).
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -103,6 +102,13 @@ class SimConfig(NamedTuple):
 
     max_iters: int = 100_000
     jitter: float = 0.0  # lognormal sigma per chunk; 0 = deterministic
+    #: lognormal sigma applied ONCE per simulation to every server's RTT
+    #: (keyed on the traced seed, decorrelated from the per-chunk stream).
+    #: Monte-Carlo averaging over seeds with ``rtt_jitter > 0`` randomizes
+    #: where the (C, L) round-count jumps fall, which is what lets the
+    #: MC-gradient tuner (``repro.core.online``) see RTT amortization as a
+    #: smooth slope instead of a flat plateau between jumps.
+    rtt_jitter: float = 0.0
     #: trip count of the ``engine="scan"`` core (static scan length).  A
     #: round moves at least ``large_chunk`` bytes, so ``max_rounds >=
     #: ceil(file_size / L) + 2`` always suffices; steps past completion
@@ -229,6 +235,20 @@ def _make_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
     return cond, body
 
 
+def _apply_rtt_jitter(rtt: jax.Array, seed, cfg: SimConfig) -> jax.Array:
+    """Scale every server's RTT by a mean-1 lognormal factor, once per
+    simulation.  Keyed on a ``fold_in`` of the traced seed so the draw is
+    independent of the per-chunk bandwidth-jitter stream (which starts
+    from ``PRNGKey(seed)`` and splits).  A pure element-wise transform of
+    a traced input — vmappable and reverse-differentiable like the rest
+    of the scan core."""
+    if cfg.rtt_jitter <= 0.0:
+        return rtt
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), 0x7772)
+    noise = jax.random.normal(key, rtt.shape)
+    return rtt * jnp.exp(noise * cfg.rtt_jitter - 0.5 * cfg.rtt_jitter**2)
+
+
 def _init_state(n: int, seed) -> _State:
     return _State(
         t_free=jnp.zeros((n,), jnp.float32),
@@ -280,11 +300,12 @@ def simulate_core(
     """
     state = _init_state(bandwidth.shape[0], seed)
     file_size = jnp.asarray(file_size, jnp.float32)
+    rtt = _apply_rtt_jitter(rtt.astype(jnp.float32), seed, config)
     cond, body = _make_step(chunk, mode, config, file_size)
     final, *_ = jax.lax.while_loop(
         cond, body,
         (state, bandwidth.astype(jnp.float32), throttle_t.astype(jnp.float32),
-         throttle_bw.astype(jnp.float32), rtt.astype(jnp.float32)),
+         throttle_bw.astype(jnp.float32), rtt),
     )
     return _result(final)
 
@@ -405,6 +426,7 @@ def simulate_round_core(
     :func:`simulate_core`; ``iters`` counts rounds, not events."""
     state = _init_state(bandwidth.shape[0], seed)
     file_size = jnp.asarray(file_size, jnp.float32)
+    rtt = _apply_rtt_jitter(rtt.astype(jnp.float32), seed, config)
     step = _make_round_step(chunk, mode, config, file_size)
 
     def body(args):
@@ -419,7 +441,7 @@ def simulate_round_core(
     final, *_ = jax.lax.while_loop(
         cond, body,
         (state, bandwidth.astype(jnp.float32), throttle_t.astype(jnp.float32),
-         throttle_bw.astype(jnp.float32), rtt.astype(jnp.float32)),
+         throttle_bw.astype(jnp.float32), rtt),
     )
     return _result(final)
 
@@ -453,7 +475,7 @@ def simulate_scan_core(
     bw0 = bandwidth.astype(jnp.float32)
     tt = throttle_t.astype(jnp.float32)
     tb = throttle_bw.astype(jnp.float32)
-    rt = rtt.astype(jnp.float32)
+    rt = _apply_rtt_jitter(rtt.astype(jnp.float32), seed, config)
 
     def scan_body(st, _):
         return step(st, bw0, tt, tb, rt), None

@@ -36,15 +36,12 @@ auto parameter sharding).
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.distributed.context import constrain
 from repro.models.common import ModelConfig
 from repro.models.layers import apply_norm
 from repro.models.transformer import _apply_block, _positions_embed, program_for

@@ -8,7 +8,6 @@ padding is exact), and runs one pallas_call per head block.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

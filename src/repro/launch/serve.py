@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs, reduced_config
 from repro.models.common import init_params
-from repro.models.transformer import forward, init_cache, model_specs
+from repro.models.transformer import init_cache, model_specs
 from repro.serve.step import make_serve_step
 
 __all__ = ["main", "generate"]

@@ -19,7 +19,6 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.context import active_ctx
 from repro.models.common import ParamSpec
 
 __all__ = ["AdamWConfig", "adamw_init", "adamw_apply", "opt_state_specs",

@@ -28,7 +28,19 @@ from typing import Optional, Sequence
 from repro.core.chunking import ChunkParams, default_chunk_params, next_chunk_size
 from repro.core.throughput import make_estimator
 
-__all__ = ["Replica", "TransferReport", "MDTPClient", "fetch_blob"]
+__all__ = ["Replica", "TransferReport", "MDTPClient", "NoTelemetryError",
+           "fetch_blob"]
+
+
+class NoTelemetryError(RuntimeError):
+    """``retune()`` had no usable observations to re-plan from (no
+    completed fetch yet, or every replica failed/went unobserved).
+
+    A dedicated type so callers that tolerate missing telemetry (the
+    checkpoint-restore wave loop) don't have to catch blanket
+    ``RuntimeError`` — which would also swallow real failures like
+    jax's ``XlaRuntimeError`` from the fused sweep itself.
+    """
 
 
 @dataclass(frozen=True)
@@ -50,6 +62,9 @@ class TransferReport:
     requests_per_replica: dict
     failed_replicas: list
     refetched_ranges: int
+    #: number of mid-transfer tuner adoptions (``fetch(tuner=...)``) — 0
+    #: for un-tuned transfers.
+    retunes: int = 0
     #: final per-replica estimator values (bytes/s; 0 = never observed) —
     #: the live inputs the autotuner re-tunes chunk sizes from.
     observed_throughputs: dict = field(default_factory=dict)
@@ -141,6 +156,7 @@ class MDTPClient:
         ewma_alpha: float = 0.5,
         retry_after: float = 0.0,
         max_failures: int = 3,
+        tuner=None,
     ):
         self.replicas = list(replicas)
         self._params_arg = params
@@ -148,6 +164,10 @@ class MDTPClient:
         self._alpha = ewma_alpha
         self.retry_after = retry_after
         self.max_failures = max_failures
+        #: default online tuner (``repro.core.online`` contract: an object
+        #: with ``update(telemetry) -> ChunkParams | None``) applied to
+        #: every ``fetch`` unless overridden per call.
+        self.tuner = tuner
         #: report of the most recent ``fetch`` (None before the first one).
         self.last_report: Optional[TransferReport] = None
 
@@ -171,7 +191,7 @@ class MDTPClient:
         from repro.core.autotune import autotune_chunk_params
 
         if self.last_report is None:
-            raise RuntimeError("retune() needs a completed fetch() first")
+            raise NoTelemetryError("retune() needs a completed fetch() first")
         # Replicas with no sample (failed / never dispatched) are excluded,
         # mirroring how fetch() retires them — a 0-throughput entry would
         # otherwise dominate every simulated grid point.  RTTs stay aligned
@@ -185,23 +205,52 @@ class MDTPClient:
             rtt = self.last_report.observed_rtts.get(r.name, 0.0)
             rtts.append(rtt if rtt > 0.0 else self.DEFAULT_RTT)
         if not bw:
-            raise RuntimeError("no throughput observations to retune from")
+            raise NoTelemetryError("no throughput observations to retune from")
         autotune_kw.setdefault("rtt", rtts)
         res = autotune_chunk_params(bw, file_size=int(file_size),
                                     **autotune_kw)
         self._params_arg = res.params
         return res
 
+    def adopt_params(self, params: ChunkParams) -> None:
+        """Adopt chunk geometry for subsequent transfers.
+
+        The public hook for external re-tuning loops (e.g. the
+        checkpoint-restore wave loop feeding an online tuner between
+        waves); ``fetch(tuner=...)`` and ``retune`` adopt internally.
+        """
+        self._params_arg = params
+
     def _make_conn(self, replica: Replica) -> "_Conn":
         """Connection factory — subclasses may translate offsets (the data
         pipeline's virtual-blob client)."""
         return _Conn(replica)
 
-    async def fetch(self, size: int, sink=None) -> tuple[bytearray, TransferReport]:
+    async def fetch(self, size: int, sink=None, *, offset: int = 0,
+                    tuner=None, tune_interval_bytes: Optional[int] = None,
+                    ) -> tuple[bytearray, TransferReport]:
         """Fetch ``size`` bytes.  ``sink(start, data)`` (if given) receives
         chunks as they land (streaming to disk); otherwise an in-memory
-        buffer is assembled."""
-        params = self._params_arg or default_chunk_params(size)
+        buffer is assembled.
+
+        ``offset`` shifts every byte-range request (and the ``sink`` start
+        offsets) by a constant — a wave of a larger blob fetches
+        ``[offset, offset + size)`` while the internal cursor/pool stay
+        0-based (the checkpoint-restore wave loop uses this).
+
+        ``tuner`` (default: the client's ``tuner``) re-tunes chunk
+        geometry mid-transfer: every ``tune_interval_bytes`` delivered
+        bytes the client snapshots live telemetry (per-replica estimator
+        values + measured RTTs, achieved window throughput) into a
+        ``repro.core.online.Telemetry`` and adopts whatever ``ChunkParams``
+        the tuner returns — workers pick up the new geometry on their next
+        allocation.  The tuner runs in a thread-pool executor so its
+        (possibly jit-compiling) sweep never stalls the event loop; at
+        most one update is in flight at a time.  Adopted params persist on
+        the client for subsequent transfers, and ``report.retunes`` counts
+        the adoptions.
+        """
+        params_box = [self._params_arg or default_chunk_params(size)]
         n = len(self.replicas)
         est = [make_estimator(self._estimator, self._alpha) for _ in range(n)]
         buf = bytearray(size) if sink is None else None
@@ -219,6 +268,56 @@ class MDTPClient:
         lock = asyncio.Lock()
         done_bytes = 0
         t0 = time.monotonic()
+
+        tuner = tuner if tuner is not None else self.tuner
+        retunes = 0
+        # telemetry cadence: a handful of updates per transfer by default,
+        # but never finer than a couple of large chunks' worth of signal
+        tune_every = tune_interval_bytes or max(
+            size // 8, 2 * params_box[0].large_chunk)
+        tune_state = {"bytes": 0, "t": t0, "busy": False, "task": None}
+
+        async def maybe_retune():
+            """Snapshot telemetry and let the tuner re-plan (at most one
+            update in flight — the trigger site claims the busy flag
+            BEFORE scheduling, so a second trigger can't race in between;
+            runs in an executor so jit compiles inside the tuner don't
+            stall the event loop)."""
+            nonlocal retunes
+            try:
+                try:
+                    from repro.core.online import Telemetry
+
+                    now = time.monotonic()
+                    window_bytes = done_bytes - tune_state["bytes"]
+                    window_t = max(now - tune_state["t"], 1e-9)
+                    telemetry = Telemetry(
+                        bandwidth=tuple(
+                            0.0 if r.name in failed else float(est[i].value)
+                            for i, r in enumerate(self.replicas)),
+                        rtt=tuple(float(x) for x in rtt_min),
+                        remaining_bytes=float(size - done_bytes),
+                        measured_throughput=window_bytes / window_t,
+                        elapsed=now - t0,
+                    )
+                    loop = asyncio.get_running_loop()
+                    new = await loop.run_in_executor(None, tuner.update,
+                                                     telemetry)
+                except asyncio.CancelledError:
+                    raise
+                except Exception:
+                    # a failing tuner path (the lazy online import in a
+                    # jax-less deployment, a bad jit compile, a tuner
+                    # bug) must never fail a transfer whose bytes are
+                    # flowing fine — keep the current geometry, carry on
+                    new = None
+                tune_state["bytes"] = done_bytes
+                tune_state["t"] = time.monotonic()
+                if new is not None:
+                    params_box[0] = new
+                    retunes += 1
+            finally:
+                tune_state["busy"] = False
 
         # bytes currently on the wire somewhere; a worker that sees no
         # unassigned bytes must NOT exit while another worker still owes a
@@ -266,8 +365,8 @@ class MDTPClient:
                     # and this worker must be alive to take it over
                     await asyncio.sleep(0.005)
                     continue
-                want = next_chunk_size(i, [e.value for e in est], params,
-                                       remaining)
+                want = next_chunk_size(i, [e.value for e in est],
+                                       params_box[0], remaining)
                 if want <= 0:
                     break
                 start, length = await allocate(want)
@@ -276,7 +375,8 @@ class MDTPClient:
                     continue
                 t_req = time.monotonic()
                 try:
-                    data = await conn.fetch_range(start, start + length - 1)
+                    data = await conn.fetch_range(
+                        offset + start, offset + start + length - 1)
                 except (ConnectionError, OSError, asyncio.IncompleteReadError):
                     async with lock:
                         heapq.heappush(pool, (start, length))
@@ -306,7 +406,7 @@ class MDTPClient:
                     if sink is None:
                         buf[start:start + len(data)] = data
                     else:
-                        sink(start, data)
+                        sink(offset + start, data)
                 except BaseException:
                     # e.g. the user-supplied sink raised (disk full): the
                     # bytes were NOT delivered — reclaim the whole range
@@ -325,17 +425,58 @@ class MDTPClient:
                         # inflight decrement so no peer can exit between
                         heapq.heappush(
                             pool, (start + len(data), length - len(data)))
+                if (tuner is not None and done_bytes < size
+                        and not tune_state["busy"]
+                        and done_bytes - tune_state["bytes"] >= tune_every):
+                    # fire-and-forget: the triggering worker keeps
+                    # fetching while the tuner (possibly jit-compiling)
+                    # runs in the executor.  The busy flag is claimed
+                    # HERE, synchronously, so no second worker can
+                    # schedule a competing task (and overwrite the task
+                    # ref the end-of-fetch drain awaits) before this one
+                    # starts running.
+                    tune_state["busy"] = True
+                    tune_state["task"] = asyncio.ensure_future(
+                        maybe_retune())
             await conn.close()
 
-        await asyncio.gather(*(worker(i) for i in range(len(self.replicas))))
+        try:
+            await asyncio.gather(*(worker(i)
+                                   for i in range(len(self.replicas))))
+        except BaseException:
+            task = tune_state["task"]
+            if task is not None and not task.done():
+                task.cancel()
+            raise
+        t_end = time.monotonic()
+        # settle an in-flight tuner update BEFORE any raise, so no task
+        # outlives the event loop: drain it on success (its adoption
+        # isn't lost; transfer time excludes it), cancel it on failure
+        task = tune_state["task"]
+        if task is not None and not task.done():
+            if done_bytes == size:
+                await task
+            else:
+                task.cancel()
+                try:
+                    await task
+                except asyncio.CancelledError:
+                    pass
         if done_bytes != size:
             raise IOError(
                 f"transfer incomplete: {done_bytes}/{size} bytes "
                 f"(failed replicas: {failed})")
+        if retunes > 0:
+            # adaptation persists: the next fetch starts from the tuned
+            # geometry instead of re-learning from the defaults.  Guarded
+            # on actual adoptions — a tuner that never fired must not pin
+            # this transfer's size-derived defaults onto future ones.
+            self._params_arg = params_box[0]
         report = TransferReport(
-            total_bytes=size, elapsed=time.monotonic() - t0,
+            total_bytes=size, elapsed=t_end - t0,
             bytes_per_replica=bytes_per, requests_per_replica=reqs_per,
             failed_replicas=failed, refetched_ranges=refetched,
+            retunes=retunes,
             observed_throughputs={
                 r.name: float(est[i].value)
                 for i, r in enumerate(self.replicas)

@@ -15,10 +15,9 @@ checkpoint mirror in tests/examples.
 from __future__ import annotations
 
 import os
-import socket
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 

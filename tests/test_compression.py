@@ -13,7 +13,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim.compression import dequantize_int8, quantize_int8
 

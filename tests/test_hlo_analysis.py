@@ -1,8 +1,6 @@
 """Unit + property tests for the roofline walker (the measurement tool
 every §Roofline/§Perf number flows through)."""
 
-import math
-
 import pytest
 
 pytest.importorskip("hypothesis")

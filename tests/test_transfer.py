@@ -33,22 +33,30 @@ def test_roundtrip_integrity(blob):
     try:
         replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
         params = ChunkParams(initial_chunk=256 * 1024, large_chunk=MB)
-        data, report = fetch_blob(replicas, len(blob), params=params)
-        assert hashlib.sha256(data).hexdigest() == hashlib.sha256(blob).hexdigest()
-        # every mirror contributed, and the 4x-faster mirror beat the
-        # slowest.  (Strict ordering of the top two is NOT asserted: on a
-        # loaded single-core CI box the wall-clock throughput estimates of
-        # the 60 vs 120 MB/s mirrors can transiently invert — the
-        # steady-state proportionality claim is covered deterministically
-        # by the simulator tests.)
-        contributions = [report.bytes_per_replica[r.name] for r in replicas]
-        assert all(c > 0 for c in contributions)
-        assert contributions[2] > contributions[0]
-        assert report.failed_replicas == []
-        # per-replica RTT was measured (connect + header turnaround):
-        # every contributing mirror has a positive, sane sample
-        for r in replicas:
-            assert 0.0 < report.observed_rtts[r.name] < 5.0
+        # the proportionality claim is wall-clock-sensitive: on a loaded
+        # CI box even the 4x spread can transiently invert, so allow one
+        # retry for that assertion alone (integrity stays strict per run;
+        # the steady-state claim is covered deterministically by the
+        # simulator tests)
+        for attempt in range(2):
+            data, report = fetch_blob(replicas, len(blob), params=params)
+            assert hashlib.sha256(data).hexdigest() == \
+                hashlib.sha256(blob).hexdigest()
+            # every mirror contributed, and the 4x-faster mirror beat the
+            # slowest.  (Strict ordering of the top two is NOT asserted:
+            # the 60 vs 120 MB/s estimates invert too easily.)
+            contributions = [report.bytes_per_replica[r.name]
+                             for r in replicas]
+            assert all(c > 0 for c in contributions)
+            assert report.failed_replicas == []
+            # per-replica RTT was measured (connect + header turnaround):
+            # every contributing mirror has a positive, sane sample
+            for r in replicas:
+                assert 0.0 < report.observed_rtts[r.name] < 5.0
+            if contributions[2] > contributions[0]:
+                break
+        else:
+            assert contributions[2] > contributions[0]
     finally:
         for s in servers:
             s.stop()
@@ -81,6 +89,32 @@ def test_retune_uses_measured_rtts():
     low_lat = autotune_chunk_params(
         [50.0 * MB, 10.0 * MB], rtt=0.001, file_size=2 * GB)
     assert res.predicted_time > low_lat.predicted_time
+
+
+def test_retune_all_dead_replica_telemetry():
+    """A transfer whose every replica failed (or never produced a sample)
+    must make retune raise — and leave the adopted params untouched — not
+    feed a zero-bandwidth fleet into the simulated sweep, where any grid
+    point would 'win' with an infinite predicted time."""
+    from repro.transfer.client import MDTPClient, Replica, TransferReport
+
+    GB = 1024 * MB
+    replicas = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b")]
+    before = ChunkParams(initial_chunk=2 * MB, large_chunk=20 * MB)
+    client = MDTPClient(replicas, params=before)
+    client.last_report = TransferReport(
+        total_bytes=1, elapsed=1.0, bytes_per_replica={},
+        requests_per_replica={}, failed_replicas=["h0:1", "h1:2"],
+        refetched_ranges=0,
+        observed_throughputs={"h0:1": 0.0, "h1:2": 0.0},
+        observed_rtts={"h0:1": 0.02, "h1:2": 0.02})
+    with pytest.raises(RuntimeError, match="no throughput"):
+        client.retune(2 * GB)
+    assert client._params_arg == before
+    # a single live replica is enough again
+    client.last_report.observed_throughputs["h1:2"] = 40.0 * MB
+    res = client.retune(2 * GB)
+    assert client._params_arg == res.params
 
 
 def test_adaptive_chunks_scale_with_throughput(blob):
