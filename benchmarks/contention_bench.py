@@ -1,0 +1,129 @@
+"""Fleet-contention replay: shared-fleet manager vs independent greedy
+clients.
+
+``repro.transfer.TransferManager`` packs each transfer's rounds into
+*residual* replica capacity and re-tunes geometry as the active set
+changes.  The pre-manager status quo — what this benchmark calls
+``greedy`` — is K independent ``MDTPClient``s that each run the one-shot
+fused grid tune against the FULL fleet at their own start and ride those
+params to the end, oblivious to the other K-1 transfers consuming the
+same mirrors.
+
+The replay mirrors contention the way the simulator stack does
+(``repro.core.scenarios.contention_traces``): each mirror's bandwidth is
+TCP-fair split across the active transfers, and the trace advances in
+*phases* — maximal intervals with a constant active set.  Per phase,
+every active transfer's completion rate comes from the round-synchronous
+device simulator under its current (C, L) and its fair share; phases end
+at the next arrival or first completion.  The manager policy re-plans
+each phase with ONE fused ``autotune_batch`` call (a row per active
+transfer: its residual share and its remaining bytes) — the same vmapped
+lattice ``contention_sweep`` exposes as a per-k ladder.
+
+Derived column = makespan (aggregate completion: seconds until the LAST
+transfer finishes); ``mean=`` in the extras is the mean per-transfer
+completion time and ``vs_greedy=`` the manager's makespan improvement.
+``us_per_call`` is the WARM wall-clock of one full policy replay (all
+sweeps/simulations jit-cached — the steady-state planning cost the CI
+perf guard compares at 3x tolerance).  Rows land in ``BENCH_online.json``
+via ``python -m benchmarks.run --json BENCH_online.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .common import emit  # noqa: F401  (also wires sys.path to src/)
+
+from repro.core.autotune import autotune_batch, autotune_chunk_params
+from repro.core.jax_sim import simulate_transfer
+from repro.core.scenarios import ContentionTrace, contention_traces
+
+
+def replay(trace: ContentionTrace, policy: str):
+    """Run one policy through one trace.
+
+    Returns ``(makespan_s, mean_completion_s, retunes, wall_s)``.
+    """
+    assert policy in ("greedy", "manager")
+    bw = [float(s.bandwidth) for s in trace.servers]
+    rtt = [float(s.rtt) for s in trace.servers]
+    k_total = len(trace.sizes)
+    t_wall = time.perf_counter()
+
+    if policy == "greedy":
+        # What an unmanaged client does today: one fused solo tune at
+        # start, inside the timed window (it IS greedy's planning cost —
+        # the manager branch must not pay it, its us_per_call feeds the
+        # CI perf guard)
+        greedy_params = [autotune_chunk_params(bw, rtt, int(s)).params
+                         for s in trace.sizes]
+
+    remaining = [float(s) for s in trace.sizes]
+    completion = [0.0] * k_total
+    now, retunes = 0.0, 0
+    while any(r > 1e-6 for r in remaining):
+        active = [j for j in range(k_total)
+                  if trace.arrivals[j] <= now + 1e-9 and remaining[j] > 1e-6]
+        if not active:
+            now = min(trace.arrivals[j] for j in range(k_total)
+                      if remaining[j] > 1e-6)
+            continue
+        k = len(active)
+        share = [b / k for b in bw]
+        if policy == "manager":
+            # one fused vmapped sweep re-plans every active transfer for
+            # its residual share and ACTUAL remaining bytes
+            res = autotune_batch([share] * k, rtt,
+                                 [remaining[j] for j in active])
+            params = {j: res[i].params for i, j in enumerate(active)}
+            retunes += k
+        else:
+            params = {j: greedy_params[j] for j in active}
+        t_full = {
+            j: float(simulate_transfer(share, rtt, remaining[j], params[j],
+                                       engine="round").total_time)
+            for j in active
+        }
+        pending = [trace.arrivals[j] for j in range(k_total)
+                   if trace.arrivals[j] > now + 1e-9 and remaining[j] > 1e-6]
+        dt = min(min(t_full.values()),
+                 (min(pending) - now) if pending else float("inf"))
+        for j in active:
+            remaining[j] = max(remaining[j] * (1.0 - dt / t_full[j]), 0.0)
+            if remaining[j] <= 1e-6:
+                remaining[j] = 0.0
+                completion[j] = now + dt
+        now += dt
+    return (max(completion), float(np.mean(completion)), retunes,
+            time.perf_counter() - t_wall)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="accepted for driver symmetry; the traces are "
+                         "already smoke-sized (a few seconds warm)")
+    ap.parse_args(argv)
+
+    for trace in contention_traces():
+        # warm pass compiles every sweep/sim shape; the timed pass is the
+        # steady-state planning cost the perf guard compares
+        replay(trace, "greedy")
+        replay(trace, "manager")
+        t_greedy, mean_g, _, wall_g = replay(trace, "greedy")
+        emit(f"contention/{trace.name}/greedy", wall_g * 1e6,
+             f"{t_greedy:.2f}", f"mean={mean_g:.2f}",
+             f"transfers={len(trace.sizes)}")
+        t_mgr, mean_m, retunes, wall_m = replay(trace, "manager")
+        gain = (t_greedy - t_mgr) / t_greedy
+        emit(f"contention/{trace.name}/manager", wall_m * 1e6,
+             f"{t_mgr:.2f}", f"mean={mean_m:.2f}", f"retunes={retunes}",
+             f"vs_greedy={gain * 100:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

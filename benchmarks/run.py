@@ -45,6 +45,16 @@ CHECK_ROW_PREFIXES = (
     "autotune/engine_scan/",
 )
 
+#: everything ``--check`` guards: per committed artifact, the smoke bench
+#: that regenerates comparable rows and the steady-state prefixes to
+#:  compare.  ``contention/*`` rows time a WARM full-policy replay
+#: (fused sweeps + round-core sims, all jit-cached), so they are
+#: steady-state signal like the autotune rows.
+CHECK_SUITES = (
+    ("BENCH_autotune.json", "autotune", CHECK_ROW_PREFIXES),
+    ("BENCH_online.json", "contention", ("contention/",)),
+)
+
 
 def _section(title: str) -> None:
     print(f"# === {title} ===", flush=True)
@@ -64,8 +74,9 @@ def _merged_rows(path: str, new_rows: list[dict]) -> list[dict]:
     return merged + [r for r in new_rows if r["name"] in by_name]
 
 
-def perf_check(path: str) -> int:
-    """Run the smoke sweep; compare steady-state rows against ``path``."""
+def _run_check_suite(path: str, section: str, prefixes) -> int:
+    """One guard suite: re-run ``section``'s smoke bench and compare its
+    steady-state rows (by ``prefixes``) against the artifact at ``path``."""
     from .common import emitted_rows, reset_rows
 
     try:
@@ -77,14 +88,20 @@ def perf_check(path: str) -> int:
     base = {r["name"]: float(r["us_per_call"]) for r in committed["rows"]}
 
     reset_rows()
-    from . import autotune_bench
-    _section("perf-check smoke sweep")
-    autotune_bench.main(["--quick"])
+    _section(f"perf-check smoke sweep ({section})")
+    if section == "autotune":
+        from . import autotune_bench
+        autotune_bench.main(["--quick"])
+    elif section == "contention":
+        from . import contention_bench
+        contention_bench.main(["--quick"])
+    else:
+        raise ValueError(f"unknown check section: {section!r}")
 
     compared, failures = 0, []
     for row in emitted_rows():
         name = row["name"]
-        if not any(name.startswith(p) for p in CHECK_ROW_PREFIXES):
+        if not any(name.startswith(p) for p in prefixes):
             continue
         ref = base.get(name, 0.0)
         if ref <= 0.0:
@@ -109,13 +126,28 @@ def perf_check(path: str) -> int:
     return 0
 
 
+def perf_check(path: str) -> int:
+    """CI perf guard over every suite in ``CHECK_SUITES``.
+
+    ``path`` overrides the FIRST suite's artifact (the historical
+    ``--check [PATH]`` contract); the remaining suites guard their
+    default artifacts.  Any suite failing (regressed row, unreadable
+    artifact, or no comparable rows) fails the whole check.
+    """
+    rc = 0
+    for i, (default_path, section, prefixes) in enumerate(CHECK_SUITES):
+        suite_path = path if i == 0 else default_path
+        rc |= _run_check_suite(suite_path, section, prefixes)
+    return rc
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-fidelity reps/sizes (slow)")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (fig2 fig3 fig4 fig5 table2 "
-                         "autotune online restore roofline)")
+                         "autotune online contention restore roofline)")
     ap.add_argument("--json", nargs="?", const="BENCH_autotune.json",
                     default=None, metavar="PATH",
                     help="also dump every emitted row as machine-readable "
@@ -173,6 +205,10 @@ def main(argv=None) -> None:
     run("online", lambda: online_bench.main(
         [] if args.full else ["--quick"]))
 
+    from . import contention_bench
+    run("contention", lambda: contention_bench.main(
+        [] if args.full else ["--quick"]))
+
     # Framework-layer benches (present once the substrates land).
     try:
         from . import restore_bench
@@ -209,6 +245,8 @@ def main(argv=None) -> None:
             pass
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
+            f.write("\n")       # keep the committed artifact newline-
+            # terminated (tools/format_check.py gates this repo-wide)
         print(f"# wrote {args.json} ({len(payload['rows'])} rows)",
               flush=True)
 

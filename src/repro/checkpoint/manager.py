@@ -28,11 +28,11 @@ Fault-tolerance inventory (tested in tests/test_checkpoint.py):
 from __future__ import annotations
 
 import bisect
+import contextlib
 import json
 import os
 import shutil
 import threading
-import time
 from dataclasses import dataclass
 from typing import Any, Optional, Sequence
 
@@ -272,6 +272,7 @@ def restore_checkpoint(
     replicas: Optional[Sequence[Replica]] = None,
     tuner: Any = None,
     wave_bytes: Optional[int] = None,
+    manager: Any = None,
 ) -> tuple[Any, int]:
     """Restore (state, step).
 
@@ -297,6 +298,19 @@ def restore_checkpoint(
     ``retune`` (skipped quietly when a wave produced no usable
     observations).  A single-fetch restore (no ``wave_bytes``) instead
     passes the tuner to the client's in-transfer telemetry hook.
+
+    ``manager`` (a ``repro.transfer.TransferManager``) routes the
+    manifest and blob fetches through a shared fleet: per-replica
+    in-flight caps apply across every transfer the manager runs,
+    telemetry aggregates into its fleet model, residual-capacity packing
+    shapes this restore's rounds, and the geometry this restore adopts
+    warm-starts the manager's next transfer.  With a manager that owns a
+    tuner (and no explicit ``tuner=``), adaptation happens through the
+    manager's shared in-fetch hook and the between-wave grid re-tune is
+    skipped — one owner for reward attribution.  An explicit ``tuner=``
+    always wins: the manager's hook is silenced for this restore and the
+    wave-boundary updates feed the given tuner exactly as without a
+    manager.
     """
     if step is None:
         step = latest_step(root)
@@ -310,53 +324,75 @@ def restore_checkpoint(
                 for r in replicas]
         import asyncio
 
+        @contextlib.asynccontextmanager
+        async def client_for(reps):
+            """A transfer client for this restore: fleet-managed (shared
+            caps/telemetry/params) when a manager is given, standalone
+            otherwise.  An explicit ``tuner=`` silences the manager's
+            in-fetch hook so wave-boundary updates are the only feed."""
+            if manager is not None:
+                kw = {"tuner": None} if tuner is not None else {}
+                async with manager.session(replicas=reps, **kw) as c:
+                    yield c
+            else:
+                yield MDTPClient(reps)
+
+        # the between-wave fused grid re-tune runs only when nobody else
+        # owns adaptation (no explicit tuner, no manager-shared tuner)
+        grid_retune = tuner is None and getattr(manager, "tuner", None) is None
+
         async def run():
-            mclient = MDTPClient([Replica(r.host, r.port, r.path + "/" + _MANIFEST)
-                                  for r in base])
-            msize = await mclient.blob_size()
-            mbuf, _ = await mclient.fetch(msize)
+            async with client_for(
+                    [Replica(r.host, r.port, r.path + "/" + _MANIFEST)
+                     for r in base]) as mclient:
+                msize = await mclient.blob_size()
+                mbuf, _ = await mclient.fetch(msize)
             manifest = json.loads(bytes(mbuf).decode())
             stream = _StreamingRestore(manifest, like, shardings)
-            dclient = MDTPClient([Replica(r.host, r.port, r.path + "/" + _DATA)
-                                  for r in base])
             total = int(manifest["total_bytes"])
-            if not wave_bytes or wave_bytes >= total:
-                await dclient.fetch(total, sink=stream.sink, tuner=tuner)
-                return stream.finish()
-            pos = 0
-            while pos < total:
-                n = min(int(wave_bytes), total - pos)
-                _, report = await dclient.fetch(n, sink=stream.sink,
-                                                offset=pos)
-                pos += n
-                if pos >= total:
-                    break
-                next_wave = min(int(wave_bytes), total - pos)
-                if tuner is None:
-                    try:
-                        dclient.retune(next_wave)
-                    except NoTelemetryError:
-                        pass    # wave yielded no live observations; a
-                        # real sweep failure (XlaRuntimeError) propagates
-                else:
-                    # per-wave telemetry snapshot from the wave's report.
-                    # The tuner is fed HERE only (not via the client's
-                    # in-fetch hook): one update per wave keeps a
-                    # bandit's reward attributed to the params the whole
-                    # wave actually ran under.
-                    from repro.core.online import Telemetry
+            async with client_for(
+                    [Replica(r.host, r.port, r.path + "/" + _DATA)
+                     for r in base]) as dclient:
+                if not wave_bytes or wave_bytes >= total:
+                    await dclient.fetch(total, sink=stream.sink, tuner=tuner)
+                    return stream.finish()
+                pos = 0
+                while pos < total:
+                    n = min(int(wave_bytes), total - pos)
+                    _, report = await dclient.fetch(n, sink=stream.sink,
+                                                    offset=pos)
+                    pos += n
+                    if pos >= total:
+                        break
+                    next_wave = min(int(wave_bytes), total - pos)
+                    if tuner is None:
+                        if not grid_retune:
+                            continue    # the manager's shared tuner owns
+                            # adaptation via the in-fetch hook
+                        try:
+                            dclient.retune(next_wave)
+                        except NoTelemetryError:
+                            pass    # wave yielded no live observations; a
+                            # real sweep failure (XlaRuntimeError) propagates
+                    else:
+                        # per-wave telemetry snapshot from the wave's report.
+                        # The tuner is fed HERE only (not via the client's
+                        # in-fetch hook): one update per wave keeps a
+                        # bandit's reward attributed to the params the whole
+                        # wave actually ran under.
+                        from repro.core.online import Telemetry
 
-                    try:
-                        new = tuner.update(Telemetry.from_report(
-                            report, dclient.replicas, next_wave))
-                    except Exception:
-                        # same contract as the client's in-transfer hook:
-                        # a failing tuner must never fail a restore whose
-                        # waves are streaming fine — keep the current
-                        # geometry and carry on
-                        new = None
-                    if new is not None:
-                        dclient.adopt_params(new)
+                        try:
+                            new = tuner.update(Telemetry.from_report(
+                                report, dclient.replicas, next_wave))
+                        except Exception:
+                            # same contract as the client's in-transfer hook:
+                            # a failing tuner must never fail a restore whose
+                            # waves are streaming fine — keep the current
+                            # geometry and carry on
+                            new = None
+                        if new is not None:
+                            dclient.adopt_params(new)
             return stream.finish()
 
         return asyncio.run(run()), step

@@ -57,6 +57,7 @@ __all__ = [
     "autotune_chunk_params",
     "autotune_batch",
     "sweep_scenarios",
+    "contention_sweep",
     "tune_chunk_params_grad",
 ]
 
@@ -297,6 +298,48 @@ def autotune_batch(
             predicted_times=[float(t) for t in row],
         ))
     return results
+
+
+def contention_sweep(
+    bandwidth: Sequence[float],
+    rtt,
+    file_size,
+    max_transfers: int = 4,
+    ks: Sequence[int] | None = None,
+    grid: Sequence[tuple[int, int]] | None = None,
+    jitter: float = 0.0,
+    n_seeds: int = 1,
+    mode: str = "proportional",
+    engine: str | None = None,
+) -> dict[int, AutotuneResult]:
+    """Per-contention-level chunk tuning: the (C, L) ladder a fleet
+    scheduler adopts as concurrent transfers arrive and drain.
+
+    Scenario ``k`` is the fleet under a fair ``k``-way split — every
+    replica's bandwidth divided by ``k``, RTTs unchanged (latency is
+    per-path, not per-share) — which is how the simulator mirrors K
+    transfers contending for shared mirrors (TCP-fair uplink sharing).
+    The whole (k, C, L, seed) lattice is ONE fused ``vmap(vmap(vmap))``
+    device call via :func:`sweep_scenarios`; the result maps each active
+    count to its tuned params (``repro.transfer.TransferManager`` keeps
+    this as its ``contention_ladder`` and warm-starts arriving transfers
+    from it).
+
+    ``file_size`` may be a scalar (same remaining bytes at every level)
+    or one entry per ``k``.
+    """
+    ks = list(ks if ks is not None else range(1, max_transfers + 1))
+    if not ks or any(k < 1 for k in ks):
+        raise ValueError(f"contention levels must be >= 1, got {ks}")
+    grid = list(grid or default_grid())
+    bw = np.asarray(bandwidth, np.float64)
+    if bw.ndim != 1:
+        raise ValueError(f"bandwidth must be [N], got shape {bw.shape}")
+    mat = np.stack([bw / k for k in ks])
+    results = autotune_batch(
+        mat, rtt, file_size, grid=grid, jitter=jitter, n_seeds=n_seeds,
+        mode=mode, engine=engine)
+    return dict(zip(ks, results))
 
 
 # --------------------------------------------------------------------------

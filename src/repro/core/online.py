@@ -70,6 +70,7 @@ from .autotune import (
 from .chunking import DEFAULT_MIN_CHUNK, ChunkParams
 from .jax_alloc import ChunkArrays
 from .jax_sim import SimConfig, _prep, simulate_scan_core
+from .throughput import rtt_corrected_bandwidth
 
 __all__ = [
     "Telemetry",
@@ -127,41 +128,31 @@ class Telemetry:
         canonical report→telemetry encoding (failed replica = 0.0 slot,
         positional full-fleet vectors, unmeasured RTT = 0.0), shared by
         the checkpoint-restore wave loop and any other batch consumer.
-        Duck-typed to avoid a core→transfer import."""
+        Bandwidths are RTT-bias corrected from the report's measured
+        RTTs and mean served chunk sizes (same contract as the client's
+        in-fetch snapshots — tuners always see wire rates, per-request
+        readings never leak through uncorrected).  Duck-typed to avoid a
+        core→transfer import."""
+        bandwidth = []
+        for r in replicas:
+            if r.name in report.failed_replicas:
+                bandwidth.append(0.0)
+                continue
+            b = float(report.observed_throughputs.get(r.name, 0.0))
+            reqs = report.requests_per_replica.get(r.name, 0)
+            mean_chunk = (report.bytes_per_replica.get(r.name, 0) / reqs
+                          if reqs > 0 else 0.0)
+            bandwidth.append(rtt_corrected_bandwidth(
+                b, float(report.observed_rtts.get(r.name, 0.0)),
+                mean_chunk))
         return cls(
-            bandwidth=tuple(
-                0.0 if r.name in report.failed_replicas
-                else float(report.observed_throughputs.get(r.name, 0.0))
-                for r in replicas),
+            bandwidth=tuple(bandwidth),
             rtt=tuple(float(report.observed_rtts.get(r.name, 0.0))
                       for r in replicas),
             remaining_bytes=float(remaining_bytes),
             measured_throughput=report.throughput,
             elapsed=report.elapsed,
         )
-
-
-def rtt_corrected_bandwidth(throughput: float, rtt: float,
-                            mean_chunk_bytes: float) -> float:
-    """Invert the per-request estimator's RTT bias.
-
-    A client-side estimator observes ``s / (rtt + s / bw)`` per request —
-    its elapsed window spans the whole request round-trip, so the reading
-    under-states the wire rate, badly for small chunks on high-RTT paths
-    (a 40 MB chunk at 70 MB/s behind 0.5 s RTT reads as ~37 MB/s).  With
-    the request RTT measured independently (``observed_rtts``) the line
-    rate is recoverable: ``bw = s / (s / v - rtt)``.  Tuners fed
-    corrected estimates re-plan against the path's actual capacity
-    instead of chasing the bias.  Returns ``throughput`` unchanged when
-    the correction is impossible (missing RTT/chunk data, or the implied
-    on-wire time is non-positive).
-    """
-    if throughput <= 0.0 or rtt <= 0.0 or mean_chunk_bytes <= 0.0:
-        return throughput
-    wire_time = mean_chunk_bytes / throughput - rtt
-    if wire_time <= 0.0:
-        return throughput
-    return mean_chunk_bytes / wire_time
 
 
 # --------------------------------------------------------------------------

@@ -22,6 +22,8 @@ Calibration notes live in EXPERIMENTS.md §Reproduction.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 from .simulator import ServerSpec
 
 __all__ = [
@@ -33,6 +35,11 @@ __all__ = [
     "with_added_latency",
     "with_throttled_fastest",
     "PAPER_FILE_SIZES",
+    "shared_bottleneck",
+    "with_fair_share",
+    "contention_matrix",
+    "ContentionTrace",
+    "contention_traces",
 ]
 
 MBPS = 1024 * 1024  # we quote server rates in MiB/s
@@ -98,6 +105,114 @@ def with_added_latency(
         else:
             out.append(s)
     return out
+
+
+# --------------------------------------------------------------------------
+# Multi-transfer contention (fleet-shared scheduling, TransferManager)
+# --------------------------------------------------------------------------
+#
+# MDTP's bin-packing frames each server as a capacity bin for ONE transfer
+# (§IV).  A managed fleet packs K concurrent transfers into the same bins;
+# the simulator-side mirror models contention as a fair k-way bandwidth
+# split per replica (TCP-fair sharing of each mirror's uplink), which is
+# what ``repro.core.autotune.contention_sweep`` vmaps over and what
+# ``benchmarks/contention_bench.py`` replays phase by phase.
+
+
+def shared_bottleneck(rtt: float = _DEFAULT_RTT,
+                      jitter: float = 0.0) -> list[ServerSpec]:
+    """Six replicas where ONE fast path carries most of the fleet:
+    aggregate ~140 MiB/s, 120 of it behind a single mirror.  Concurrent
+    transfers all lean on the same bottleneck — the worst case for
+    independent greedy clients that each plan as if they owned it."""
+    rates = [4, 4, 4, 4, 4, 120]
+    return [
+        ServerSpec(name=f"replica{i + 1}", bandwidth=r * MBPS, rtt=rtt,
+                   jitter=jitter)
+        for i, r in enumerate(rates)
+    ]
+
+
+def with_fair_share(servers: list[ServerSpec], k: int) -> list[ServerSpec]:
+    """The fleet as ONE of ``k`` concurrent transfers sees it: every
+    mirror's bandwidth (and throttle-profile rates) split ``k`` ways.
+    ``k = 1`` returns the servers unchanged."""
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    if k == 1:
+        return list(servers)
+    return [
+        ServerSpec(
+            name=s.name, bandwidth=s.bandwidth / k, rtt=s.rtt,
+            connect_latency=s.connect_latency,
+            profile=tuple((t, bw / k) for t, bw in s.profile),
+            jitter=s.jitter, fail_at=s.fail_at,
+            avail_up=s.avail_up, avail_down=s.avail_down,
+        )
+        for s in servers
+    ]
+
+
+def contention_matrix(servers: list[ServerSpec],
+                      ks: list[int]) -> list[list[float]]:
+    """``[len(ks), N]`` per-transfer bandwidth rows (row i = fair share
+    under ``ks[i]`` concurrent transfers) — the scenario-batch input for
+    ``sweep_scenarios`` / ``contention_sweep``."""
+    return [[s.bandwidth / k for s in servers] for k in ks]
+
+
+@dataclass(frozen=True)
+class ContentionTrace:
+    """K transfers contending for one fleet.
+
+    ``sizes[j]`` bytes for transfer j, arriving ``arrivals[j]`` seconds
+    after trace start.  Replayed phase-by-phase (a phase = a constant
+    active set, each active transfer at fair share) by the contention
+    benchmark and the manager tests.
+    """
+
+    name: str
+    servers: tuple[ServerSpec, ...]
+    sizes: tuple[int, ...]
+    arrivals: tuple[float, ...]
+
+    def __post_init__(self):
+        if len(self.sizes) != len(self.arrivals):
+            raise ValueError("one arrival per transfer required")
+
+
+def contention_traces() -> list[ContentionTrace]:
+    """The three fleet-contention regimes the manager must win:
+
+    * ``simultaneous`` — three unequal transfers arrive together on the
+      calibrated baseline fleet (pure k-way split; k drops 3 → 2 → 1 as
+      the shorter transfers drain, re-expanding everyone's share);
+    * ``staggered`` — transfers land 5 s apart, flipping the fleet
+      through the k = 1/2/3 regimes in both directions;
+    * ``bottleneck`` — K=3 transfers leaning on one dominant path, where
+      greedy per-transfer planning oversizes the shared bin the most.
+
+    WAN-grade RTTs (the FABRIC inter-site regime, amplified) make chunk
+    geometry matter: at a fair k-way share the RTT-amortization optimum
+    shifts, which is exactly the signal ``contention_sweep`` captures.
+    Deterministic (``jitter=0``) so benchmark comparisons are exact.
+    """
+    base = tuple(paper_baseline(rtt=0.20, jitter=0.0))
+    bottleneck = tuple(shared_bottleneck(rtt=0.30))
+    return [
+        ContentionTrace(
+            "simultaneous", base,
+            sizes=(GB, 3 * GB // 4, GB // 2),
+            arrivals=(0.0, 0.0, 0.0)),
+        ContentionTrace(
+            "staggered", base,
+            sizes=(GB, GB, GB),
+            arrivals=(0.0, 5.0, 10.0)),
+        ContentionTrace(
+            "bottleneck", bottleneck,
+            sizes=(GB, GB, GB),
+            arrivals=(0.0, 0.0, 0.0)),
+    ]
 
 
 def with_throttled_fastest(

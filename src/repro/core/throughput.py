@@ -11,7 +11,35 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-__all__ = ["ThroughputEstimator", "LastSample", "Ewma", "make_estimator"]
+__all__ = ["ThroughputEstimator", "LastSample", "Ewma", "make_estimator",
+           "rtt_corrected_bandwidth"]
+
+
+def rtt_corrected_bandwidth(throughput: float, rtt: float,
+                            mean_chunk_bytes: float) -> float:
+    """Invert the per-request estimator's RTT bias.
+
+    A client-side estimator observes ``s / (rtt + s / bw)`` per request —
+    its elapsed window spans the whole request round-trip, so the reading
+    under-states the wire rate, badly for small chunks on high-RTT paths
+    (a 40 MB chunk at 70 MB/s behind 0.5 s RTT reads as ~37 MB/s).  With
+    the request RTT measured independently (``observed_rtts``) the line
+    rate is recoverable: ``bw = s / (s / v - rtt)``.  Tuners fed
+    corrected estimates re-plan against the path's actual capacity
+    instead of chasing the bias.  Returns ``throughput`` unchanged when
+    the correction is impossible (missing RTT/chunk data, or the implied
+    on-wire time is non-positive).
+
+    Lives here (not ``repro.core.online``, which re-exports it) so the
+    jax-free transfer client can correct its own telemetry without
+    importing the jax-backed tuner stack.
+    """
+    if throughput <= 0.0 or rtt <= 0.0 or mean_chunk_bytes <= 0.0:
+        return throughput
+    wire_time = mean_chunk_bytes / throughput - rtt
+    if wire_time <= 0.0:
+        return throughput
+    return mean_chunk_bytes / wire_time
 
 
 class ThroughputEstimator:

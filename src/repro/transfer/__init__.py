@@ -1,7 +1,10 @@
-"""Real asyncio transfer runtime: MDTP client + range-serving HTTP server."""
+"""Real asyncio transfer runtime: MDTP client + range-serving HTTP server
+plus the fleet-level multi-transfer scheduler."""
 
 from .client import MDTPClient, Replica, TransferReport, fetch_blob
+from .manager import FleetModel, TransferJob, TransferManager
 from .server import RangeServer, Throttle
 
 __all__ = ["MDTPClient", "Replica", "TransferReport", "fetch_blob",
+           "FleetModel", "TransferJob", "TransferManager",
            "RangeServer", "Throttle"]

@@ -26,7 +26,7 @@ from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 from repro.core.chunking import ChunkParams, default_chunk_params, next_chunk_size
-from repro.core.throughput import make_estimator
+from repro.core.throughput import make_estimator, rtt_corrected_bandwidth
 
 __all__ = ["Replica", "TransferReport", "MDTPClient", "NoTelemetryError",
            "fetch_blob"]
@@ -76,6 +76,34 @@ class TransferReport:
     @property
     def throughput(self) -> float:
         return self.total_bytes / self.elapsed if self.elapsed > 0 else 0.0
+
+
+def _mean_chunk_bytes(bytes_per: dict, reqs_per: dict, name: str) -> float:
+    """Average request size a replica served (0.0 when unknown) — the
+    chunk-scale input of :func:`rtt_corrected_bandwidth`."""
+    reqs = reqs_per.get(name, 0)
+    if reqs <= 0:
+        return 0.0
+    return bytes_per.get(name, 0) / reqs
+
+
+def _corrected_bandwidths(replicas, est_values, rtt_min, failed,
+                          bytes_per, reqs_per) -> tuple:
+    """Full-fleet positional bandwidth vector for ``Telemetry``, with each
+    live estimate RTT-bias corrected (``rtt_corrected_bandwidth``) from
+    that replica's measured request RTT and mean served chunk size.  Dead
+    replicas keep their slot as 0.0; replicas with no RTT sample or no
+    completed request pass through uncorrected (the correction is
+    impossible, not merely inaccurate)."""
+    out = []
+    for i, r in enumerate(replicas):
+        if r.name in failed:
+            out.append(0.0)
+            continue
+        out.append(rtt_corrected_bandwidth(
+            float(est_values[i]), float(rtt_min[i]),
+            _mean_chunk_bytes(bytes_per, reqs_per, r.name)))
+    return tuple(out)
 
 
 class _Conn:
@@ -195,14 +223,20 @@ class MDTPClient:
         # Replicas with no sample (failed / never dispatched) are excluded,
         # mirroring how fetch() retires them — a 0-throughput entry would
         # otherwise dominate every simulated grid point.  RTTs stay aligned
-        # with the surviving bandwidth entries.
+        # with the surviving bandwidth entries.  Estimates are RTT-bias
+        # corrected (the per-request estimator's window spans the request
+        # round-trip, under-stating the wire rate) so the simulated sweep
+        # plans against the path's actual capacity.
+        rep = self.last_report
         bw, rtts = [], []
         for r in self.replicas:
-            b = self.last_report.observed_throughputs.get(r.name, 0.0)
+            b = rep.observed_throughputs.get(r.name, 0.0)
             if b <= 0.0:
                 continue
-            bw.append(b)
-            rtt = self.last_report.observed_rtts.get(r.name, 0.0)
+            rtt = rep.observed_rtts.get(r.name, 0.0)
+            bw.append(rtt_corrected_bandwidth(
+                b, rtt, _mean_chunk_bytes(rep.bytes_per_replica,
+                                          rep.requests_per_replica, r.name)))
             rtts.append(rtt if rtt > 0.0 else self.DEFAULT_RTT)
         if not bw:
             raise NoTelemetryError("no throughput observations to retune from")
@@ -225,6 +259,17 @@ class MDTPClient:
         """Connection factory — subclasses may translate offsets (the data
         pipeline's virtual-blob client)."""
         return _Conn(replica)
+
+    def _allocation_throughputs(self, est_values: list) -> list:
+        """Per-replica throughput vector the allocator sizes chunks from.
+
+        Default: this transfer's own estimator values.  The fleet manager
+        (``repro.transfer.manager``) overrides this to pack each round
+        into *residual* replica capacity — fleet bandwidth minus what
+        other concurrent transfers are consuming — so co-scheduled
+        transfers don't all plan as if they owned the mirrors.
+        """
+        return est_values
 
     async def fetch(self, size: int, sink=None, *, offset: int = 0,
                     tuner=None, tune_interval_bytes: Optional[int] = None,
@@ -292,9 +337,9 @@ class MDTPClient:
                     window_bytes = done_bytes - tune_state["bytes"]
                     window_t = max(now - tune_state["t"], 1e-9)
                     telemetry = Telemetry(
-                        bandwidth=tuple(
-                            0.0 if r.name in failed else float(est[i].value)
-                            for i, r in enumerate(self.replicas)),
+                        bandwidth=_corrected_bandwidths(
+                            self.replicas, [e.value for e in est], rtt_min,
+                            failed, bytes_per, reqs_per),
                         rtt=tuple(float(x) for x in rtt_min),
                         remaining_bytes=float(size - done_bytes),
                         measured_throughput=window_bytes / window_t,
@@ -365,8 +410,9 @@ class MDTPClient:
                     # and this worker must be alive to take it over
                     await asyncio.sleep(0.005)
                     continue
-                want = next_chunk_size(i, [e.value for e in est],
-                                       params_box[0], remaining)
+                want = next_chunk_size(
+                    i, self._allocation_throughputs([e.value for e in est]),
+                    params_box[0], remaining)
                 if want <= 0:
                     break
                 start, length = await allocate(want)

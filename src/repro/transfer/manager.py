@@ -1,0 +1,492 @@
+"""Fleet-level multi-transfer scheduling (``TransferManager``).
+
+The rest of the transfer stack moves ONE blob at a time: an
+``MDTPClient`` owns its replicas, sizes chunks from its own throughput
+estimators, and tunes (C, L) as if it were alone on the fleet.  A
+production transfer service (the regime Globus-style managed transfer
+operates in — see PAPERS.md) is the opposite: many concurrent transfers
+contend for the same mirrors, and a client that plans against the *full*
+fleet bandwidth over-asks the shared paths, queues behind its peers, and
+re-learns the same conditions its neighbors just measured.
+
+``TransferManager`` closes that gap with three mechanisms:
+
+1. **A shared fleet model** (:class:`FleetModel`): per-replica
+   exponentially-decayed capacity and RTT, aggregated across every active
+   transfer's per-chunk observations (each sample RTT-bias-corrected via
+   :func:`repro.core.throughput.rtt_corrected_bandwidth`).  One
+   transfer's measurements warm every other transfer's planning.
+
+2. **Residual-capacity bin packing**: the MDTP allocator (paper §IV) packs
+   each round into per-server capacity bins.  Managed clients override
+   :meth:`MDTPClient._allocation_throughputs` so the bin sizes are the
+   *residual* capacity — fleet bandwidth minus what the OTHER active
+   transfers are currently consuming, floored at a fair share so nobody
+   is starved — plus **per-replica in-flight caps** (an asyncio semaphore
+   per mirror) so K transfers cannot stack K deep request queues on the
+   fastest path.
+
+3. **Cross-transfer tuner persistence**: the manager owns one online
+   tuner (``repro.core.online`` contract) and one adopted ``ChunkParams``;
+   every transfer feeds the same tuner (through a thread-safe,
+   residual-aware proxy) and the geometry a transfer adopts warm-starts
+   the next one — a ``BanditTuner``'s arms / reward statistics and an
+   ``MCGradTuner``'s iterate survive across transfers instead of being
+   re-learned from scratch (the ROADMAP PR-3 follow-on).
+
+The manager is jax-free at import time (like the rest of
+``repro.transfer``); tuners and the contention planner pull in jax lazily.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import contextlib
+import dataclasses
+import itertools
+import threading
+import time
+import weakref
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+from repro.core.chunking import ChunkParams
+from repro.core.throughput import rtt_corrected_bandwidth
+
+from .client import MDTPClient, Replica, _Conn
+
+__all__ = ["FleetModel", "TransferJob", "TransferManager"]
+
+
+@dataclass
+class _ReplicaState:
+    """Fleet model entry for one mirror (keyed by ``host:port``)."""
+
+    #: EWMA of the replica's TOTAL observed concurrent throughput
+    #: (bytes/s, summed across active transfers) — the capacity bin.
+    capacity: float = 0.0
+    #: EWMA of measured request RTT (s); 0 = no sample yet.
+    rtt: float = 0.0
+    #: per-transfer EWMA delivery rate (bytes/s), RTT-bias corrected.
+    rates: dict = field(default_factory=dict)
+    #: completed chunks observed (diagnostics).
+    chunks: int = 0
+
+
+class FleetModel:
+    """Shared per-replica capacity/telemetry model.
+
+    Thread-safe: observations arrive on the event loop, while tuner
+    proxies read from thread-pool executor workers.  All state is keyed
+    by replica NAME (``host:port``) so the same mirror serving different
+    blob paths (a manifest and its data.bin, two different checkpoints)
+    aggregates into one capacity estimate.
+    """
+
+    def __init__(self, max_inflight_per_replica: int = 2,
+                 alpha: float = 0.3, rtt_alpha: float = 0.3):
+        if max_inflight_per_replica < 1:
+            raise ValueError("max_inflight_per_replica must be >= 1")
+        self.max_inflight_per_replica = max_inflight_per_replica
+        self.alpha = alpha
+        self.rtt_alpha = rtt_alpha
+        self._lock = threading.Lock()
+        self._reps: dict[str, _ReplicaState] = {}
+        self._active: set = set()
+        # per-(event-loop, replica) request slots: semaphores bind to the
+        # loop they first wait on, and a manager may serve several
+        # sequential asyncio.run() loops (one per restore).  Keyed on the
+        # LIVE loop object (weakly, so dead loops drop their slots) — an
+        # id()-based key could hand a recycled loop a semaphore bound to
+        # its dead predecessor.
+        self._slots: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, tid) -> None:
+        with self._lock:
+            self._active.add(tid)
+
+    def forget(self, tid) -> None:
+        """Drop a finished transfer: its consumption leaves the residual
+        immediately (capacity memory is kept — the EWMA remembers what
+        the mirror could serve while it was contended)."""
+        with self._lock:
+            self._active.discard(tid)
+            for st in self._reps.values():
+                st.rates.pop(tid, None)
+
+    @property
+    def active_transfers(self) -> int:
+        with self._lock:
+            return len(self._active)
+
+    # -- request slots (per-replica in-flight caps) ------------------------
+
+    def slot(self, name: str) -> asyncio.Semaphore:
+        """The request slot for one mirror on the CURRENT event loop.
+
+        The cap is global across every transfer sharing a loop (the
+        ``TransferManager.run`` batch path).  Workloads driven from
+        separate threads each run their own loop and therefore their own
+        semaphore — the capacity/residual model is still shared, but the
+        in-flight cap is per loop, not per process.
+        """
+        loop = asyncio.get_running_loop()
+        with self._lock:
+            per_loop = self._slots.get(loop)
+            if per_loop is None:
+                per_loop = self._slots[loop] = {}
+            sem = per_loop.get(name)
+            if sem is None:
+                sem = per_loop[name] = asyncio.Semaphore(
+                    self.max_inflight_per_replica)
+            return sem
+
+    # -- observations ------------------------------------------------------
+
+    def observe_chunk(self, tid, name: str, nbytes: int,
+                      elapsed: float) -> None:
+        """Fold one completed range request into the model.  The raw
+        reading is the per-request biased rate; the fleet's RTT estimate
+        inverts the bias so capacity tracks the wire rate."""
+        if elapsed <= 0.0 or nbytes <= 0:
+            return
+        with self._lock:
+            st = self._reps.setdefault(name, _ReplicaState())
+            rate = rtt_corrected_bandwidth(nbytes / elapsed, st.rtt,
+                                           float(nbytes))
+            prev = st.rates.get(tid)
+            st.rates[tid] = (rate if prev is None
+                             else self.alpha * rate
+                             + (1.0 - self.alpha) * prev)
+            total = sum(st.rates.values())
+            st.capacity = (total if st.capacity <= 0.0
+                           else self.alpha * total
+                           + (1.0 - self.alpha) * st.capacity)
+            st.chunks += 1
+
+    def observe_rtt(self, name: str, sample: float) -> None:
+        if sample <= 0.0:
+            return
+        with self._lock:
+            st = self._reps.setdefault(name, _ReplicaState())
+            st.rtt = (sample if st.rtt <= 0.0
+                      else self.rtt_alpha * sample
+                      + (1.0 - self.rtt_alpha) * st.rtt)
+
+    # -- views -------------------------------------------------------------
+
+    def allocation_view(self, tid, replicas: Sequence[Replica],
+                        est_values: Sequence[float]) -> list:
+        """The throughput vector transfer ``tid``'s allocator should pack
+        against: per replica, the residual capacity (fleet capacity minus
+        other active transfers' consumption), floored at a fair-share
+        fraction so a late arrival is never starved out of the bin.
+        Falls back to the transfer's own estimate where the fleet has no
+        capacity observation, and keeps unprobed replicas at ``<= 0`` so
+        the client still issues its uniform probing chunk.
+        """
+        with self._lock:
+            n_active = max(len(self._active), 1)
+            out = []
+            for i, r in enumerate(replicas):
+                own = float(est_values[i])
+                st = self._reps.get(r.name)
+                if own <= 0.0 or st is None or st.capacity <= 0.0:
+                    out.append(own)
+                    continue
+                foreign = sum(v for u, v in st.rates.items() if u != tid)
+                floor = st.capacity / (2.0 * n_active)
+                out.append(max(st.capacity - foreign, floor))
+            return out
+
+    def fleet_telemetry(self, tid, replicas: Sequence[Replica], telemetry):
+        """Rewrite a client-local ``Telemetry`` snapshot into the fleet
+        view a SHARED tuner should plan from: bandwidth = residual
+        capacity for this transfer (what it can actually get), RTT = the
+        fleet's aggregated estimate.  Slots the fleet knows nothing about
+        keep the client's local reading.  Pure ``dataclasses.replace`` —
+        no jax import on this path."""
+        bw = self.allocation_view(tid, replicas, telemetry.bandwidth)
+        with self._lock:
+            rtt = []
+            for i, r in enumerate(replicas):
+                st = self._reps.get(r.name)
+                rtt.append(st.rtt if st is not None and st.rtt > 0.0
+                           else float(telemetry.rtt[i]))
+        return dataclasses.replace(
+            telemetry, bandwidth=tuple(bw), rtt=tuple(rtt))
+
+    def snapshot(self) -> dict:
+        """Diagnostic copy: ``{name: {capacity, rtt, rates, chunks}}``."""
+        with self._lock:
+            return {
+                name: {
+                    "capacity": st.capacity,
+                    "rtt": st.rtt,
+                    "rates": dict(st.rates),
+                    "chunks": st.chunks,
+                }
+                for name, st in self._reps.items()
+            }
+
+
+class _ManagedConn(_Conn):
+    """A client connection that (a) respects the fleet's per-replica
+    in-flight cap and (b) feeds every completed range request into the
+    shared fleet model."""
+
+    def __init__(self, replica: Replica, fleet: FleetModel, tid):
+        super().__init__(replica)
+        self._fleet = fleet
+        self._tid = tid
+
+    async def fetch_range(self, start: int, end: int) -> bytes:
+        async with self._fleet.slot(self.replica.name):
+            t0 = time.monotonic()
+            data = await super().fetch_range(start, end)
+            self._fleet.observe_chunk(self._tid, self.replica.name,
+                                      len(data), time.monotonic() - t0)
+            # peek (don't drain — the owning client min-aggregates these
+            # into its own report) at the freshest RTT samples
+            if self._rtt_samples:
+                self._fleet.observe_rtt(self.replica.name,
+                                        min(self._rtt_samples))
+            return data
+
+
+class _SharedTuner:
+    """Per-transfer proxy in front of the manager's single tuner.
+
+    Serializes ``update`` calls across transfers (they run on executor
+    threads) and substitutes the fleet's residual view for the client's
+    local estimator snapshot, so a ``BanditTuner``'s drift detector and
+    an ``MCGradTuner``'s descent both plan against what THIS transfer can
+    actually get from the shared mirrors.
+    """
+
+    def __init__(self, manager: "TransferManager", tid,
+                 replicas: Sequence[Replica]):
+        self._manager = manager
+        self._tid = tid
+        self._replicas = list(replicas)
+
+    def update(self, telemetry):
+        fleet_tel = self._manager.fleet.fleet_telemetry(
+            self._tid, self._replicas, telemetry)
+        with self._manager._tuner_lock:
+            return self._manager.tuner.update(fleet_tel)
+
+
+class _ManagedClient(MDTPClient):
+    """An ``MDTPClient`` wired into a manager's fleet model."""
+
+    def __init__(self, replicas: Sequence[Replica],
+                 manager: "TransferManager", tid, **kw):
+        super().__init__(replicas, **kw)
+        self._manager = manager
+        self._tid = tid
+
+    def _make_conn(self, replica: Replica) -> _Conn:
+        return _ManagedConn(replica, self._manager.fleet, self._tid)
+
+    def _allocation_throughputs(self, est_values: list) -> list:
+        return self._manager.fleet.allocation_view(
+            self._tid, self.replicas, est_values)
+
+
+@dataclass
+class TransferJob:
+    """One transfer in a :meth:`TransferManager.run` batch."""
+
+    size: int
+    #: blob path on every mirror (None = the fleet replicas' own paths).
+    path: Optional[str] = None
+    offset: int = 0
+    #: seconds after batch start before this transfer begins (staggered
+    #: arrivals).
+    start_delay: float = 0.0
+    sink: Optional[Any] = None
+    tune_interval_bytes: Optional[int] = None
+
+
+class TransferManager:
+    """Run N concurrent MDTP transfers against one shared replica fleet.
+
+    Args:
+      replicas: the fleet — every transfer draws from these mirrors
+        (per-transfer ``path``/``replicas`` overrides re-point the blob,
+        not the fleet: the capacity model is keyed by ``host:port``).
+      params: initial chunk geometry; whatever a transfer adopts (via its
+        tuner or ``retune``) replaces it, warm-starting the next transfer.
+      tuner: a shared online tuner (``repro.core.online`` policy).  State
+        persists across transfers — bandit arms keep their discounted
+        rewards, the MC-gradient tuner keeps its iterate.
+      max_inflight_per_replica: per-mirror cap on simultaneously
+        outstanding range requests ACROSS all transfers.
+      contention_ladder: optional ``{active_count: ChunkParams}`` map
+        (see :meth:`plan_contention`) consulted at transfer start, so a
+        transfer that arrives while k others run starts from geometry
+        tuned for a (k+1)-way split instead of the solo optimum.
+    """
+
+    def __init__(
+        self,
+        replicas: Sequence[Replica],
+        params: Optional[ChunkParams] = None,
+        tuner=None,
+        max_inflight_per_replica: int = 2,
+        estimator: str = "ewma",
+        ewma_alpha: float = 0.5,
+        fleet_alpha: float = 0.3,
+        contention_ladder: Optional[dict] = None,
+        **client_kw,
+    ):
+        self.replicas = list(replicas)
+        self.params = params
+        self.tuner = tuner
+        self.contention_ladder = dict(contention_ladder or {})
+        self.fleet = FleetModel(
+            max_inflight_per_replica=max_inflight_per_replica,
+            alpha=fleet_alpha)
+        self._estimator = estimator
+        self._ewma_alpha = ewma_alpha
+        self._client_kw = dict(client_kw)
+        self._tuner_lock = threading.Lock()
+        self._tids = itertools.count(1)
+        #: reports of completed transfers, in completion order.
+        self.reports: list = []
+
+    # -- client lifecycle --------------------------------------------------
+
+    def _job_replicas(self, replicas: Optional[Sequence[Replica]],
+                      path: Optional[str]) -> list:
+        reps = list(replicas) if replicas is not None else list(self.replicas)
+        if path is not None:
+            reps = [Replica(r.host, r.port, path) for r in reps]
+        return reps
+
+    def _warm_params(self, n_active: int) -> Optional[ChunkParams]:
+        """Geometry a new transfer starts from: the contention ladder for
+        the current active count if planned, else the last adopted
+        params, else whatever the shared tuner has converged to."""
+        ladder = self.contention_ladder.get(n_active)
+        if ladder is not None:
+            return ladder
+        if self.params is not None:
+            return self.params
+        return getattr(self.tuner, "params", None)
+
+    @contextlib.asynccontextmanager
+    async def session(self, replicas: Optional[Sequence[Replica]] = None,
+                      path: Optional[str] = None, **client_kw):
+        """Register a managed client for a multi-fetch workflow (the
+        checkpoint-restore wave loop).  On exit the transfer leaves the
+        fleet's residual accounting and its adopted geometry persists on
+        the manager."""
+        tid = next(self._tids)
+        reps = self._job_replicas(replicas, path)
+        self.fleet.register(tid)
+        kw = {**self._client_kw, **client_kw}
+        if "tuner" not in kw:
+            # the shared tuner rides along by default; callers running
+            # their own wave-boundary updates pass tuner=None to keep the
+            # in-fetch hook quiet (reward attribution stays single-source)
+            kw["tuner"] = (_SharedTuner(self, tid, reps)
+                           if self.tuner is not None else None)
+        warm = self._warm_params(self.fleet.active_transfers)
+        client = _ManagedClient(
+            reps, self, tid, params=warm,
+            estimator=self._estimator, ewma_alpha=self._ewma_alpha,
+            **kw)
+        try:
+            yield client
+        finally:
+            self.fleet.forget(tid)
+            # persist only geometry this transfer actually LEARNED (tuner
+            # adoption / retune): a transfer that just rode its
+            # construction-time warm params must not clobber what a
+            # concurrent peer adopted in the meantime (last-writer-wins
+            # on stale state)
+            if (client._params_arg is not None
+                    and client._params_arg != warm):
+                self.params = client._params_arg
+
+    # -- transfers ---------------------------------------------------------
+
+    async def fetch(self, size: int, *, path: Optional[str] = None,
+                    replicas: Optional[Sequence[Replica]] = None,
+                    sink=None, offset: int = 0,
+                    tune_interval_bytes: Optional[int] = None,
+                    start_delay: float = 0.0):
+        """One managed transfer (awaitable; gather several for a fleet).
+
+        Same contract as ``MDTPClient.fetch`` plus ``path``/``replicas``
+        re-pointing and ``start_delay`` for staggered arrivals.
+        """
+        if start_delay > 0.0:
+            await asyncio.sleep(start_delay)
+        async with self.session(replicas=replicas, path=path) as client:
+            buf, report = await client.fetch(
+                size, sink=sink, offset=offset,
+                tune_interval_bytes=tune_interval_bytes)
+            self.reports.append(report)
+            return buf, report
+
+    def run(self, jobs: Sequence[TransferJob]):
+        """Synchronous batch entry: run every job concurrently on one
+        event loop, respecting per-job start delays.  Returns the
+        ``(buffer, report)`` pairs in JOB order."""
+
+        async def go():
+            return await asyncio.gather(*(
+                self.fetch(j.size, path=j.path, sink=j.sink,
+                           offset=j.offset,
+                           tune_interval_bytes=j.tune_interval_bytes,
+                           start_delay=j.start_delay)
+                for j in jobs))
+
+        return asyncio.run(go())
+
+    # -- contention planning ----------------------------------------------
+
+    def plan_contention(self, file_size: int, max_transfers: int = 4,
+                        bandwidth: Optional[Sequence[float]] = None,
+                        rtt: Optional[Sequence[float]] = None,
+                        **sweep_kw) -> dict:
+        """Precompute the contention ladder: per active-transfer count k,
+        the (C, L) tuned for a fair k-way split of the fleet — one fused
+        vmapped sweep (``repro.core.autotune.contention_sweep``) covering
+        every (k, C, L) cell.  Uses the fleet model's capacities when no
+        explicit bandwidth is given (requires at least one observed
+        transfer in that case).  Stores and returns ``{k: ChunkParams}``.
+        """
+        from repro.core.autotune import contention_sweep
+
+        if bandwidth is None:
+            snap = self.snapshot()
+            bandwidth, rtt_model = [], []
+            for r in self.replicas:
+                st = snap.get(r.name)
+                if st is not None and st["capacity"] > 0.0:
+                    bandwidth.append(st["capacity"])
+                    rtt_model.append(st["rtt"] if st["rtt"] > 0.0
+                                     else MDTPClient.DEFAULT_RTT)
+            if not bandwidth:
+                raise ValueError(
+                    "no fleet capacity observations to plan from — pass "
+                    "bandwidth= explicitly or run a transfer first")
+            if rtt is None:
+                rtt = rtt_model
+        if rtt is None:
+            rtt = MDTPClient.DEFAULT_RTT
+        results = contention_sweep(bandwidth, rtt, int(file_size),
+                                   max_transfers=max_transfers, **sweep_kw)
+        self.contention_ladder = {
+            k: res.params for k, res in results.items()}
+        return self.contention_ladder
+
+    def snapshot(self) -> dict:
+        """Fleet model diagnostics (see :meth:`FleetModel.snapshot`)."""
+        return self.fleet.snapshot()

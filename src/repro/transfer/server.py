@@ -14,7 +14,6 @@ checkpoint mirror in tests/examples.
 
 from __future__ import annotations
 
-import os
 import threading
 import time
 from dataclasses import dataclass
@@ -29,6 +28,17 @@ class Throttle:
     bytes_per_s: float = 0.0      # 0 = unthrottled
     latency_s: float = 0.0        # added before each response
     chunk: int = 64 * 1024
+    #: True = token-bucket pacing on bytes alone: every ``chunk`` written
+    #: buys an unconditional ``chunk / bytes_per_s`` sleep, never reduced
+    #: by measured elapsed time.  The default (False) compensates for
+    #: wall-clock already spent, which keeps the NET rate at the target on
+    #: an idle box but lets a loaded box erase the sleeps entirely —
+    #: exactly the regime where two mirrors' relative rates invert and
+    #: throughput-proportionality tests flake.  Deterministic pacing makes
+    #: each mirror's service time >= bytes / rate regardless of load, so
+    #: rate *ratios* between mirrors are schedule-independent (host load
+    #: can only add the same additive overhead to both sides).
+    deterministic: bool = False
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -52,6 +62,18 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
 
     def do_GET(self):
+        srv = self.server
+        with srv.gauge_lock:                      # type: ignore[attr-defined]
+            srv.concurrent += 1                   # type: ignore[attr-defined]
+            srv.peak_concurrent = max(            # type: ignore[attr-defined]
+                srv.peak_concurrent, srv.concurrent)
+        try:
+            self._serve_get()
+        finally:
+            with srv.gauge_lock:                  # type: ignore[attr-defined]
+                srv.concurrent -= 1               # type: ignore[attr-defined]
+
+    def _serve_get(self):
         blob = self._blob()
         if blob is None:
             self.send_error(404)
@@ -87,12 +109,22 @@ class _Handler(BaseHTTPRequestHandler):
             t0 = time.monotonic()
             while sent < len(body):
                 piece = body[sent:sent + throttle.chunk]
+                if throttle.deterministic:
+                    # bytes-only token bucket: every piece pays its wire
+                    # time up front, unconditionally — host load cannot
+                    # erase the pacing.  Sleeping BEFORE the write means
+                    # the requester sees the last byte only after the
+                    # full paced duration (and the handler exits the
+                    # moment it lands, keeping the concurrency gauge
+                    # honest).
+                    time.sleep(len(piece) / throttle.bytes_per_s)
                 self.wfile.write(piece)
                 sent += len(piece)
-                target = sent / throttle.bytes_per_s
-                sleep = target - (time.monotonic() - t0)
-                if sleep > 0:
-                    time.sleep(sleep)
+                if not throttle.deterministic:
+                    target = sent / throttle.bytes_per_s
+                    sleep = target - (time.monotonic() - t0)
+                    if sleep > 0:
+                        time.sleep(sleep)
         else:
             self.wfile.write(body)
 
@@ -104,12 +136,21 @@ class RangeServer:
         self._srv = ThreadingHTTPServer(("127.0.0.1", 0), _Handler)
         self._srv.blobs = {}                      # type: ignore[attr-defined]
         self._srv.throttle = throttle or Throttle()  # type: ignore[attr-defined]
+        self._srv.gauge_lock = threading.Lock()   # type: ignore[attr-defined]
+        self._srv.concurrent = 0                  # type: ignore[attr-defined]
+        self._srv.peak_concurrent = 0             # type: ignore[attr-defined]
         self._thread = threading.Thread(target=self._srv.serve_forever,
                                         daemon=True)
 
     @property
     def port(self) -> int:
         return self._srv.server_address[1]
+
+    @property
+    def peak_concurrent_requests(self) -> int:
+        """High-water mark of simultaneously in-flight GETs — the
+        server-side witness for per-replica in-flight-cap tests."""
+        return self._srv.peak_concurrent          # type: ignore[attr-defined]
 
     @property
     def address(self) -> tuple[str, int]:

@@ -21,7 +21,7 @@ def bench_run(tmp_path_factory):
         [sys.executable, "-m", "benchmarks.run",
          "--skip", "fig2", "fig3", "fig4", "fig5", "table2", "roofline",
          "restore", "--json", str(json_path)],
-        capture_output=True, text=True, cwd=_ROOT, timeout=300,
+        capture_output=True, text=True, cwd=_ROOT, timeout=420,
     )
     return res, json_path
 
@@ -75,6 +75,39 @@ def test_bench_json_artifact_valid(bench_run):
     assert any(n.startswith("autotune/engine_round") for n in names)
     for row in payload["rows"]:
         assert isinstance(row["us_per_call"], float)
+
+
+def test_contention_bench_rows(bench_run):
+    """The contention section emits manager-vs-greedy rows for every
+    trace (makespan derived, vs_greedy extra on the manager rows)."""
+    res, json_path = bench_run
+    out = res.stdout
+    assert "# === contention ===" in out
+    rows = [l for l in out.splitlines() if l.startswith("contention/")]
+    mgr_rows = [l for l in rows if "/manager," in l]
+    greedy_rows = [l for l in rows if "/greedy," in l]
+    assert len(mgr_rows) == 3 and len(greedy_rows) == 3, rows
+    assert all("vs_greedy=" in l for l in mgr_rows)
+
+
+def test_committed_bench_online_contention_wins():
+    """The committed BENCH_online.json carries the contention rows and
+    records the shared-fleet manager beating K independent greedy clients
+    on aggregate completion time (makespan) for >= 2 of 3 traces."""
+    path = os.path.join(_ROOT, "BENCH_online.json")
+    assert os.path.exists(path), "BENCH_online.json must be committed"
+    payload = json.loads(open(path).read())
+    rows = {r["name"]: r for r in payload["rows"]}
+    traces = ("simultaneous", "staggered", "bottleneck")
+    wins = 0
+    for t in traces:
+        greedy = rows[f"contention/{t}/greedy"]
+        manager = rows[f"contention/{t}/manager"]
+        if float(manager["derived"]) < float(greedy["derived"]):
+            wins += 1
+    assert wins >= 2, {t: (rows[f"contention/{t}/greedy"]["derived"],
+                           rows[f"contention/{t}/manager"]["derived"])
+                       for t in traces}
 
 
 def test_committed_bench_json_tracks_engines():

@@ -246,6 +246,53 @@ def test_multi_source_restore_waves_with_online_tuner(tmp_path):
         s.stop()
 
 
+def test_multi_source_restore_via_manager(tmp_path):
+    """``restore_checkpoint(manager=...)`` rides the shared fleet: the
+    manifest and data fetches run as managed transfers (per-replica
+    in-flight caps enforced), telemetry lands in the fleet model, and the
+    geometry the restore's between-wave re-tune adopts warm-starts the
+    manager's next transfer."""
+    from repro.core.chunking import ChunkParams
+    from repro.transfer import TransferManager
+
+    state = {"w": jax.random.normal(jax.random.PRNGKey(6), (600, 600))}
+    d = save_checkpoint(str(tmp_path), 600, state)
+    servers = []
+    for bw in (30 * MB, 60 * MB):
+        s = RangeServer(throttle=Throttle(bytes_per_s=bw,
+                                          deterministic=True)).start()
+        base = "/ckpt/step_0000000600"
+        s.add_file(base + "/manifest.json", os.path.join(d, "manifest.json"))
+        s.add_file(base + "/data.bin", os.path.join(d, "data.bin"))
+        servers.append(s)
+    try:
+        replicas = [Replica("127.0.0.1", s.port, "/ckpt") for s in servers]
+        start_params = ChunkParams(initial_chunk=128 * 1024,
+                                   large_chunk=512 * 1024)
+        mgr = TransferManager(replicas, params=start_params,
+                              max_inflight_per_replica=1)
+        total = os.path.getsize(os.path.join(d, "data.bin"))
+        restored, step = restore_checkpoint(
+            str(tmp_path), state, step=600, replicas=replicas,
+            manager=mgr, wave_bytes=total // 2 + 1)
+        assert step == 600
+        assert _trees_equal(state, restored)
+        # the fleet model observed both mirrors through the restore
+        snap = mgr.snapshot()
+        assert {r.name for r in replicas} <= set(snap)
+        assert all(v["chunks"] > 0 for v in snap.values())
+        # the cap held across the manifest + wave fetches
+        for s in servers:
+            assert s.peak_concurrent_requests <= 1
+        # the between-wave grid re-tune's adoption persisted: the next
+        # managed transfer would start from the re-tuned geometry
+        assert mgr.params is not None
+        assert mgr.params != start_params
+    finally:
+        for s in servers:
+            s.stop()
+
+
 def test_streaming_restore_respects_shardings(tmp_path):
     """Streamed leaves land with the requested sharding (the H2D overlap
     must not lose the placement contract)."""

@@ -1,0 +1,61 @@
+"""The offline format gate (``tools/format_check.py``) stays clean.
+
+CI's lint job runs the same script; having it in tier-1 means the tree
+cannot drift out of the normalized state between lint runs (and the gate
+is enforced even where the lint toolchain isn't installed).
+"""
+
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_tree_is_format_normalized():
+    res = subprocess.run(
+        [sys.executable, os.path.join("tools", "format_check.py")],
+        capture_output=True, text=True, cwd=_ROOT, timeout=120)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_normalize_rules_python():
+    sys.path.insert(0, os.path.join(_ROOT, "tools"))
+    try:
+        from format_check import normalize
+    finally:
+        sys.path.pop(0)
+    assert normalize("a = 1 \nb = 2\t\n") == "a = 1\nb = 2\n"  # trailing ws
+    assert normalize("a = 1\r\nb = 2\n") == "a = 1\nb = 2\n"   # CRLF -> LF
+    assert normalize("a = 1") == "a = 1\n"             # EOF newline added
+    assert normalize("a = 1\n\n\n") == "a = 1\n"       # whitespace tail
+    assert normalize("\tx = 1\n") == "    x = 1\n"     # tab indent
+    assert normalize("x = '\t'\n") == "x = '\t'\n"     # literal value kept
+    assert normalize("") == ""
+
+
+def test_normalize_protects_literals_and_markdown():
+    sys.path.insert(0, os.path.join(_ROOT, "tools"))
+    try:
+        from format_check import normalize
+    finally:
+        sys.path.pop(0)
+    # every line of a multi-line string literal is verbatim — trailing
+    # spaces and tab indentation are part of its VALUE
+    lit = 's = """\n\tall:\nkeep  \n"""\n'
+    assert normalize(lit) == lit
+    fstr = 'x = 1\ns = f"""\n\t{x}  \n"""\n'
+    assert normalize(fstr) == fstr
+    # ...but code on lines outside the literal span is still normalized
+    # (boundary lines are protected whole, trailing content included)
+    mixed = 'y = 2  \ns = """\na\t \n"""\nz = 3\t\n'
+    assert normalize(mixed) == 'y = 2\ns = """\na\t \n"""\nz = 3\n'
+    # a file that does not tokenize is left entirely alone
+    broken = "s = '''\nnever closed \n"
+    assert normalize(broken) == broken
+    # Markdown: two-trailing-space hard breaks and tab-indented fences
+    # survive; only the EOF newline is enforced
+    md = "line one  \n\tcode\n"
+    assert normalize(md, kind=".md") == md
+    assert normalize("text", kind=".md") == "text\n"
+    assert normalize("text\n\n\n", kind=".md") == "text\n"

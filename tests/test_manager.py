@@ -1,0 +1,385 @@
+"""Fleet-shared multi-transfer scheduling (``repro.transfer.manager``).
+
+Properties under test:
+
+* **bytes conservation** — K concurrent managed transfers each deliver
+  their exact blob (sha-verified) and each transfer's per-replica byte
+  counts sum to its size;
+* **per-replica in-flight caps** — across ALL transfers, no mirror ever
+  serves more than ``max_inflight_per_replica`` simultaneous requests
+  (server-side high-water witness), while an uncapped control run does
+  overlap;
+* **staggered-arrival fairness** — a transfer arriving mid-flight is not
+  starved: it completes and draws bytes from every live mirror;
+* **warm-start persistence** — geometry adopted during one transfer
+  seeds the next transfer's first round, and a shared tuner's state
+  (bandit arms) survives across transfers;
+* the fleet model's residual-capacity arithmetic and telemetry
+  substitution (pure units, no sockets).
+"""
+
+import asyncio
+import dataclasses
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.chunking import ChunkParams
+from repro.transfer import (
+    RangeServer,
+    Replica,
+    Throttle,
+    TransferJob,
+    TransferManager,
+)
+from repro.transfer.manager import FleetModel
+
+MB = 1024 * 1024
+
+
+def _mirrors(blobs: dict, rates, deterministic=True):
+    servers = []
+    for r in rates:
+        s = RangeServer(throttle=Throttle(
+            bytes_per_s=r, deterministic=deterministic)).start()
+        for path, blob in blobs.items():
+            s.add_blob(path, blob)
+        servers.append(s)
+    return servers
+
+
+def _blobs(k, size, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"/b{j}": rng.integers(0, 256, size=size, dtype=np.uint8)
+            .tobytes() for j in range(k)}
+
+
+# -- fleet model units ------------------------------------------------------
+
+def test_allocation_view_residual_and_floor():
+    fleet = FleetModel()
+    reps = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b")]
+    fleet.register("t1")
+    fleet.register("t2")
+    # t2 consumes 60 MB/s of h0's capacity; no observations for h1
+    for _ in range(60):
+        fleet.observe_chunk("t1", "h0:1", 40 * MB, 1.0)
+        fleet.observe_chunk("t2", "h0:1", 60 * MB, 1.0)
+    view = fleet.allocation_view("t1", reps, [40.0 * MB, 25.0 * MB])
+    # residual for t1 on h0 ~ capacity (100) - foreign (60) = 40 MB/s
+    assert view[0] == pytest.approx(40 * MB, rel=0.05)
+    # h1 unknown to the fleet: t1's own estimate passes through
+    assert view[1] == 25.0 * MB
+    # unprobed replica stays <= 0 so the client still sends its probe
+    assert fleet.allocation_view("t1", reps, [0.0, 0.0]) == [0.0, 0.0]
+    # t2 finishing returns its share to the residual
+    fleet.forget("t2")
+    view = fleet.allocation_view("t1", reps, [40.0 * MB, 25.0 * MB])
+    assert view[0] == pytest.approx(100 * MB, rel=0.05)
+
+
+def test_allocation_view_floor_prevents_starvation():
+    fleet = FleetModel()
+    reps = [Replica("h0", 1, "/b")]
+    fleet.register("t1")
+    fleet.register("t2")
+    # t2 hogs essentially the whole mirror
+    for _ in range(60):
+        fleet.observe_chunk("t2", "h0:1", 100 * MB, 1.0)
+        fleet.observe_chunk("t1", "h0:1", 1 * MB, 1.0)
+    view = fleet.allocation_view("t1", reps, [1.0 * MB])
+    # floored at capacity / (2 * n_active), never the raw <= 0 residual
+    assert view[0] >= 100 * MB / (2 * 2) * 0.8
+
+
+def test_fleet_telemetry_substitutes_residual_and_rtt():
+    @dataclasses.dataclass(frozen=True)
+    class Tel:  # shape-compatible stand-in; keeps jax out of this test
+        bandwidth: tuple
+        rtt: tuple
+        remaining_bytes: float
+
+    fleet = FleetModel()
+    reps = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b")]
+    fleet.register("t1")
+    fleet.observe_rtt("h0:1", 0.25)
+    for _ in range(30):
+        fleet.observe_chunk("t1", "h0:1", 50 * MB, 1.0)
+    out = fleet.fleet_telemetry(
+        "t1", reps, Tel(bandwidth=(10.0 * MB, 20.0 * MB),
+                        rtt=(0.03, 0.04), remaining_bytes=5.0))
+    assert out.bandwidth[0] > 10.0 * MB          # residual view, not local
+    assert out.bandwidth[1] == 20.0 * MB         # unknown mirror: local
+    assert out.rtt[0] == pytest.approx(0.25, rel=0.2)
+    assert out.rtt[1] == 0.04
+    assert out.remaining_bytes == 5.0            # everything else intact
+
+
+def test_fleet_model_rejects_bad_cap():
+    with pytest.raises(ValueError):
+        FleetModel(max_inflight_per_replica=0)
+
+
+# -- bytes conservation under K concurrent transfers ------------------------
+
+def test_concurrent_transfers_bytes_conservation():
+    k = 3
+    blobs = _blobs(k, 2 * MB)
+    servers = _mirrors(blobs, [30 * MB, 90 * MB])
+    try:
+        reps = [Replica("127.0.0.1", s.port, "/b0") for s in servers]
+        mgr = TransferManager(
+            reps, params=ChunkParams(128 * 1024, 512 * 1024))
+        out = mgr.run([TransferJob(len(blobs[f"/b{j}"]), path=f"/b{j}")
+                       for j in range(k)])
+        assert len(out) == k
+        for j, (buf, report) in enumerate(out):
+            blob = blobs[f"/b{j}"]
+            assert hashlib.sha256(bytes(buf)).digest() == \
+                hashlib.sha256(blob).digest()
+            # conservation: per-replica contributions sum to the size
+            assert sum(report.bytes_per_replica.values()) == len(blob)
+            assert report.failed_replicas == []
+        assert len(mgr.reports) == k
+        # the fleet model saw every mirror
+        snap = mgr.snapshot()
+        assert set(snap) == {r.name for r in reps}
+        assert all(v["capacity"] > 0 for v in snap.values())
+    finally:
+        for s in servers:
+            s.stop()
+
+
+# -- per-replica in-flight caps ---------------------------------------------
+
+def test_per_replica_inflight_cap_enforced():
+    k = 3
+    blobs = _blobs(k, 2 * MB, seed=1)
+    servers = _mirrors(blobs, [25 * MB, 50 * MB])
+    try:
+        reps = [Replica("127.0.0.1", s.port, "/b0") for s in servers]
+        mgr = TransferManager(
+            reps, params=ChunkParams(128 * 1024, 512 * 1024),
+            max_inflight_per_replica=1)
+        out = mgr.run([TransferJob(len(blobs[f"/b{j}"]), path=f"/b{j}")
+                       for j in range(k)])
+        for j, (buf, _) in enumerate(out):
+            assert bytes(buf) == blobs[f"/b{j}"]
+        # the cap held on every mirror, across ALL transfers at once
+        for s in servers:
+            assert s.peak_concurrent_requests <= 1
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def test_uncapped_control_overlaps_requests():
+    """The witness gauge actually measures overlap: with a generous cap,
+    K concurrent transfers do stack requests on the same mirror."""
+    k = 3
+    blobs = _blobs(k, 2 * MB, seed=2)
+    servers = _mirrors(blobs, [25 * MB])
+    try:
+        reps = [Replica("127.0.0.1", servers[0].port, "/b0")]
+        mgr = TransferManager(
+            reps, params=ChunkParams(128 * 1024, 512 * 1024),
+            max_inflight_per_replica=8)
+        mgr.run([TransferJob(len(blobs[f"/b{j}"]), path=f"/b{j}")
+                 for j in range(k)])
+        assert servers[0].peak_concurrent_requests >= 2
+    finally:
+        for s in servers:
+            s.stop()
+
+
+# -- staggered arrivals / fairness ------------------------------------------
+
+def test_staggered_arrival_not_starved():
+    blobs = _blobs(2, 3 * MB, seed=3)
+    servers = _mirrors(blobs, [40 * MB, 80 * MB])
+    try:
+        reps = [Replica("127.0.0.1", s.port, "/b0") for s in servers]
+        mgr = TransferManager(
+            reps, params=ChunkParams(128 * 1024, 512 * 1024))
+        out = mgr.run([
+            TransferJob(len(blobs["/b0"]), path="/b0"),
+            TransferJob(len(blobs["/b1"]), path="/b1", start_delay=0.02),
+        ])
+        for j, (buf, report) in enumerate(out):
+            assert bytes(buf) == blobs[f"/b{j}"]
+            # fairness: every live mirror served this transfer — the
+            # late arrival was packed into residual capacity, not starved
+            # behind the incumbent
+            assert all(v > 0 for v in report.bytes_per_replica.values())
+            assert report.failed_replicas == []
+    finally:
+        for s in servers:
+            s.stop()
+
+
+# -- warm start / tuner persistence ------------------------------------------
+
+class _AdoptOnce:
+    """Scripted tuner: adopts a fixed geometry on every update (kept off
+    the ``params`` attribute so the warm-start must flow through the
+    manager's adopted-params slot, not the tuner fallback)."""
+
+    def __init__(self, target):
+        self.target = target
+        self.updates = 0
+
+    def update(self, telemetry):
+        self.updates += 1
+        return self.target
+
+
+def test_adopted_params_warm_start_next_transfer():
+    blobs = _blobs(2, 3 * MB, seed=4)
+    servers = _mirrors(blobs, [60 * MB, 60 * MB])
+    try:
+        reps = [Replica("127.0.0.1", s.port, "/b0") for s in servers]
+        learned = ChunkParams(initial_chunk=192 * 1024,
+                              large_chunk=768 * 1024)
+        mgr = TransferManager(reps,
+                              params=ChunkParams(128 * 1024, 512 * 1024),
+                              tuner=_AdoptOnce(learned))
+        (buf, report), = mgr.run([TransferJob(
+            len(blobs["/b0"]), path="/b0",
+            tune_interval_bytes=256 * 1024)])
+        assert bytes(buf) == blobs["/b0"]
+        assert report.retunes >= 1
+        # adoption persisted onto the manager...
+        assert mgr.params == learned
+
+        # ...and the SECOND transfer's client starts from it (first-round
+        # geometry is the learned one, not the size-derived default)
+        async def second():
+            async with mgr.session(path="/b1") as client:
+                assert client._params_arg == learned
+                buf2, _ = await client.fetch(len(blobs["/b1"]))
+                return buf2
+
+        buf2 = asyncio.run(second())
+        assert bytes(buf2) == blobs["/b1"]
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def test_non_adopting_transfer_does_not_clobber_learned_params():
+    """Regression: a transfer that merely rode its construction-time
+    warm params must not overwrite geometry a concurrent peer ADOPTED —
+    persistence is adoption-gated, not last-session-exit-wins."""
+    p0 = ChunkParams(initial_chunk=128 * 1024, large_chunk=512 * 1024)
+    p1 = ChunkParams(initial_chunk=256 * 1024, large_chunk=MB)
+    reps = [Replica("h0", 1, "/b")]
+    mgr = TransferManager(reps, params=p0)
+
+    async def scenario():
+        async with mgr.session() as slow:       # warm-started on p0
+            async with mgr.session() as fast:
+                fast.adopt_params(p1)           # peer learns p1...
+            assert mgr.params == p1             # ...and persists it
+            assert slow._params_arg == p0       # never adopted anything
+        # slow's exit must NOT reset the manager to stale p0
+        assert mgr.params == p1
+
+    asyncio.run(scenario())
+
+
+def test_bandit_state_persists_across_transfers():
+    """A shared BanditTuner keeps its arms (and their discounted reward
+    statistics) across managed transfers — the second transfer explores
+    from learned state instead of re-seeding."""
+    jax = pytest.importorskip("jax")  # noqa: F841  (bandit seeding sweeps)
+    from repro.core.online import BanditTuner
+
+    blobs = _blobs(2, 4 * MB, seed=5)
+    servers = _mirrors(blobs, [40 * MB, 80 * MB])
+    try:
+        reps = [Replica("127.0.0.1", s.port, "/b0") for s in servers]
+        grid = [(128 * 1024, 512 * 1024), (256 * 1024, MB),
+                (512 * 1024, 2 * MB)]
+        tuner = BanditTuner(n_arms=2, grid=grid)
+        mgr = TransferManager(reps, tuner=tuner,
+                              params=ChunkParams(128 * 1024, 512 * 1024))
+        mgr.run([TransferJob(len(blobs["/b0"]), path="/b0",
+                             tune_interval_bytes=512 * 1024)])
+        assert tuner.updates >= 1
+        assert tuner.arms                          # seeded during t1
+        updates_after_first = tuner.updates
+        mgr.run([TransferJob(len(blobs["/b1"]), path="/b1",
+                             tune_interval_bytes=512 * 1024)])
+        # same tuner object kept accumulating across transfers
+        assert tuner.arms
+        assert tuner.updates >= updates_after_first + 1
+    finally:
+        for s in servers:
+            s.stop()
+
+
+# -- contention sweep (simulator mirror) -------------------------------------
+
+def test_contention_sweep_ladder():
+    pytest.importorskip("jax")
+    from repro.core.autotune import autotune_chunk_params, contention_sweep
+
+    bw = [12.0 * MB, 70.0 * MB]
+    ladder = contention_sweep(bw, 0.2, 512 * MB, max_transfers=3)
+    assert sorted(ladder) == [1, 2, 3]
+    # k=1 is exactly the solo fused tune
+    solo = autotune_chunk_params(bw, 0.2, 512 * MB)
+    assert ladder[1].params == solo.params
+    assert ladder[1].predicted_time == pytest.approx(solo.predicted_time)
+    # contention can only slow the predicted transfer down
+    assert ladder[2].predicted_time > ladder[1].predicted_time
+    assert ladder[3].predicted_time > ladder[2].predicted_time
+    with pytest.raises(ValueError):
+        contention_sweep(bw, 0.2, 512 * MB, ks=[0, 1])
+
+
+def test_plan_contention_ladder_on_manager():
+    pytest.importorskip("jax")
+
+    reps = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b")]
+    mgr = TransferManager(reps)
+    # nothing observed yet and no explicit bandwidth: nothing to plan from
+    with pytest.raises(ValueError):
+        mgr.plan_contention(256 * MB, max_transfers=2)
+    ladder = mgr.plan_contention(
+        256 * MB, max_transfers=2, bandwidth=[12.0 * MB, 70.0 * MB],
+        rtt=[0.2, 0.2])
+    assert set(ladder) == {1, 2}
+    assert mgr.contention_ladder == ladder
+    assert all(isinstance(p, ChunkParams) for p in ladder.values())
+    # the ladder seeds a new transfer's geometry for the current k
+    assert mgr._warm_params(n_active=2) == ladder[2]
+    assert mgr._warm_params(n_active=1) == ladder[1]
+
+
+def test_contention_scenarios_helpers():
+    from repro.core.scenarios import (
+        ContentionTrace,
+        contention_matrix,
+        contention_traces,
+        paper_baseline,
+        with_fair_share,
+    )
+
+    servers = paper_baseline()
+    halved = with_fair_share(servers, 2)
+    assert [s.bandwidth for s in halved] == \
+        [s.bandwidth / 2 for s in servers]
+    assert [s.rtt for s in halved] == [s.rtt for s in servers]
+    mat = contention_matrix(servers, [1, 2, 4])
+    assert len(mat) == 3 and len(mat[0]) == len(servers)
+    assert mat[2][0] == servers[0].bandwidth / 4
+    traces = contention_traces()
+    assert {t.name for t in traces} == \
+        {"simultaneous", "staggered", "bottleneck"}
+    for t in traces:
+        assert len(t.sizes) == len(t.arrivals)
+    with pytest.raises(ValueError):
+        ContentionTrace("bad", tuple(servers), sizes=(1, 2),
+                        arrivals=(0.0,))

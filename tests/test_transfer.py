@@ -27,36 +27,33 @@ def blob():
 
 
 def test_roundtrip_integrity(blob):
-    servers = _mirrors(blob, [Throttle(bytes_per_s=30 * MB),
-                              Throttle(bytes_per_s=60 * MB),
-                              Throttle(bytes_per_s=120 * MB)])
+    # deterministically paced mirrors: each piece pays its wire time as an
+    # unconditional token-bucket sleep, so the 30/60/120 rate ratios hold
+    # regardless of host load and the proportionality assertion needs no
+    # retry guard (wall-clock compensation pacing could be erased by a
+    # loaded box, transiently inverting the mirrors' relative rates)
+    servers = _mirrors(blob, [
+        Throttle(bytes_per_s=30 * MB, deterministic=True),
+        Throttle(bytes_per_s=60 * MB, deterministic=True),
+        Throttle(bytes_per_s=120 * MB, deterministic=True)])
     try:
         replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
         params = ChunkParams(initial_chunk=256 * 1024, large_chunk=MB)
-        # the proportionality claim is wall-clock-sensitive: on a loaded
-        # CI box even the 4x spread can transiently invert, so allow one
-        # retry for that assertion alone (integrity stays strict per run;
-        # the steady-state claim is covered deterministically by the
-        # simulator tests)
-        for attempt in range(2):
-            data, report = fetch_blob(replicas, len(blob), params=params)
-            assert hashlib.sha256(data).hexdigest() == \
-                hashlib.sha256(blob).hexdigest()
-            # every mirror contributed, and the 4x-faster mirror beat the
-            # slowest.  (Strict ordering of the top two is NOT asserted:
-            # the 60 vs 120 MB/s estimates invert too easily.)
-            contributions = [report.bytes_per_replica[r.name]
-                             for r in replicas]
-            assert all(c > 0 for c in contributions)
-            assert report.failed_replicas == []
-            # per-replica RTT was measured (connect + header turnaround):
-            # every contributing mirror has a positive, sane sample
-            for r in replicas:
-                assert 0.0 < report.observed_rtts[r.name] < 5.0
-            if contributions[2] > contributions[0]:
-                break
-        else:
-            assert contributions[2] > contributions[0]
+        data, report = fetch_blob(replicas, len(blob), params=params)
+        assert hashlib.sha256(data).hexdigest() == \
+            hashlib.sha256(blob).hexdigest()
+        # every mirror contributed, and the 4x-faster mirror beat the
+        # slowest.  (Strict ordering of the top two is NOT asserted:
+        # the 60 vs 120 MB/s estimates sit too close.)
+        contributions = [report.bytes_per_replica[r.name]
+                         for r in replicas]
+        assert all(c > 0 for c in contributions)
+        assert report.failed_replicas == []
+        # per-replica RTT was measured (connect + header turnaround):
+        # every contributing mirror has a positive, sane sample
+        for r in replicas:
+            assert 0.0 < report.observed_rtts[r.name] < 5.0
+        assert contributions[2] > contributions[0]
     finally:
         for s in servers:
             s.stop()
@@ -91,6 +88,67 @@ def test_retune_uses_measured_rtts():
     assert res.predicted_time > low_lat.predicted_time
 
 
+def test_retune_corrects_estimator_rtt_bias():
+    """Regression: the per-request estimator's biased readings are
+    corrected back to the wire rate (via the measured RTT and mean served
+    chunk) BEFORE they reach the fused tuner.  Uncorrected, the bias
+    systematically under-weights high-RTT replicas in re-tuning — a
+    40 MB-chunk mirror at 70 MB/s behind 0.5 s RTT reads as ~37 MB/s."""
+    from repro.core.autotune import autotune_chunk_params
+    from repro.transfer.client import MDTPClient, Replica, TransferReport
+
+    GB = 1024 * MB
+    replicas = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b")]
+    wire = {"h0:1": 70.0 * MB, "h1:2": 12.0 * MB}
+    rtts = {"h0:1": 0.5, "h1:2": 0.03}
+    chunk = {"h0:1": 40.0 * MB, "h1:2": 2.0 * MB}
+    # what the estimator actually observes: s / (rtt + s / bw)
+    biased = {n: chunk[n] / (rtts[n] + chunk[n] / wire[n]) for n in wire}
+    assert all(biased[n] < wire[n] for n in wire)
+    client = MDTPClient(replicas)
+    client.last_report = TransferReport(
+        total_bytes=1, elapsed=1.0,
+        bytes_per_replica={n: int(chunk[n] * 8) for n in wire},
+        requests_per_replica={n: 8 for n in wire},
+        failed_replicas=[], refetched_ranges=0,
+        observed_throughputs=biased, observed_rtts=rtts)
+    res = client.retune(2 * GB)
+    # the tuner must have been fed the RECOVERED wire rates
+    expect = autotune_chunk_params(
+        [wire["h0:1"], wire["h1:2"]], rtt=[rtts["h0:1"], rtts["h1:2"]],
+        file_size=2 * GB)
+    assert res.predicted_times == expect.predicted_times
+    assert res.params == expect.params
+    # and NOT the biased readings
+    biased_res = autotune_chunk_params(
+        [biased["h0:1"], biased["h1:2"]],
+        rtt=[rtts["h0:1"], rtts["h1:2"]], file_size=2 * GB)
+    assert res.predicted_times != biased_res.predicted_times
+
+
+def test_fetch_telemetry_bandwidth_is_rtt_corrected():
+    """Regression for the in-fetch Telemetry snapshots: the bandwidth
+    vector handed to ``tuner.update`` carries RTT-bias-corrected
+    estimates (full-fleet positional contract preserved: dead slot 0.0,
+    un-correctable readings passed through)."""
+    from repro.transfer.client import Replica, _corrected_bandwidths
+
+    replicas = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b"),
+                Replica("h2", 3, "/b")]
+    wire, rtt, chunk = 70.0 * MB, 0.5, 40.0 * MB
+    biased = chunk / (rtt + chunk / wire)
+    bw = _corrected_bandwidths(
+        replicas,
+        est_values=[biased, 50.0 * MB, 5.0 * MB],
+        rtt_min=[rtt, 0.0, 0.2],
+        failed=["h2:3"],
+        bytes_per={"h0:1": int(chunk * 4), "h1:2": 10 * MB, "h2:3": 0},
+        reqs_per={"h0:1": 4, "h1:2": 2, "h2:3": 0})
+    assert bw[0] == pytest.approx(wire, rel=1e-6)   # bias inverted
+    assert bw[1] == 50.0 * MB                       # no RTT sample: as-is
+    assert bw[2] == 0.0                             # dead slot preserved
+
+
 def test_retune_all_dead_replica_telemetry():
     """A transfer whose every replica failed (or never produced a sample)
     must make retune raise — and leave the adopted params untouched — not
@@ -120,8 +178,9 @@ def test_retune_all_dead_replica_telemetry():
 def test_adaptive_chunks_scale_with_throughput(blob):
     """Slow mirror must get smaller requests, not fewer-by-starvation —
     the paper's load-proportionality claim on the real runtime."""
-    servers = _mirrors(blob, [Throttle(bytes_per_s=15 * MB),
-                              Throttle(bytes_per_s=120 * MB)])
+    servers = _mirrors(blob, [
+        Throttle(bytes_per_s=15 * MB, deterministic=True),
+        Throttle(bytes_per_s=120 * MB, deterministic=True)])
     try:
         replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
         params = ChunkParams(initial_chunk=128 * 1024, large_chunk=MB)

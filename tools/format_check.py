@@ -1,0 +1,146 @@
+"""Offline-verifiable formatting gate (subset of ``ruff format``).
+
+The CI lint job wants ``ruff format --check`` to gate the build, but the
+development container has no ruff binary and no network, so a
+tool-generated repo-wide reformat cannot be produced (or verified)
+locally — only ruff itself emits ruff-stable output.  This script
+enforces the subset of the formatter's invariants that IS deterministic
+without the tool, so the tree stays normalized and the eventual
+``ruff format`` adoption diff is purely structural.
+
+Rules, per file kind (like ruff format, nothing inside a string literal
+is ever touched — Python sources are tokenized and every line spanned by
+a multi-line string is left verbatim):
+
+* ``.py`` — no trailing whitespace, LF endings, no tabs in indentation,
+  exactly one newline at EOF; all except the EOF rule skip lines inside
+  multi-line string literals (and files that fail to tokenize are left
+  alone entirely).
+* ``.json`` — same rules (JSON strings cannot span lines or contain raw
+  tabs, so whole-line normalization is value-preserving).
+* ``.md`` / ``.txt`` / ``.yml`` / ``.yaml`` / ``.toml`` — EOF-newline
+  normalization only: Markdown trailing spaces are hard line breaks,
+  YAML block scalars and TOML multi-line strings preserve interior
+  whitespace, so in-line edits are not safe there.
+
+Usage::
+
+    python tools/format_check.py          # check, exit 1 on violations
+    python tools/format_check.py --fix    # rewrite files in place
+"""
+
+from __future__ import annotations
+
+import argparse
+import io
+import os
+import sys
+import tokenize
+
+#: directories never scanned (VCS internals, caches, artifacts).
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".ruff_cache",
+             "node_modules", ".hypothesis"}
+#: suffixes getting full line normalization.
+FULL_SUFFIXES = (".py", ".json")
+#: suffixes getting EOF-newline normalization only.
+EOF_ONLY_SUFFIXES = (".md", ".txt", ".yml", ".yaml", ".toml")
+
+def _protected_lines(text: str) -> set | None:
+    """1-based numbers of every line spanned by a multi-line string
+    token — those lines hold literal VALUE and must stay verbatim.
+    Returns None when the file does not tokenize (leave it untouched)."""
+    protected = set()
+    fstring_starts = []          # 3.12+: f-strings arrive in three tokens
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            name = tokenize.tok_name[tok.type]
+            if name == "FSTRING_START":
+                fstring_starts.append(tok.start[0])
+            elif name == "FSTRING_END" and fstring_starts:
+                start = fstring_starts.pop()
+                if tok.end[0] > start:   # only multi-line f-strings
+                    protected.update(range(start, tok.end[0] + 1))
+            elif (tok.type == tokenize.STRING
+                    and tok.end[0] > tok.start[0]):
+                protected.update(range(tok.start[0], tok.end[0] + 1))
+    except (tokenize.TokenError, IndentationError, SyntaxError,
+            ValueError):
+        return None
+    return protected
+
+
+def _normalize_line(line: str) -> str:
+    line = line[:-1] if line.endswith("\r") else line
+    line = line.rstrip()
+    indent_len = len(line) - len(line.lstrip())
+    return line[:indent_len].replace("\t", "    ") + line[indent_len:]
+
+
+def _trim_eof(lines: list) -> list:
+    while lines and lines[-1] == "":
+        lines.pop()
+    return lines
+
+
+def normalize(text: str, kind: str = ".py") -> str:
+    """Normalized content for one file (``kind`` = file suffix)."""
+    if not text:
+        return ""
+    if kind in EOF_ONLY_SUFFIXES:
+        body = text[:-1] if text.endswith("\n") else text
+        while body.endswith("\n"):
+            body = body[:-1]
+        return body + "\n" if body else ""
+    protected = _protected_lines(text) if kind == ".py" else set()
+    if protected is None:
+        return text                      # not tokenizable: hands off
+    lines = text.split("\n")
+    out = [line if (i + 1) in protected else _normalize_line(line)
+           for i, line in enumerate(lines)]
+    # exactly one newline at EOF — safe even for .py: a file cannot END
+    # inside a string literal (that would not tokenize), and a
+    # terminated literal's last line carries its closing quotes, so the
+    # trailing empties trimmed here are always outside every literal
+    out = _trim_eof(out)
+    return "\n".join(out) + "\n" if out else ""
+
+
+def iter_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d not in SKIP_DIRS)
+        for name in sorted(filenames):
+            if name.endswith(FULL_SUFFIXES + EOF_ONLY_SUFFIXES):
+                yield os.path.join(dirpath, name)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fix", action="store_true",
+                    help="rewrite violating files in place")
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."))
+    args = ap.parse_args(argv)
+    root = os.path.abspath(args.root)
+
+    dirty = []
+    for path in iter_files(root):
+        with open(path, encoding="utf-8") as f:
+            original = f.read()
+        fixed = normalize(original, os.path.splitext(path)[1])
+        if fixed != original:
+            dirty.append(os.path.relpath(path, root))
+            if args.fix:
+                with open(path, "w", encoding="utf-8", newline="\n") as f:
+                    f.write(fixed)
+    if dirty:
+        verb = "reformatted" if args.fix else "needs formatting"
+        for p in dirty:
+            print(f"{verb}: {p}")
+        print(f"{len(dirty)} file(s) {verb}")
+        return 0 if args.fix else 1
+    print("format check clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
