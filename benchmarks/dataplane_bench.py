@@ -1,0 +1,144 @@
+"""Data-plane goodput: pipelined vs serial, zero-copy vs copy, on real
+loopback sockets.
+
+Measures the actual ``MDTPClient`` runtime (raw-socket HTTP/1.1 against
+in-process ``RangeServer`` mirrors), not the simulator:
+
+``dataplane/loopback/{1rep,3rep}/*``
+    Unthrottled loopback assembly goodput for the three receive paths —
+    ``copy_serial`` (depth-1, legacy ``bytes``-materializing path),
+    ``zerocopy_serial`` (depth-1, ``sock_recv_into`` the destination
+    buffer), ``zerocopy_pipelined`` (depth-4).  Loopback has no RTT, so
+    these rows isolate the per-chunk memcpy cost; wall time is CPU-bound
+    and machine-dependent (informational, not perf-guarded).
+
+``dataplane/highrtt/{serial,pipelined}``
+    The headline: a WAN-like trace — deterministic token-bucket mirrors
+    plus an emulated 30 ms request-path latency
+    (``MDTPClient(request_latency=...)``; loopback itself has none).
+    Serial pays the latency once per chunk; the pipelined client keeps
+    depth requests in flight so bodies stream while successors' requests
+    propagate.  Deterministic pacing makes these wall times
+    load-independent, so the rows ARE stable perf signal:
+    ``benchmarks/run.py --check`` guards them at 3x and additionally
+    requires pipelined goodput >= serial (the win-guard).
+
+Derived column = goodput in MB/s (assembled bytes / transfer wall time);
+``us_per_call`` = mean wall per transfer.  Rows land in
+``BENCH_dataplane.json`` via ``python -m benchmarks.run --skip ...
+--json BENCH_dataplane.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import hashlib
+
+import numpy as np
+
+from .common import emit  # noqa: F401  (also wires sys.path to src/)
+
+from repro.core.chunking import ChunkParams
+from repro.transfer import MDTPClient, RangeServer, Replica, Throttle
+
+MB = 1024 * 1024
+
+#: emulated request-path propagation delay for the high-RTT trace (s).
+HIGH_RTT = 0.03
+
+
+def _blob(size: int) -> bytes:
+    rng = np.random.default_rng(7)
+    return rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+
+
+def _measure(servers, blob, *, depth, zero_copy, latency, params, reps):
+    """Mean (goodput_MBps, wall_us) over ``reps`` transfers; verifies
+    integrity on the first rep (a fast wrong answer is no answer)."""
+    replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
+    elapsed = []
+    for rep in range(reps):
+        client = MDTPClient(
+            replicas, params=params, pipeline_depth=depth,
+            zero_copy=zero_copy, request_latency=latency)
+        buf, report = asyncio.run(client.fetch(len(blob)))
+        if rep == 0:
+            assert hashlib.sha256(bytes(buf)).hexdigest() == \
+                hashlib.sha256(blob).hexdigest(), "integrity"
+        elapsed.append(report.elapsed)
+    mean = float(np.mean(elapsed))
+    return len(blob) / mean / MB, mean * 1e6
+
+
+def _loopback_section(blob, params, reps, n_replicas: int):
+    servers = [RangeServer().start() for _ in range(n_replicas)]
+    for s in servers:
+        s.add_blob("/data", blob)
+    try:
+        base = f"dataplane/loopback/{n_replicas}rep"
+        modes = (("copy_serial", 1, False),
+                 ("zerocopy_serial", 1, True),
+                 ("zerocopy_pipelined", 4, True))
+        serial_goodput = None
+        for name, depth, zc in modes:
+            goodput, us = _measure(
+                servers, blob, depth=depth, zero_copy=zc, latency=0.0,
+                params=params, reps=reps)
+            extra = []
+            if name == "zerocopy_serial" and serial_goodput:
+                extra = [f"vs_copy={goodput / serial_goodput:.2f}x"]
+            if name == "copy_serial":
+                serial_goodput = goodput
+            emit(f"{base}/{name}", us, f"{goodput:.1f}", *extra)
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def _highrtt_section(blob, params, reps, depth: int):
+    servers = [RangeServer(
+        throttle=Throttle(bytes_per_s=40 * MB, deterministic=True)).start()
+        for _ in range(2)]
+    for s in servers:
+        s.add_blob("/data", blob)
+    try:
+        serial, s_us = _measure(
+            servers, blob, depth=1, zero_copy=True, latency=HIGH_RTT,
+            params=params, reps=reps)
+        emit("dataplane/highrtt/serial", s_us, f"{serial:.1f}",
+             f"rtt={HIGH_RTT:g}")
+        piped, p_us = _measure(
+            servers, blob, depth=depth, zero_copy=True, latency=HIGH_RTT,
+            params=params, reps=reps)
+        emit("dataplane/highrtt/pipelined", p_us, f"{piped:.1f}",
+             f"rtt={HIGH_RTT:g}", f"depth={depth}",
+             f"vs_serial={piped / serial:.2f}x")
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke sizes (CI / tests)")
+    ap.add_argument("--depth", type=int, default=4,
+                    help="pipeline depth for the pipelined rows")
+    args = ap.parse_args(argv)
+
+    size = 8 * MB if args.quick else 32 * MB
+    reps = 2 if args.quick else 5
+    blob = _blob(size)
+    params = ChunkParams(initial_chunk=512 * 1024, large_chunk=2 * MB)
+
+    for n in (1, 3):
+        _loopback_section(blob, params, reps, n)
+    # the high-RTT trace needs enough bytes for a steady-state pipeline
+    # (probe + endgame phases amortized); pacing-dominated, so a fixed
+    # size keeps --full minutes, not tens of minutes
+    _highrtt_section(_blob(24 * MB), params, reps, args.depth)
+
+
+if __name__ == "__main__":
+    main()

@@ -49,11 +49,41 @@ CHECK_ROW_PREFIXES = (
 #: that regenerates comparable rows and the steady-state prefixes to
 #:  compare.  ``contention/*`` rows time a WARM full-policy replay
 #: (fused sweeps + round-core sims, all jit-cached), so they are
-#: steady-state signal like the autotune rows.
+#: steady-state signal like the autotune rows.  ``dataplane/highrtt/*``
+#: rows are deterministic-token-bucket + emulated-RTT transfers, so
+#: their wall times are pacing-dominated and machine-stable (the raw
+#: ``dataplane/loopback/*`` rows are CPU-bound like the pysim micros and
+#: deliberately excluded); the dataplane suite ALSO enforces the
+#: win-guard: pipelined goodput must stay >= serial on the high-RTT
+#: trace (see ``_check_dataplane_wins``).
 CHECK_SUITES = (
     ("BENCH_autotune.json", "autotune", CHECK_ROW_PREFIXES),
     ("BENCH_online.json", "contention", ("contention/",)),
+    ("BENCH_dataplane.json", "dataplane", ("dataplane/highrtt/",)),
 )
+
+
+def _check_dataplane_wins(rows) -> int:
+    """The data-plane win-guard: on the freshly-run high-RTT trace, the
+    pipelined client's goodput (derived column, MB/s) must not fall
+    below the serial client's — a pipelining regression (lost overlap,
+    broken request splitting) shows up here long before the 3x wall-time
+    tolerance trips."""
+    by_name = {r["name"]: float(r["derived"]) for r in rows
+               if r["name"].startswith("dataplane/highrtt/")}
+    serial = by_name.get("dataplane/highrtt/serial", 0.0)
+    piped = by_name.get("dataplane/highrtt/pipelined", 0.0)
+    if serial <= 0.0 or piped <= 0.0:
+        print("# check: dataplane win-guard rows missing", file=sys.stderr)
+        return 1
+    verdict = "ok" if piped >= serial else "REGRESSION"
+    print(f"# check dataplane win-guard: pipelined {piped:.1f} MB/s vs "
+          f"serial {serial:.1f} MB/s {verdict}", flush=True)
+    if piped < serial:
+        print("# check FAILED: pipelined goodput fell below serial on "
+              "the high-RTT trace", file=sys.stderr)
+        return 1
+    return 0
 
 
 def _section(title: str) -> None:
@@ -95,8 +125,15 @@ def _run_check_suite(path: str, section: str, prefixes) -> int:
     elif section == "contention":
         from . import contention_bench
         contention_bench.main(["--quick"])
+    elif section == "dataplane":
+        from . import dataplane_bench
+        dataplane_bench.main(["--quick"])
     else:
         raise ValueError(f"unknown check section: {section!r}")
+
+    rc_extra = 0
+    if section == "dataplane":
+        rc_extra = _check_dataplane_wins(emitted_rows())
 
     compared, failures = 0, []
     for row in emitted_rows():
@@ -123,7 +160,7 @@ def _run_check_suite(path: str, section: str, prefixes) -> int:
         return 1
     print(f"# check passed: {compared} rows within "
           f"{CHECK_TOLERANCE:g}x of {path}", flush=True)
-    return 0
+    return rc_extra
 
 
 def perf_check(path: str) -> int:
@@ -147,7 +184,8 @@ def main(argv=None) -> None:
                     help="paper-fidelity reps/sizes (slow)")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (fig2 fig3 fig4 fig5 table2 "
-                         "autotune online contention restore roofline)")
+                         "autotune online contention dataplane restore "
+                         "roofline)")
     ap.add_argument("--json", nargs="?", const="BENCH_autotune.json",
                     default=None, metavar="PATH",
                     help="also dump every emitted row as machine-readable "
@@ -207,6 +245,10 @@ def main(argv=None) -> None:
 
     from . import contention_bench
     run("contention", lambda: contention_bench.main(
+        [] if args.full else ["--quick"]))
+
+    from . import dataplane_bench
+    run("dataplane", lambda: dataplane_bench.main(
         [] if args.full else ["--quick"]))
 
     # Framework-layer benches (present once the substrates land).

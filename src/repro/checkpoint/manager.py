@@ -121,6 +121,15 @@ class _StreamingRestore:
     transfers of early leaves run while later leaves are still on the
     wire, instead of serially after the whole blob is buffered.
 
+    Implements the client's **zero-copy sink protocol**
+    (``writable(start, length) -> memoryview`` + ``commit(start,
+    nbytes)``): the transfer layer receives socket bytes directly into
+    this sink's preallocated blob buffer, so the restore path is
+    copy-free from socket to leaf buffer (the only remaining move is the
+    inherent host→device ``device_put``).  The legacy ``sink(start,
+    data)`` callable is kept (write-then-commit) for callers that hold
+    their own bytes.
+
     Deliveries may **overlap or repeat**: the sink tracks covered byte
     intervals and only decrements per-leaf countdowns for bytes seen for
     the first time, so a duplicated or partially-overlapping range (a
@@ -184,11 +193,27 @@ class _StreamingRestore:
         cov[i:j] = [(ns, ne)]
         return new
 
-    def sink(self, start: int, data: bytes) -> None:
+    def writable(self, start: int, length: int) -> memoryview:
+        """Zero-copy destination for ``[start, start + length)``: the
+        transfer layer reads socket bytes straight into this view, then
+        calls :meth:`commit` for the bytes that actually landed."""
+        return memoryview(self._buf)[start:start + length]
+
+    def sink(self, start: int, data) -> None:
+        """Legacy byte-delivery path: copy ``data`` (bytes or a transient
+        memoryview) into place, then account for it."""
         end = start + len(data)
         if end <= start:
             return
         self._buf[start:end] = data
+        self.commit(start, len(data))
+
+    def commit(self, start: int, nbytes: int) -> None:
+        """Account for ``nbytes`` landed at ``start`` (already in the
+        buffer — via :meth:`writable` or :meth:`sink`)."""
+        end = start + nbytes
+        if end <= start:
+            return
         fresh = self._claim_new(start, end)
         self.duplicate_bytes += (end - start) - sum(e - s for s, e in fresh)
         # Two phases so an exception can't corrupt the accounting: pure
@@ -353,13 +378,15 @@ def restore_checkpoint(
             async with client_for(
                     [Replica(r.host, r.port, r.path + "/" + _DATA)
                      for r in base]) as dclient:
+                # the stream object carries the writable/commit zero-copy
+                # protocol: ranges are received straight into its buffer
                 if not wave_bytes or wave_bytes >= total:
-                    await dclient.fetch(total, sink=stream.sink, tuner=tuner)
+                    await dclient.fetch(total, sink=stream, tuner=tuner)
                     return stream.finish()
                 pos = 0
                 while pos < total:
                     n = min(int(wave_bytes), total - pos)
-                    _, report = await dclient.fetch(n, sink=stream.sink,
+                    _, report = await dclient.fetch(n, sink=stream,
                                                     offset=pos)
                     pos += n
                     if pos >= total:

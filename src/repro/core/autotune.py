@@ -163,6 +163,7 @@ def autotune_chunk_params(
     n_seeds: int = 1,
     mode: str = "proportional",
     engine: str | None = None,
+    pipeline_depth: int = 1,
 ) -> AutotuneResult:
     """Pick (C, L) minimizing simulated transfer time.
 
@@ -182,12 +183,18 @@ def autotune_chunk_params(
         the round-synchronous core (O(#rounds) device steps); pass
         ``"event"`` to fall back to exact per-event ordering or
         ``"scan"`` for the fixed-trip-count variant.
+      pipeline_depth: the runtime's per-connection request pipeline depth
+        (``SimConfig.pipeline_depth``) — without it the sweep over-pays
+        for small chunks the pipelined data plane makes cheap and the
+        adopted (C, L) diverges from what the wire actually does.
     """
     grid = list(grid or default_grid())
     engine = resolve_engine(engine, mode)
     bw, rtt, throttle_t, throttle_bw = _prep(
         bandwidth, rtt, None, None)
-    cfg = _sized_config(SimConfig(jitter=jitter), engine, grid, file_size)
+    cfg = _sized_config(
+        SimConfig(jitter=jitter, pipeline_depth=pipeline_depth),
+        engine, grid, file_size)
     grid_c, grid_l, grid_min = _grid_arrays(grid)
     seeds = jnp.arange(max(n_seeds, 1))
 
@@ -219,6 +226,7 @@ def sweep_scenarios(
     n_seeds: int = 1,
     mode: str = "proportional",
     engine: str | None = None,
+    pipeline_depth: int = 1,
 ) -> jax.Array:
     """Seed-averaged predicted times for a batch of scenarios.
 
@@ -248,8 +256,9 @@ def sweep_scenarios(
     s = bw.shape[0]
     file_size = jnp.broadcast_to(
         jnp.asarray(file_size, jnp.float32), (s,))
-    cfg = _sized_config(SimConfig(jitter=jitter), engine, grid,
-                        np.asarray(file_size))
+    cfg = _sized_config(
+        SimConfig(jitter=jitter, pipeline_depth=pipeline_depth),
+        engine, grid, np.asarray(file_size))
     grid_c, grid_l, grid_min = _grid_arrays(grid)
     seeds = jnp.arange(max(n_seeds, 1))
 
@@ -272,6 +281,7 @@ def autotune_batch(
     n_seeds: int = 1,
     mode: str = "proportional",
     engine: str | None = None,
+    pipeline_depth: int = 1,
 ) -> list[AutotuneResult]:
     """Per-scenario chunk-size selection over an ``[S, N]`` scenario batch.
 
@@ -285,6 +295,7 @@ def autotune_batch(
         bandwidth, rtt, file_size, grid=grid,
         throttle_t=throttle_t, throttle_bw=throttle_bw,
         jitter=jitter, n_seeds=n_seeds, mode=mode, engine=engine,
+        pipeline_depth=pipeline_depth,
     ), np.float64)
 
     results = []
@@ -311,6 +322,7 @@ def contention_sweep(
     n_seeds: int = 1,
     mode: str = "proportional",
     engine: str | None = None,
+    pipeline_depth: int = 1,
 ) -> dict[int, AutotuneResult]:
     """Per-contention-level chunk tuning: the (C, L) ladder a fleet
     scheduler adopts as concurrent transfers arrive and drain.
@@ -338,7 +350,7 @@ def contention_sweep(
     mat = np.stack([bw / k for k in ks])
     results = autotune_batch(
         mat, rtt, file_size, grid=grid, jitter=jitter, n_seeds=n_seeds,
-        mode=mode, engine=engine)
+        mode=mode, engine=engine, pipeline_depth=pipeline_depth)
     return dict(zip(ks, results))
 
 
@@ -419,7 +431,7 @@ def _adam_descend(vg, z: jax.Array, steps: int, lr: float, args=()):
 
 
 def _exact_time(params: ChunkParams, bw, rtt_a, throttle_t, throttle_bw,
-                file_f, mode: str) -> float:
+                file_f, mode: str, pipeline_depth: int = 1) -> float:
     """Honest number for integer params: exact sizes, round core, no
     jitter — the metric both gradient tuners report and compare on.
     Routed through the cached jit dispatcher (an eager ``while_loop``
@@ -427,7 +439,8 @@ def _exact_time(params: ChunkParams, bw, rtt_a, throttle_t, throttle_bw,
     return float(_simulate(
         bw, rtt_a, throttle_t, throttle_bw, jnp.int32(0),
         ChunkArrays.from_params(params), file_f,
-        mode=mode, config=SimConfig(), engine="round",
+        mode=mode, config=SimConfig(pipeline_depth=pipeline_depth),
+        engine="round",
     ).total_time)
 
 
@@ -435,7 +448,7 @@ def _finish_grad_tune(vg, vg_args, best_z, history,
                       init: tuple[float, float], min_chunk: int,
                       l_floor: float, mode: str,
                       bw, rtt_a, throttle_t, throttle_bw,
-                      file_f) -> GradTuneResult:
+                      file_f, pipeline_depth: int = 1) -> GradTuneResult:
     """Round ``best_z`` to integer ``ChunkParams``, guarantee never-worse
     than ``init`` on the EXACT metric (rounding can cross a round-count
     jump), and report the (dT/dC, dT/dL) chain-rule gradient."""
@@ -446,13 +459,13 @@ def _finish_grad_tune(vg, vg_args, best_z, history,
         large_chunk=max(l_best, min_chunk),
         min_chunk=min_chunk, mode=mode)
     t_final = _exact_time(params, bw, rtt_a, throttle_t, throttle_bw,
-                          file_f, mode)
+                          file_f, mode, pipeline_depth)
     init_params = ChunkParams(
         initial_chunk=max(int(round(init[0])), min_chunk),
         large_chunk=max(int(round(init[1])), min_chunk),
         min_chunk=min_chunk, mode=mode)
     t_init = _exact_time(init_params, bw, rtt_a, throttle_t, throttle_bw,
-                         file_f, mode)
+                         file_f, mode, pipeline_depth)
     if t_init < t_final:
         params, t_final = init_params, t_init
     # grad w.r.t. (C, L) via the chain rule through the softplus-free
@@ -480,6 +493,7 @@ def tune_chunk_params_grad(
     min_chunk: int = DEFAULT_MIN_CHUNK,
     max_rounds: int = 1024,
     grid: Sequence[tuple[int, int]] | None = None,
+    pipeline_depth: int = 1,
 ) -> GradTuneResult:
     """Continuous (C, L) refinement: ``jax.grad`` polish of the grid winner.
 
@@ -513,11 +527,13 @@ def tune_chunk_params_grad(
     file_f = jnp.float32(file_size)
     if init is None:
         seed_res = autotune_chunk_params(
-            bandwidth, rtt, int(file_size), grid=grid, mode=mode)
+            bandwidth, rtt, int(file_size), grid=grid, mode=mode,
+            pipeline_depth=pipeline_depth)
         init = (float(seed_res.params.initial_chunk),
                 float(seed_res.params.large_chunk))
     l_floor = _l_floor_for(min_chunk, file_size, max_rounds)
-    cfg = SimConfig(max_rounds=max_rounds, exact_sizes=False)
+    cfg = SimConfig(max_rounds=max_rounds, exact_sizes=False,
+                    pipeline_depth=pipeline_depth)
 
     def total_time(z, bw, rtt_a, throttle_t, throttle_bw):
         c, l = _z_decode(z, min_chunk, l_floor)
@@ -533,4 +549,4 @@ def tune_chunk_params_grad(
     best_z, history = _adam_descend(vg, z0, steps, lr, args=vg_args)
     return _finish_grad_tune(
         vg, vg_args, best_z, history, init, min_chunk, l_floor, mode,
-        bw, rtt_a, throttle_t, throttle_bw, file_f)
+        bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth)

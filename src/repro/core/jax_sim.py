@@ -118,6 +118,16 @@ class SimConfig(NamedTuple):
     #: False = continuous allocator relaxation (skip ``jnp.round``) so the
     #: scan core is usefully differentiable in (C, L); < 1 byte/request off.
     exact_sizes: bool = True
+    #: per-connection HTTP request pipeline depth of the modeled runtime
+    #: (``MDTPClient.pipeline_depth``).  1 = serial request-response:
+    #: every chunk pays a full request RTT.  With depth k > 1 the next
+    #: request is issued while up to k-1 predecessors stream, so a warm
+    #: server only idles for the RTT *not hidden* behind its in-flight
+    #: bodies: per-chunk latency = max(0, rtt - (k-1) * body_time).  A
+    #: server's FIRST chunk still pays the full RTT (empty pipe).  Static
+    #: (baked into the jaxpr) like the rest of the config; the smooth
+    #: max(0, ...) keeps the scan core differentiable.
+    pipeline_depth: int = 1
 
 
 class JaxSimResult(NamedTuple):
@@ -147,9 +157,20 @@ class _State(NamedTuple):
 def _chunk_duration(
     size: jax.Array, t0: jax.Array, rtt: jax.Array,
     bw0: jax.Array, throttle_t: jax.Array, bw1: jax.Array,
+    depth: int = 1, warm: jax.Array | None = None,
 ) -> jax.Array:
     """Time to fetch ``size`` bytes starting at ``t0`` on one server whose
     rate steps from ``bw0`` to ``bw1`` at ``throttle_t``.
+
+    ``depth`` models the runtime's per-connection request pipelining (see
+    ``SimConfig.pipeline_depth``): a ``warm`` server (one that has already
+    served a request, so the pipe is primed) pays only the RTT residue
+    not hidden behind its ``depth - 1`` in-flight bodies,
+    ``max(0, rtt - (depth - 1) * body_time)``.  ``warm=None`` treats every
+    chunk as warm; cold chunks and ``depth == 1`` pay the full RTT.
+    Throttle-window arithmetic keeps the request-arrival convention
+    ``t_start = t0 + rtt`` in all cases (the breakpoint is a property of
+    the path, and keeping it fixed preserves the depth=1 jaxpr exactly).
 
     Elementwise, so it vectorizes over the ``[N]`` server axis of the
     round cores unchanged.  The untaken branch is re-clamped to a finite
@@ -169,7 +190,12 @@ def _chunk_duration(
     dur = jnp.where(pre_only, dur_pre, dur_post)
     # throttle already in effect at t_start
     dur = jnp.where(t_start >= throttle_t, size / jnp.maximum(bw1, 1e-9), dur)
-    return rtt + dur
+    if depth <= 1:
+        return rtt + dur
+    rtt_eff = jnp.maximum(rtt - (depth - 1) * dur, 0.0)
+    if warm is not None:
+        rtt_eff = jnp.where(warm, rtt_eff, rtt)
+    return rtt_eff + dur
 
 
 def _make_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
@@ -211,7 +237,8 @@ def _make_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
                 jax.random.normal(sub) * cfg.jitter - 0.5 * cfg.jitter**2
             )
         dt = _chunk_duration(size, now, rtt[i], bw0[i] * scale, throttle_t[i],
-                             bw1[i] * scale)
+                             bw1[i] * scale, depth=cfg.pipeline_depth,
+                             warm=state.reqs[i] > 0)
 
         t_free = state.t_free.at[i].set(jnp.where(active, now + dt, _INF))
         pending = state.pending.at[i].set(jnp.where(active, size, 0.0))
@@ -367,7 +394,8 @@ def _make_round_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
                                 exact=cfg.exact_sizes)
         tf_safe = jnp.where(alive, state.t_free, 0.0)
         dur_est = _chunk_duration(sizes_est, tf_safe, rtt, bw0, throttle_t,
-                                  bw1)
+                                  bw1, depth=cfg.pipeline_depth,
+                                  warm=state.reqs > 0)
         lag = jnp.maximum(tf_safe[:, None] - tf_safe[None, :], 0.0)
         idx = jnp.arange(lag.shape[0])
         tie = jnp.logical_and(tf_safe[:, None] == tf_safe[None, :],
@@ -390,7 +418,8 @@ def _make_round_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
                 jax.random.normal(sub, now.shape) * cfg.jitter
                 - 0.5 * cfg.jitter**2)
         dt = _chunk_duration(granted, now, rtt, bw0 * scale, throttle_t,
-                             bw1 * scale)
+                             bw1 * scale, depth=cfg.pipeline_depth,
+                             warm=state.reqs > 0)
         t_free = jnp.where(active, now + dt, _INF)
         stepped = jnp.logical_or(jnp.any(has_pending), jnp.any(active))
         return _State(

@@ -128,23 +128,19 @@ class Telemetry:
         canonical report→telemetry encoding (failed replica = 0.0 slot,
         positional full-fleet vectors, unmeasured RTT = 0.0), shared by
         the checkpoint-restore wave loop and any other batch consumer.
-        Bandwidths are RTT-bias corrected from the report's measured
-        RTTs and mean served chunk sizes (same contract as the client's
-        in-fetch snapshots — tuners always see wire rates, per-request
-        readings never leak through uncorrected).  Duck-typed to avoid a
-        core→transfer import."""
+        ``observed_throughputs`` are already WIRE rates — the client
+        strips the per-request RTT bias at the observation point
+        (``repro.transfer.client.wire_elapsed``) — so they pass through
+        uncorrected here; applying ``rtt_corrected_bandwidth`` again
+        would overstate capacity.  Duck-typed to avoid a core→transfer
+        import."""
         bandwidth = []
         for r in replicas:
             if r.name in report.failed_replicas:
                 bandwidth.append(0.0)
                 continue
-            b = float(report.observed_throughputs.get(r.name, 0.0))
-            reqs = report.requests_per_replica.get(r.name, 0)
-            mean_chunk = (report.bytes_per_replica.get(r.name, 0) / reqs
-                          if reqs > 0 else 0.0)
-            bandwidth.append(rtt_corrected_bandwidth(
-                b, float(report.observed_rtts.get(r.name, 0.0)),
-                mean_chunk))
+            bandwidth.append(float(
+                report.observed_throughputs.get(r.name, 0.0)))
         return cls(
             bandwidth=tuple(bandwidth),
             rtt=tuple(float(report.observed_rtts.get(r.name, 0.0))
@@ -201,6 +197,7 @@ def tune_chunk_params_mcgrad(
     min_chunk: int = DEFAULT_MIN_CHUNK,
     max_rounds: int = 1024,
     grid: Sequence[tuple[int, int]] | None = None,
+    pipeline_depth: int = 1,
 ) -> GradTuneResult:
     """Monte-Carlo (C, L) descent on the scan core: one compile, ``n_seeds``
     pathwise gradients averaged per step.
@@ -220,12 +217,14 @@ def tune_chunk_params_mcgrad(
     file_f = jnp.float32(file_size)
     if init is None:
         seed_res = autotune_chunk_params(
-            bandwidth, rtt, int(file_size), grid=grid, mode=mode)
+            bandwidth, rtt, int(file_size), grid=grid, mode=mode,
+            pipeline_depth=pipeline_depth)
         init = (float(seed_res.params.initial_chunk),
                 float(seed_res.params.large_chunk))
     l_floor = _l_floor_for(min_chunk, file_size, max_rounds)
     cfg = SimConfig(max_rounds=max_rounds, exact_sizes=False,
-                    jitter=bw_jitter, rtt_jitter=rtt_jitter)
+                    jitter=bw_jitter, rtt_jitter=rtt_jitter,
+                    pipeline_depth=pipeline_depth)
     vg = _mc_value_and_grad(mode, cfg, max(n_seeds, 1))
     vg_args = (bw, rtt_a, throttle_t, throttle_bw, file_f,
                jnp.float32(min_chunk), jnp.float32(l_floor))
@@ -233,7 +232,7 @@ def tune_chunk_params_mcgrad(
     best_z, history = _adam_descend(vg, z0, steps, lr, args=vg_args)
     return _finish_grad_tune(
         vg, vg_args, best_z, history, init, min_chunk, l_floor, mode,
-        bw, rtt_a, throttle_t, throttle_bw, file_f)
+        bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth)
 
 
 # --------------------------------------------------------------------------
@@ -252,6 +251,9 @@ class GridTuner:
     mode: str = "proportional"
     grid: Optional[list[tuple[int, int]]] = None
     default_rtt: float = _DEFAULT_RTT
+    #: request pipeline depth of the runtime being tuned — keeps the
+    #: simulated RTT amortization honest (``SimConfig.pipeline_depth``).
+    pipeline_depth: int = 1
     params: Optional[ChunkParams] = None
     updates: int = 0
 
@@ -264,7 +266,8 @@ class GridTuner:
             return None
         self.updates += 1
         res = autotune_chunk_params(
-            bw, rtts, int(t.remaining_bytes), grid=self.grid, mode=self.mode)
+            bw, rtts, int(t.remaining_bytes), grid=self.grid, mode=self.mode,
+            pipeline_depth=self.pipeline_depth)
         self.params = res.params
         return res.params
 
@@ -288,6 +291,8 @@ class MCGradTuner:
     max_rounds: int = 1024
     default_rtt: float = _DEFAULT_RTT
     grid: Optional[list[tuple[int, int]]] = None
+    #: request pipeline depth of the runtime being tuned (see GridTuner).
+    pipeline_depth: int = 1
     params: Optional[ChunkParams] = None
     updates: int = 0
     last_result: Optional[GradTuneResult] = None
@@ -309,7 +314,8 @@ class MCGradTuner:
             steps=self.steps, lr=self.lr, n_seeds=self.n_seeds,
             bw_jitter=self.bw_jitter, rtt_jitter=self.rtt_jitter,
             mode=self.mode, min_chunk=self.min_chunk,
-            max_rounds=self.max_rounds, grid=self.grid)
+            max_rounds=self.max_rounds, grid=self.grid,
+            pipeline_depth=self.pipeline_depth)
         self.params, self.last_result = res.params, res
         return res.params
 
@@ -355,6 +361,9 @@ class BanditTuner:
     mode: str = "proportional"
     grid: Optional[list[tuple[int, int]]] = None
     default_rtt: float = _DEFAULT_RTT
+    #: request pipeline depth of the runtime being tuned (see GridTuner) —
+    #: shapes the seeding sweep that proposes the arm set.
+    pipeline_depth: int = 1
     arms: list[_Arm] = field(default_factory=list)
     params: Optional[ChunkParams] = None
     updates: int = 0
@@ -373,7 +382,8 @@ class BanditTuner:
         if not bw or t.remaining_bytes < 2 * DEFAULT_MIN_CHUNK:
             return None
         res = autotune_chunk_params(
-            bw, rtts, int(t.remaining_bytes), grid=self.grid, mode=self.mode)
+            bw, rtts, int(t.remaining_bytes), grid=self.grid, mode=self.mode,
+            pipeline_depth=self.pipeline_depth)
         order = np.argsort(res.predicted_times)
         self.arms = []
         seen = set()

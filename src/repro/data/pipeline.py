@@ -203,12 +203,13 @@ class _VirtualRangeClient(MDTPClient):
         self._starts = np.cumsum([0] + [l for _, l in ranges])
 
     def _make_conn(self, replica):
-        from repro.transfer.client import _Conn
+        from repro.transfer.client import _Conn, _RangeReply
         outer = self
 
         class _VConn(_Conn):
-            async def fetch_range(conn_self, start, end):
+            async def fetch_range(conn_self, start, end, into=None):
                 parts = []
+                nbytes, elapsed, rtt_inc = 0, 0.0, False
                 pos = start
                 while pos <= end:
                     row = int(np.searchsorted(outer._starts, pos, "right") - 1)
@@ -216,9 +217,22 @@ class _VirtualRangeClient(MDTPClient):
                     real_start = outer._ranges[row][0] + row_off
                     take = min(end - pos + 1,
                                int(outer._starts[row + 1] - pos))
-                    parts.append(await _Conn.fetch_range(
-                        conn_self, int(real_start), int(real_start + take - 1)))
+                    sub = (into[nbytes:nbytes + take]
+                           if into is not None else None)
+                    reply = await _Conn.fetch_range(
+                        conn_self, int(real_start),
+                        int(real_start + take - 1), into=sub)
+                    if into is None:
+                        parts.append(reply.data)
+                    nbytes += reply.nbytes
+                    elapsed += reply.elapsed
+                    rtt_inc = rtt_inc or reply.rtt_included
+                    if reply.nbytes < take:
+                        break   # short piece: stop — later pieces would
+                        # land at the wrong virtual offsets
                     pos += take
-                return b"".join(parts)
+                data = (into[:nbytes] if into is not None
+                        else b"".join(parts))
+                return _RangeReply(data, nbytes, elapsed, rtt_inc)
 
-        return _VConn(replica)
+        return _VConn(replica, request_latency=self.request_latency)

@@ -1,16 +1,38 @@
 """Asyncio multi-source transfer client (the real MDTP runtime).
 
 No aiohttp in this environment — this is a raw-socket HTTP/1.1 client on
-``asyncio`` streams with:
+asyncio's ``loop.sock_*`` primitives with:
 
 * one persistent connection per replica (paper §III-A: avoid TCP slow-start
   and session re-establishment),
+* **depth-k request pipelining** per connection: the next Range request is
+  issued while the previous body is still streaming, so steady-state
+  chunks do not pay a request RTT each (the CDTP-style overlap of request
+  issue with in-flight body streaming — see PAPERS.md),
+* a **zero-copy receive path**: the destination ``bytearray`` is
+  preallocated and bodies are ``sock_recv_into`` memoryview slices of it —
+  no per-chunk ``bytes`` materialization and no assembly copy,
 * byte-range requests sized by the SAME allocator the simulator uses
   (``repro.core.chunking`` — single source of truth),
-* per-chunk throughput observation feeding the next allocation,
+* per-chunk throughput observation feeding the next allocation (RTT bias
+  removed at the observation point — see :func:`wire_elapsed`),
 * failure handling: a replica that errors mid-chunk is retired (or retried
-  after ``retry_after``) and its unfinished range is re-queued — the
-  checkpoint-restore path's fault tolerance.
+  after ``retry_after``) and every range it still owes — including all
+  pipelined in-flight requests — is atomically re-pooled for surviving
+  peers (the checkpoint-restore path's fault tolerance).
+
+Sink contract
+-------------
+``fetch(size, sink=...)`` accepts either:
+
+* a callable ``sink(start, view)`` — ``view`` is a ``memoryview`` that is
+  only valid DURING the call (the backing buffer is per-chunk scratch);
+  a sink that wants to keep the bytes must copy before returning, or
+* an object with ``writable(start, length) -> memoryview`` and
+  ``commit(start, nbytes)`` — the client reads the socket directly into
+  the returned view and calls ``commit`` once the bytes landed, so the
+  path from socket to the sink's buffer is copy-free
+  (``repro.checkpoint.manager._StreamingRestore`` implements this).
 
 The client is transport-generic: anything exposing ``fetch_range`` works
 (tests use the in-process ``RangeServer``; production would point at real
@@ -20,16 +42,27 @@ mirrors).
 from __future__ import annotations
 
 import asyncio
+import contextlib
 import heapq
+import socket
 import time
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 from repro.core.chunking import ChunkParams, default_chunk_params, next_chunk_size
 from repro.core.throughput import make_estimator, rtt_corrected_bandwidth
 
 __all__ = ["Replica", "TransferReport", "MDTPClient", "NoTelemetryError",
-           "fetch_blob"]
+           "fetch_blob", "wire_elapsed", "DEFAULT_PIPELINE_DEPTH"]
+
+#: default per-connection request pipeline depth.  2 keeps a request on
+#: the wire while the previous body streams (the RTT-hiding that matters)
+#: at minimal client-side concurrency — important because lane tasks
+#: share one event loop and a loaded host inflates their scheduling
+#: delays, which distorts throughput observations.  High-RTT paths gain
+#: another ~10-20% from depth 4 (see benchmarks/dataplane_bench.py);
+#: tune per deployment via ``MDTPClient(pipeline_depth=...)``.
+DEFAULT_PIPELINE_DEPTH = 2
 
 
 class NoTelemetryError(RuntimeError):
@@ -66,11 +99,15 @@ class TransferReport:
     #: for un-tuned transfers.
     retunes: int = 0
     #: final per-replica estimator values (bytes/s; 0 = never observed) —
-    #: the live inputs the autotuner re-tunes chunk sizes from.
+    #: the live inputs the autotuner re-tunes chunk sizes from.  These are
+    #: WIRE rates: the per-request RTT bias is already removed at the
+    #: observation point (:func:`wire_elapsed`), so consumers must not
+    #: apply ``rtt_corrected_bandwidth`` again.
     observed_throughputs: dict = field(default_factory=dict)
     #: measured per-replica request RTT in seconds (min over connect time
-    #: and header turnarounds; 0 = never measured).  Feeds ``retune`` so
-    #: the simulated sweep uses live latencies, not a guessed constant.
+    #: and idle-pipe header turnarounds; 0 = never measured).  Feeds
+    #: ``retune`` so the simulated sweep uses live latencies, not a
+    #: guessed constant.
     observed_rtts: dict = field(default_factory=dict)
 
     @property
@@ -78,99 +115,256 @@ class TransferReport:
         return self.total_bytes / self.elapsed if self.elapsed > 0 else 0.0
 
 
-def _mean_chunk_bytes(bytes_per: dict, reqs_per: dict, name: str) -> float:
-    """Average request size a replica served (0.0 when unknown) — the
-    chunk-scale input of :func:`rtt_corrected_bandwidth`."""
-    reqs = reqs_per.get(name, 0)
-    if reqs <= 0:
-        return 0.0
-    return bytes_per.get(name, 0) / reqs
+def wire_elapsed(nbytes: int, elapsed: float, rtt: float) -> float:
+    """Strip the request RTT from a serial chunk observation.
+
+    A request issued on an idle pipe spans ``rtt + nbytes / wire_rate``
+    seconds, so feeding ``(nbytes, elapsed)`` straight into an estimator
+    under-states the wire rate — badly for small chunks on high-RTT paths.
+    A *pipelined* request's elapsed starts when its body starts streaming
+    and needs no correction; this helper is applied only to observations
+    flagged as RTT-inclusive.  Delegates the guard logic (no RTT sample,
+    implied non-positive wire time) to
+    :func:`repro.core.throughput.rtt_corrected_bandwidth`, returning the
+    elapsed unchanged when the correction is impossible.
+    """
+    if elapsed <= 0.0 or nbytes <= 0:
+        return elapsed
+    corrected = rtt_corrected_bandwidth(nbytes / elapsed, rtt, float(nbytes))
+    return nbytes / corrected if corrected > 0.0 else elapsed
 
 
-def _corrected_bandwidths(replicas, est_values, rtt_min, failed,
-                          bytes_per, reqs_per) -> tuple:
-    """Full-fleet positional bandwidth vector for ``Telemetry``, with each
-    live estimate RTT-bias corrected (``rtt_corrected_bandwidth``) from
-    that replica's measured request RTT and mean served chunk size.  Dead
-    replicas keep their slot as 0.0; replicas with no RTT sample or no
-    completed request pass through uncorrected (the correction is
-    impossible, not merely inaccurate)."""
-    out = []
-    for i, r in enumerate(replicas):
-        if r.name in failed:
-            out.append(0.0)
-            continue
-        out.append(rtt_corrected_bandwidth(
-            float(est_values[i]), float(rtt_min[i]),
-            _mean_chunk_bytes(bytes_per, reqs_per, r.name)))
-    return tuple(out)
+class _RangeReply(NamedTuple):
+    """One completed range request, with the timing metadata the
+    observation layer needs to de-bias throughput samples."""
+
+    #: the body: ``memoryview`` of the caller's buffer when ``into`` was
+    #: given, freshly-read ``bytes`` otherwise.
+    data: object
+    #: body length actually served (may be < requested on a clamped tail).
+    nbytes: int
+    #: seconds attributable to receiving THIS body.
+    elapsed: float
+    #: True when ``elapsed`` spans the full request round-trip (the pipe
+    #: was idle at issue time) — the estimator must strip the RTT.
+    rtt_included: bool
 
 
 class _Conn:
-    """One persistent HTTP/1.1 connection.
+    """One persistent pipelined HTTP/1.1 connection on a raw socket.
+
+    Requests may be issued concurrently by several tasks; writes are
+    serialized by a lock and responses are read strictly in request order
+    via a FIFO turnstile (each request waits on its predecessor's
+    completion event).  Bodies are received with ``sock_recv_into``
+    directly into the caller's buffer — the only copied bytes are the
+    header-phase read-ahead (bounded by ``_HEADER_RECV`` per response).
 
     Collects per-connection RTT samples: the TCP connect time on session
     establishment, then the request-write → status-line turnaround of
-    every range request.  Consumers drain ``take_rtt_samples()`` and
-    min-aggregate — the minimum turnaround is the standard queuing-free
-    RTT proxy (the connect sample matters: header turnarounds include
-    server think time).
+    every request issued on an idle pipe (a queued-behind-a-body
+    turnaround measures the predecessor's streaming time, not the path).
+    Consumers drain ``take_rtt_samples()`` and min-aggregate.
+
+    Any failure (transport error, malformed response, cancellation
+    mid-read) marks the connection ``broken``: the stream position is
+    unrecoverable, so every queued request fails fast instead of parsing
+    from the middle of a predecessor's body.
     """
 
-    def __init__(self, replica: Replica):
+    #: recv size while parsing status/headers — small so read-ahead into
+    #: the copied header buffer steals at most this many body bytes from
+    #: the zero-copy path per response.
+    _HEADER_RECV = 4096
+
+    def __init__(self, replica: Replica, request_latency: float = 0.0):
         self.replica = replica
-        self.reader: Optional[asyncio.StreamReader] = None
-        self.writer: Optional[asyncio.StreamWriter] = None
+        #: emulated request-path propagation delay (seconds) — a test and
+        #: benchmark knob: loopback has no real RTT, so the dataplane
+        #: bench injects one here to reproduce the WAN regime where
+        #: pipelining pays off.  Applied before each request send, off
+        #: the critical path of already-streaming predecessors.
+        self.request_latency = request_latency
+        self.broken = False
+        self._sock: Optional[socket.socket] = None
+        self._rbuf = bytearray()
         self._rtt_samples: list[float] = []
+        self._wlock = asyncio.Lock()
+        #: completion event of the most recently issued request (the
+        #: turnstile tail); None = pipe idle since connect.
+        self._tail: Optional[asyncio.Event] = None
 
     def take_rtt_samples(self) -> list[float]:
         samples, self._rtt_samples = self._rtt_samples, []
         return samples
 
     async def connect(self):
+        loop = asyncio.get_running_loop()
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setblocking(False)
         t0 = time.monotonic()
-        self.reader, self.writer = await asyncio.open_connection(
-            self.replica.host, self.replica.port)
+        try:
+            await loop.sock_connect(
+                sock, (self.replica.host, self.replica.port))
+        except BaseException:
+            sock.close()
+            raise
         self._rtt_samples.append(time.monotonic() - t0)
+        # pipelined requests are tiny back-to-back writes: without NODELAY
+        # Nagle would hold them hostage to the previous response's ACKs
+        with contextlib.suppress(OSError):
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._sock = sock
 
     async def close(self):
-        if self.writer is not None:
-            self.writer.close()
-            try:
-                await self.writer.wait_closed()
-            except Exception:
-                pass
+        if self._sock is not None:
+            with contextlib.suppress(OSError):
+                self._sock.close()
+            self._sock = None
 
-    async def fetch_range(self, start: int, end: int) -> bytes:
-        """GET bytes [start, end] inclusive over the persistent session."""
-        if self.writer is None:
-            await self.connect()
-        req = (f"GET {self.replica.path} HTTP/1.1\r\n"
-               f"Host: {self.replica.host}\r\n"
-               f"Range: bytes={start}-{end}\r\n"
-               f"Connection: keep-alive\r\n\r\n")
-        t_send = time.monotonic()
-        self.writer.write(req.encode())
-        await self.writer.drain()
-        # status line + headers; first line back measures the header
-        # turnaround (request RTT + server think time)
-        status = await self.reader.readline()
-        self._rtt_samples.append(time.monotonic() - t_send)
-        if not status:
+    # -- buffered header reads / zero-copy body reads ----------------------
+
+    async def _fill(self, hint: int) -> None:
+        data = await asyncio.get_running_loop().sock_recv(self._sock, hint)
+        if not data:
             raise ConnectionError("connection closed")
-        code = int(status.split()[1])
+        self._rbuf += data
+
+    async def _readline(self) -> bytes:
+        while True:
+            idx = self._rbuf.find(b"\n")
+            if idx >= 0:
+                line = bytes(self._rbuf[:idx + 1])
+                del self._rbuf[:idx + 1]
+                return line
+            if len(self._rbuf) > 65536:
+                raise ConnectionError("oversized header line")
+            await self._fill(self._HEADER_RECV)
+
+    async def _read_headers(self) -> tuple[int, dict]:
+        status = await self._readline()
+        parts = status.split()
+        if len(parts) < 2 or not parts[1].isdigit():
+            raise ConnectionError(f"malformed status line: {status!r}")
+        code = int(parts[1])
         headers = {}
         while True:
-            line = await self.reader.readline()
+            line = await self._readline()
             if line in (b"\r\n", b"\n", b""):
                 break
-            k, _, v = line.decode().partition(":")
+            k, _, v = line.decode("latin-1").partition(":")
             headers[k.strip().lower()] = v.strip()
-        if code not in (200, 206):
-            raise ConnectionError(f"HTTP {code}")
-        n = int(headers["content-length"])
-        body = await self.reader.readexactly(n)
-        return body
+        return code, headers
+
+    async def _read_body(self, n: int, into: Optional[memoryview]):
+        """Read exactly ``n`` body bytes — into the caller's view when
+        given (zero-copy), into fresh ``bytes`` otherwise."""
+        if into is None:
+            scratch = bytearray(n)
+            view = memoryview(scratch)
+        else:
+            if len(into) < n:
+                raise ConnectionError(
+                    f"response body {n} B overruns the {len(into)} B "
+                    f"destination range")
+            scratch = None
+            view = into
+        got = min(len(self._rbuf), n)   # header-phase read-ahead first
+        if got:
+            view[:got] = self._rbuf[:got]
+            del self._rbuf[:got]
+        loop = asyncio.get_running_loop()
+        while got < n:
+            r = await loop.sock_recv_into(self._sock, view[got:n])
+            if r <= 0:
+                raise ConnectionError(
+                    f"connection closed mid-body ({got}/{n} B)")
+            got += r
+        return bytes(scratch) if scratch is not None else view[:n]
+
+    # -- requests ----------------------------------------------------------
+
+    def _request_bytes(self, method: str, start=None, end=None) -> bytes:
+        rng = (f"Range: bytes={start}-{end}\r\n"
+               if start is not None else "")
+        return (f"{method} {self.replica.path} HTTP/1.1\r\n"
+                f"Host: {self.replica.host}\r\n{rng}"
+                f"Connection: keep-alive\r\n\r\n").encode()
+
+    async def fetch_range(self, start: int, end: int,
+                          into: Optional[memoryview] = None) -> _RangeReply:
+        """GET bytes [start, end] inclusive over the persistent session.
+
+        May be called concurrently: the request goes on the wire
+        immediately (pipelined behind any in-flight predecessors) and the
+        response is read in FIFO order.  With ``into``, the body is
+        received directly into that view and the reply's ``data`` is
+        ``into[:nbytes]``; without it, fresh ``bytes`` are returned.
+        """
+        if self._sock is None:
+            # concurrent lanes race to the first request: exactly one may
+            # establish the session (an unguarded lazy connect would open
+            # one socket per lane and leak all but the last)
+            async with self._wlock:
+                if self._sock is None and not self.broken:
+                    try:
+                        await self.connect()
+                    except BaseException:
+                        self.broken = True
+                        raise
+        if self.request_latency > 0.0:
+            await asyncio.sleep(self.request_latency)
+        my_done = asyncio.Event()
+        async with self._wlock:
+            if self.broken or self._sock is None:
+                raise ConnectionError("pipelined connection broken")
+            prior = self._tail
+            self._tail = my_done
+            pipelined = prior is not None and not prior.is_set()
+            t_send = time.monotonic()
+            try:
+                await asyncio.get_running_loop().sock_sendall(
+                    self._sock, self._request_bytes("GET", start, end))
+            except BaseException:
+                self.broken = True
+                my_done.set()
+                raise
+        try:
+            if prior is not None:
+                await prior.wait()
+            if self.broken:
+                raise ConnectionError("pipelined predecessor failed")
+            t_ready = time.monotonic()
+            code, headers = await self._read_headers()
+            if not pipelined:
+                # idle-pipe turnaround = request RTT + server think time
+                self._rtt_samples.append(time.monotonic() - t_send)
+            if code not in (200, 206):
+                raise ConnectionError(f"HTTP {code}")
+            try:
+                n = int(headers["content-length"])
+            except (KeyError, ValueError):
+                raise ConnectionError("missing/invalid Content-Length")
+            body = await self._read_body(n, into)
+            t_end = time.monotonic()
+            return _RangeReply(
+                data=body, nbytes=n,
+                elapsed=t_end - (t_ready if pipelined else t_send),
+                rtt_included=not pipelined)
+        except BaseException:
+            self.broken = True
+            raise
+        finally:
+            my_done.set()
+
+    async def head(self) -> tuple[int, dict]:
+        """HEAD the replica's path; returns (status, headers).  Not
+        pipelined — used once per transfer for size discovery."""
+        if self._sock is None:
+            await self.connect()
+        await asyncio.get_running_loop().sock_sendall(
+            self._sock, self._request_bytes("HEAD"))
+        return await self._read_headers()
 
 
 class MDTPClient:
@@ -185,6 +379,9 @@ class MDTPClient:
         retry_after: float = 0.0,
         max_failures: int = 3,
         tuner=None,
+        pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
+        zero_copy: bool = True,
+        request_latency: float = 0.0,
     ):
         self.replicas = list(replicas)
         self._params_arg = params
@@ -196,12 +393,26 @@ class MDTPClient:
         #: with ``update(telemetry) -> ChunkParams | None``) applied to
         #: every ``fetch`` unless overridden per call.
         self.tuner = tuner
+        #: concurrent pipelined requests per replica connection (>= 1;
+        #: 1 = the serial request-response data plane).
+        self.pipeline_depth = max(int(pipeline_depth), 1)
+        #: False = legacy copy path (bodies materialize as ``bytes`` and
+        #: are copied into place) — kept as the benchmark baseline and an
+        #: escape hatch; the default receives into the destination buffer.
+        self.zero_copy = zero_copy
+        #: emulated request-path delay per request (see ``_Conn``).
+        self.request_latency = request_latency
         #: report of the most recent ``fetch`` (None before the first one).
         self.last_report: Optional[TransferReport] = None
 
     #: fallback request RTT (s) for replicas that never produced a sample —
     #: ~WAN RTT between FABRIC sites, matching the simulator scenarios.
     DEFAULT_RTT = 0.03
+
+    #: minimum contiguous streaming time (s) aggregated into one
+    #: throughput observation — see the observation-window comment in
+    #: ``fetch``.
+    OBS_WINDOW_S = 0.02
 
     def retune(self, file_size: int, **autotune_kw):
         """Re-tune chunk sizes from the last transfer's live observations.
@@ -213,6 +424,10 @@ class MDTPClient:
         subsequent transfers.  Typical use: between checkpoint-restore
         waves, where mirror conditions drift but the replica set is stable.
 
+        The client's own ``pipeline_depth`` is passed to the sweep (unless
+        overridden) so the simulated request-latency amortization matches
+        what this runtime actually does on the wire.
+
         Returns the ``AutotuneResult``; raises if no transfer has been
         observed yet or no replica produced a throughput sample.
         """
@@ -223,10 +438,9 @@ class MDTPClient:
         # Replicas with no sample (failed / never dispatched) are excluded,
         # mirroring how fetch() retires them — a 0-throughput entry would
         # otherwise dominate every simulated grid point.  RTTs stay aligned
-        # with the surviving bandwidth entries.  Estimates are RTT-bias
-        # corrected (the per-request estimator's window spans the request
-        # round-trip, under-stating the wire rate) so the simulated sweep
-        # plans against the path's actual capacity.
+        # with the surviving bandwidth entries.  Estimates are already wire
+        # rates (the RTT bias is stripped per observation, see
+        # ``wire_elapsed``), so they feed the sweep directly.
         rep = self.last_report
         bw, rtts = [], []
         for r in self.replicas:
@@ -234,13 +448,12 @@ class MDTPClient:
             if b <= 0.0:
                 continue
             rtt = rep.observed_rtts.get(r.name, 0.0)
-            bw.append(rtt_corrected_bandwidth(
-                b, rtt, _mean_chunk_bytes(rep.bytes_per_replica,
-                                          rep.requests_per_replica, r.name)))
+            bw.append(b)
             rtts.append(rtt if rtt > 0.0 else self.DEFAULT_RTT)
         if not bw:
             raise NoTelemetryError("no throughput observations to retune from")
         autotune_kw.setdefault("rtt", rtts)
+        autotune_kw.setdefault("pipeline_depth", self.pipeline_depth)
         res = autotune_chunk_params(bw, file_size=int(file_size),
                                     **autotune_kw)
         self._params_arg = res.params
@@ -257,8 +470,9 @@ class MDTPClient:
 
     def _make_conn(self, replica: Replica) -> "_Conn":
         """Connection factory — subclasses may translate offsets (the data
-        pipeline's virtual-blob client)."""
-        return _Conn(replica)
+        pipeline's virtual-blob client) or wrap requests (the fleet
+        manager's capped, telemetry-fed connections)."""
+        return _Conn(replica, request_latency=self.request_latency)
 
     def _allocation_throughputs(self, est_values: list) -> list:
         """Per-replica throughput vector the allocator sizes chunks from.
@@ -273,10 +487,12 @@ class MDTPClient:
 
     async def fetch(self, size: int, sink=None, *, offset: int = 0,
                     tuner=None, tune_interval_bytes: Optional[int] = None,
-                    ) -> tuple[bytearray, TransferReport]:
-        """Fetch ``size`` bytes.  ``sink(start, data)`` (if given) receives
-        chunks as they land (streaming to disk); otherwise an in-memory
-        buffer is assembled.
+                    ) -> tuple[Optional[bytearray], TransferReport]:
+        """Fetch ``size`` bytes.  ``sink`` (if given) receives ranges as
+        they land — see the module docstring for the two sink protocols
+        (callable receiving transient memoryviews, or ``writable``/
+        ``commit`` for the copy-free path); otherwise an in-memory buffer
+        is assembled (and received into directly — zero-copy).
 
         ``offset`` shifts every byte-range request (and the ``sink`` start
         offsets) by a constant — a wave of a larger blob fetches
@@ -297,20 +513,41 @@ class MDTPClient:
         """
         params_box = [self._params_arg or default_chunk_params(size)]
         n = len(self.replicas)
+        depth = self.pipeline_depth
         est = [make_estimator(self._estimator, self._alpha) for _ in range(n)]
+        # per-replica [bytes, seconds] observation windows: back-to-back
+        # pipelined replies carry wildly noisy per-reply timings (a body
+        # the kernel buffered ahead reads in microseconds, the next one
+        # absorbs the wait), but their SUM over a contiguous streaming
+        # window is exact — so samples are aggregated until the window
+        # holds enough signal, then fed to the estimator as one reading
+        obs_win = [[0, 0.0] for _ in range(n)]
+        zero_copy = self.zero_copy
         buf = bytearray(size) if sink is None else None
+        sink_writable = getattr(sink, "writable", None)
+        sink_commit = getattr(sink, "commit", None)
+        if (sink_writable is None) != (sink_commit is None):
+            raise TypeError(
+                "zero-copy sinks must provide BOTH writable() and commit()")
 
         cursor = 0
         # reclaimed (start, len) min-heap keyed on range start (ranges never
-        # overlap) — push/pop are O(log P), vs the O(P log P) full re-sort
-        # the old list paid on every failure/short-read
+        # overlap); ``pooled`` mirrors its byte total so the hot remaining-
+        # work check is O(1)
         pool: list[tuple[int, int]] = []
+        pooled = 0
         bytes_per = {r.name: 0 for r in self.replicas}
         reqs_per = {r.name: 0 for r in self.replicas}
         rtt_min = [0.0] * n                      # 0 = no sample yet
         failed: list[str] = []
         refetched = 0
         lock = asyncio.Lock()
+        #: signalled whenever reclaimed work appears or in-flight bytes
+        #: drain to zero — a lane with nothing to draw parks here instead
+        #: of polling (it must stay alive while peers owe ranges: if a
+        #: peer's replica dies, its range returns to the pool and needs a
+        #: surviving taker — the mirror-death fault-tolerance contract).
+        cond = asyncio.Condition(lock)
         done_bytes = 0
         t0 = time.monotonic()
 
@@ -321,6 +558,14 @@ class MDTPClient:
         tune_every = tune_interval_bytes or max(
             size // 8, 2 * params_box[0].large_chunk)
         tune_state = {"bytes": 0, "t": t0, "busy": False, "task": None}
+
+        def _telemetry_bandwidths() -> tuple:
+            """Full-fleet positional wire-rate vector for ``Telemetry``:
+            estimator values (already RTT-de-biased at observation time),
+            dead replicas zeroed in place."""
+            return tuple(
+                0.0 if r.name in failed else float(est[i].value)
+                for i, r in enumerate(self.replicas))
 
         async def maybe_retune():
             """Snapshot telemetry and let the tuner re-plan (at most one
@@ -337,9 +582,7 @@ class MDTPClient:
                     window_bytes = done_bytes - tune_state["bytes"]
                     window_t = max(now - tune_state["t"], 1e-9)
                     telemetry = Telemetry(
-                        bandwidth=_corrected_bandwidths(
-                            self.replicas, [e.value for e in est], rtt_min,
-                            failed, bytes_per, reqs_per),
+                        bandwidth=_telemetry_bandwidths(),
                         rtt=tuple(float(x) for x in rtt_min),
                         remaining_bytes=float(size - done_bytes),
                         measured_throughput=window_bytes / window_t,
@@ -364,132 +607,235 @@ class MDTPClient:
             finally:
                 tune_state["busy"] = False
 
-        # bytes currently on the wire somewhere; a worker that sees no
-        # unassigned bytes must NOT exit while another worker still owes a
-        # range — if that worker's replica dies, the reclaimed range needs
-        # a surviving taker (the mirror-death fault-tolerance contract).
+        # bytes currently on the wire somewhere; a lane that sees no
+        # unassigned bytes must NOT exit while another lane still owes a
+        # range (see ``cond`` above).
         inflight = 0
-
-        async def allocate(nbytes: int) -> tuple[int, int]:
-            nonlocal cursor, inflight
-            async with lock:
-                if pool:
-                    s, ln = pool[0]
-                    take = min(ln, nbytes)
-                    if take == ln:
-                        heapq.heappop(pool)
-                    else:
-                        # shrunk head keeps its heap position (start grows)
-                        heapq.heapreplace(pool, (s + take, ln - take))
-                    inflight += take
-                    return s, take
-                take = min(nbytes, size - cursor)
-                s = cursor
-                cursor += take
-                inflight += take
-                return s, take
 
         def observe_rtt(i: int, sample: float) -> None:
             if sample > 0.0:
                 rtt_min[i] = (sample if rtt_min[i] <= 0.0
                               else min(rtt_min[i], sample))
 
-        async def worker(i: int):
-            nonlocal done_bytes, refetched, inflight
-            conn = self._make_conn(self.replicas[i])
-            failures = 0
+        async def _reclaim(start: int, length: int, *, count: bool) -> None:
+            """Return an owed range to the pool and settle the in-flight
+            count, atomically, waking parked lanes."""
+            nonlocal inflight, pooled, refetched
+            async with lock:
+                heapq.heappush(pool, (start, length))
+                pooled += length
+                inflight -= length
+                if count:
+                    refetched += 1
+                cond.notify_all()
+
+        async def pipe_lane(i: int, conn: "_Conn") -> str:
+            """One pipelined request lane on replica ``i``'s shared
+            connection.  Up to ``pipeline_depth`` lanes run per replica;
+            their concurrent ``fetch_range`` calls are what keeps k
+            requests on the wire.  Returns ``"done"`` when the transfer
+            has no work left, ``"broken"`` on a connection failure (the
+            owed range is already back in the pool)."""
+            nonlocal cursor, inflight, pooled, done_bytes
+            name = self.replicas[i].name
             while True:
+                if conn.broken:
+                    # a sibling lane hit the failure first; don't draw
+                    # work a doomed request would just bounce back
+                    return "broken"
                 async with lock:
-                    remaining = (size - cursor) + sum(l for _, l in pool)
-                    outstanding = inflight
-                if remaining <= 0:
-                    if outstanding <= 0:
-                        break
-                    # nothing to draw NOW, but a peer still owes a range:
-                    # if its replica dies the range returns to the pool
-                    # and this worker must be alive to take it over
-                    await asyncio.sleep(0.005)
-                    continue
-                want = next_chunk_size(
-                    i, self._allocation_throughputs([e.value for e in est]),
-                    params_box[0], remaining)
-                if want <= 0:
-                    break
-                start, length = await allocate(want)
-                if length == 0:
-                    await asyncio.sleep(0)
-                    continue
-                t_req = time.monotonic()
+                    while True:
+                        remaining = (size - cursor) + pooled
+                        if remaining > 0:
+                            break
+                        if inflight <= 0:
+                            return "done"
+                        await cond.wait()
+                    want = next_chunk_size(
+                        i,
+                        self._allocation_throughputs(
+                            [e.value for e in est]),
+                        params_box[0], remaining)
+                    if want <= 0:
+                        return "done"
+                    if conn.broken:
+                        # woke from cond.wait to a sibling's failure:
+                        # don't draw a range a doomed send would just
+                        # bounce back (and spuriously count as refetched)
+                        return "broken"
+                    if depth > 1:
+                        # the allocator sizes one MDTP round's share for
+                        # this replica; the lanes split it so the
+                        # PIPELINE in aggregate holds ~two rounds' worth
+                        # — enough in-flight bytes to cover the
+                        # bandwidth-delay product through lane-convoy
+                        # phasing, while a slow mirror's queue stays
+                        # bounded at 2 rounds instead of depth rounds
+                        # (which would starve fast peers of tail work
+                        # exactly like the stragglers §IV chunks rounds
+                        # to avoid).  Near the end of the transfer the
+                        # pieces shrink further (remaining / 2*depth) so
+                        # the final bytes keep rebalancing onto whoever
+                        # is actually fast instead of draining a slow
+                        # pipeline's queue while fast peers idle.
+                        want = min(max(want // ((depth + 1) // 2),
+                                       params_box[0].min_chunk),
+                                   want, remaining)
+                        want = min(want, max(remaining // (2 * depth),
+                                             params_box[0].min_chunk))
+                    if pool:
+                        s, ln = pool[0]
+                        take = min(ln, want)
+                        if take == ln:
+                            heapq.heappop(pool)
+                        else:
+                            # shrunk head keeps its heap position
+                            heapq.heapreplace(pool, (s + take, ln - take))
+                        pooled -= take
+                    else:
+                        take = min(want, size - cursor)
+                        s = cursor
+                        cursor += take
+                    start, length = s, take
+                    inflight += length
+                # destination: straight into the assembly buffer / the
+                # sink's own storage (zero-copy), or per-chunk scratch
+                # for callable sinks / the legacy copy path.  A raising
+                # ``writable()`` must reclaim like any other failure —
+                # the range is already counted in flight.
                 try:
-                    data = await conn.fetch_range(
-                        offset + start, offset + start + length - 1)
-                except (ConnectionError, OSError, asyncio.IncompleteReadError):
-                    async with lock:
-                        heapq.heappush(pool, (start, length))
-                        inflight -= length
-                        refetched += 1
-                    failures += 1
-                    await conn.close()
-                    conn = self._make_conn(self.replicas[i])
-                    if failures >= self.max_failures:
-                        failed.append(self.replicas[i].name)
-                        break
-                    if self.retry_after > 0:
-                        await asyncio.sleep(self.retry_after)
-                    continue
+                    if sink is None:
+                        mv = (memoryview(buf)[start:start + length]
+                              if zero_copy else None)
+                    elif sink_writable is not None:
+                        mv = sink_writable(offset + start, length)
+                    else:
+                        mv = (memoryview(bytearray(length))
+                              if zero_copy else None)
                 except BaseException:
-                    # cancellation / unexpected error: release the range so
-                    # peers waiting on in-flight work aren't stranded
-                    async with lock:
-                        heapq.heappush(pool, (start, length))
-                        inflight -= length
+                    await _reclaim(start, length, count=False)
                     raise
                 try:
-                    elapsed = time.monotonic() - t_req
-                    est[i].observe(len(data), elapsed)
+                    reply = await conn.fetch_range(
+                        offset + start, offset + start + length - 1,
+                        into=mv)
+                except (ConnectionError, OSError,
+                        asyncio.IncompleteReadError):
+                    await _reclaim(start, length, count=True)
+                    return "broken"
+                except BaseException:
+                    # cancellation / unexpected error: release the range
+                    # so peers waiting on in-flight work aren't stranded
+                    await _reclaim(start, length, count=False)
+                    raise
+                try:
+                    ndata = reply.nbytes
                     for sample in conn.take_rtt_samples():
                         observe_rtt(i, sample)
+                    # estimators track the WIRE rate: serial observations
+                    # have their request RTT stripped here, pipelined ones
+                    # already measure pure body-streaming time
+                    elapsed = reply.elapsed
+                    if reply.rtt_included:
+                        elapsed = wire_elapsed(ndata, elapsed, rtt_min[i])
+                    win = obs_win[i]
+                    win[0] += ndata
+                    win[1] += elapsed
+                    # flush on the first-ever sample (ends probe mode
+                    # promptly — it is a serial, RTT-stripped reading) or
+                    # once the window holds enough streaming time for a
+                    # stable rate
+                    if est[i].value <= 0.0 or win[1] >= self.OBS_WINDOW_S:
+                        if win[1] > 0.0:
+                            est[i].observe(win[0], win[1])
+                        win[0], win[1] = 0, 0.0
                     if sink is None:
-                        buf[start:start + len(data)] = data
+                        if not zero_copy:
+                            buf[start:start + ndata] = reply.data
+                    elif sink_writable is not None:
+                        sink_commit(offset + start, ndata)
                     else:
-                        sink(offset + start, data)
+                        sink(offset + start, reply.data)
                 except BaseException:
                     # e.g. the user-supplied sink raised (disk full): the
                     # bytes were NOT delivered — reclaim the whole range
                     # and settle the in-flight count before propagating
-                    async with lock:
-                        heapq.heappush(pool, (start, length))
-                        inflight -= length
+                    await _reclaim(start, length, count=False)
                     raise
                 async with lock:
-                    bytes_per[self.replicas[i].name] += len(data)
-                    reqs_per[self.replicas[i].name] += 1
-                    done_bytes += len(data)
+                    bytes_per[name] += ndata
+                    reqs_per[name] += 1
+                    done_bytes += ndata
                     inflight -= length
-                    if len(data) < length:   # truncated: short range — the
+                    if ndata < length:   # truncated: short range — the
                         # tail re-enters the pool atomically with the
                         # inflight decrement so no peer can exit between
                         heapq.heappush(
-                            pool, (start + len(data), length - len(data)))
+                            pool, (start + ndata, length - ndata))
+                        pooled += length - ndata
+                        cond.notify_all()
+                    elif inflight <= 0:
+                        cond.notify_all()
                 if (tuner is not None and done_bytes < size
                         and not tune_state["busy"]
                         and done_bytes - tune_state["bytes"] >= tune_every):
-                    # fire-and-forget: the triggering worker keeps
-                    # fetching while the tuner (possibly jit-compiling)
-                    # runs in the executor.  The busy flag is claimed
-                    # HERE, synchronously, so no second worker can
-                    # schedule a competing task (and overwrite the task
-                    # ref the end-of-fetch drain awaits) before this one
-                    # starts running.
+                    # fire-and-forget: the triggering lane keeps fetching
+                    # while the tuner (possibly jit-compiling) runs in
+                    # the executor.  The busy flag is claimed HERE,
+                    # synchronously, so no second lane can schedule a
+                    # competing task (and overwrite the task ref the
+                    # end-of-fetch drain awaits) before this one starts.
                     tune_state["busy"] = True
                     tune_state["task"] = asyncio.ensure_future(
                         maybe_retune())
-            await conn.close()
 
+        async def worker(i: int):
+            """Per-replica supervisor: owns the connection, runs
+            ``pipeline_depth`` lanes over it, and on failure re-pools are
+            already done lane-side — it just counts the failure,
+            reconnects, and respawns the lanes."""
+            failures = 0
+            while True:
+                async with lock:
+                    if (size - cursor) + pooled <= 0 and inflight <= 0:
+                        return
+                conn = self._make_conn(self.replicas[i])
+                lanes = [asyncio.ensure_future(pipe_lane(i, conn))
+                         for _ in range(self.pipeline_depth)]
+                try:
+                    outcomes = await asyncio.gather(
+                        *lanes, return_exceptions=True)
+                finally:
+                    for t in lanes:
+                        t.cancel()
+                    await asyncio.gather(*lanes, return_exceptions=True)
+                    await conn.close()
+                    for sample in conn.take_rtt_samples():
+                        observe_rtt(i, sample)
+                fatal = [o for o in outcomes
+                         if isinstance(o, BaseException)]
+                if fatal:
+                    raise fatal[0]
+                if "broken" not in outcomes:
+                    return
+                failures += 1
+                if failures >= self.max_failures:
+                    failed.append(self.replicas[i].name)
+                    return
+                if self.retry_after > 0:
+                    await asyncio.sleep(self.retry_after)
+
+        workers = [asyncio.ensure_future(worker(i))
+                   for i in range(len(self.replicas))]
         try:
-            await asyncio.gather(*(worker(i)
-                                   for i in range(len(self.replicas))))
+            await asyncio.gather(*workers)
         except BaseException:
+            # a fatal error (sink raise, cancellation) must not leave
+            # sibling workers streaming into the buffer after fetch()
+            # has already raised — cancel and drain them first
+            for t in workers:
+                t.cancel()
+            await asyncio.gather(*workers, return_exceptions=True)
             task = tune_state["task"]
             if task is not None and not task.done():
                 task.cancel()
@@ -540,23 +886,10 @@ class MDTPClient:
         for r in self.replicas:
             conn = _Conn(r)
             try:
-                await conn.connect()
-                req = (f"HEAD {r.path} HTTP/1.1\r\nHost: {r.host}\r\n"
-                       f"Connection: keep-alive\r\n\r\n")
-                conn.writer.write(req.encode())
-                await conn.writer.drain()
-                status = await conn.reader.readline()
-                code = int(status.split()[1])
-                headers = {}
-                while True:
-                    line = await conn.reader.readline()
-                    if line in (b"\r\n", b"\n", b""):
-                        break
-                    k, _, v = line.decode().partition(":")
-                    headers[k.strip().lower()] = v.strip()
+                code, headers = await conn.head()
                 if code == 200:
                     return int(headers["content-length"])
-            except (OSError, ValueError):
+            except (OSError, ValueError, KeyError):
                 continue
             finally:
                 await conn.close()

@@ -45,7 +45,6 @@ import contextlib
 import dataclasses
 import itertools
 import threading
-import time
 import weakref
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
@@ -53,7 +52,7 @@ from typing import Any, Optional, Sequence
 from repro.core.chunking import ChunkParams
 from repro.core.throughput import rtt_corrected_bandwidth
 
-from .client import MDTPClient, Replica, _Conn
+from .client import DEFAULT_PIPELINE_DEPTH, MDTPClient, Replica, _Conn
 
 __all__ = ["FleetModel", "TransferJob", "TransferManager"]
 
@@ -146,16 +145,19 @@ class FleetModel:
     # -- observations ------------------------------------------------------
 
     def observe_chunk(self, tid, name: str, nbytes: int,
-                      elapsed: float) -> None:
-        """Fold one completed range request into the model.  The raw
-        reading is the per-request biased rate; the fleet's RTT estimate
-        inverts the bias so capacity tracks the wire rate."""
+                      elapsed: float, rtt_included: bool = True) -> None:
+        """Fold one completed range request into the model.  A serial
+        (idle-pipe) reading spans the request round trip, so the fleet's
+        RTT estimate inverts the bias; a pipelined reading already
+        measures pure body-streaming time (``rtt_included=False``) and
+        enters as-is — double-correcting it would overstate capacity."""
         if elapsed <= 0.0 or nbytes <= 0:
             return
         with self._lock:
             st = self._reps.setdefault(name, _ReplicaState())
-            rate = rtt_corrected_bandwidth(nbytes / elapsed, st.rtt,
-                                           float(nbytes))
+            rate = nbytes / elapsed
+            if rtt_included:
+                rate = rtt_corrected_bandwidth(rate, st.rtt, float(nbytes))
             prev = st.rates.get(tid)
             st.rates[tid] = (rate if prev is None
                              else self.alpha * rate
@@ -242,18 +244,21 @@ class _ManagedConn(_Conn):
         self._fleet = fleet
         self._tid = tid
 
-    async def fetch_range(self, start: int, end: int) -> bytes:
+    async def fetch_range(self, start: int, end: int, into=None):
+        # the slot is held for the request's whole pipelined lifetime
+        # (send → queued behind predecessors → body), so the cap bounds
+        # wire-level outstanding requests per mirror across transfers
         async with self._fleet.slot(self.replica.name):
-            t0 = time.monotonic()
-            data = await super().fetch_range(start, end)
+            reply = await super().fetch_range(start, end, into=into)
             self._fleet.observe_chunk(self._tid, self.replica.name,
-                                      len(data), time.monotonic() - t0)
+                                      reply.nbytes, reply.elapsed,
+                                      rtt_included=reply.rtt_included)
             # peek (don't drain — the owning client min-aggregates these
             # into its own report) at the freshest RTT samples
             if self._rtt_samples:
                 self._fleet.observe_rtt(self.replica.name,
                                         min(self._rtt_samples))
-            return data
+            return reply
 
 
 class _SharedTuner:
@@ -481,6 +486,12 @@ class TransferManager:
                 rtt = rtt_model
         if rtt is None:
             rtt = MDTPClient.DEFAULT_RTT
+        # plan for the data plane the managed clients actually run: the
+        # ladder must model the same request pipelining (client_kw may
+        # override the depth; mirror that here)
+        sweep_kw.setdefault(
+            "pipeline_depth",
+            self._client_kw.get("pipeline_depth", DEFAULT_PIPELINE_DEPTH))
         results = contention_sweep(bandwidth, rtt, int(file_size),
                                    max_transfers=max_transfers, **sweep_kw)
         self.contention_ladder = {

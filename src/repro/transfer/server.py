@@ -2,7 +2,8 @@
 
 Serves files (or in-memory blobs) with:
   * ``Range: bytes=a-b`` support (206 Partial Content) — the substrate MDTP
-    requests ride on,
+    requests ride on, served as ``memoryview`` windows over the registered
+    blob (no per-range or per-throttle-piece body copies),
   * persistent connections (keep-alive) — the paper's one-session-per-server
     requirement,
   * optional per-connection bandwidth throttling and response latency, so
@@ -14,6 +15,7 @@ checkpoint mirror in tests/examples.
 
 from __future__ import annotations
 
+import socket
 import threading
 import time
 from dataclasses import dataclass
@@ -47,6 +49,18 @@ class _Handler(BaseHTTPRequestHandler):
 
     def log_message(self, *a):   # silence
         pass
+
+    def setup(self):
+        super().setup()
+        with self.server.gauge_lock:          # type: ignore[attr-defined]
+            self.server.open_conns.add(       # type: ignore[attr-defined]
+                self.connection)
+
+    def finish(self):
+        with self.server.gauge_lock:          # type: ignore[attr-defined]
+            self.server.open_conns.discard(   # type: ignore[attr-defined]
+                self.connection)
+        super().finish()
 
     def _blob(self) -> Optional[bytes]:
         return self.server.blobs.get(self.path)  # type: ignore[attr-defined]
@@ -94,12 +108,14 @@ class _Handler(BaseHTTPRequestHandler):
             if lo > hi:
                 self.send_error(416)
                 return
-            body = blob[lo:hi + 1]
+            # memoryview slice: no per-range body copy — ranges (and the
+            # throttle pieces below) are windows over the registered blob
+            body = memoryview(blob)[lo:hi + 1]
             self.send_response(206)
             self.send_header("Content-Range",
                              f"bytes {lo}-{hi}/{len(blob)}")
         else:
-            body = blob
+            body = memoryview(blob)
             self.send_response(200)
         self.send_header("Content-Length", str(len(body)))
         self.send_header("Accept-Ranges", "bytes")
@@ -139,6 +155,7 @@ class RangeServer:
         self._srv.gauge_lock = threading.Lock()   # type: ignore[attr-defined]
         self._srv.concurrent = 0                  # type: ignore[attr-defined]
         self._srv.peak_concurrent = 0             # type: ignore[attr-defined]
+        self._srv.open_conns = set()              # type: ignore[attr-defined]
         self._thread = threading.Thread(target=self._srv.serve_forever,
                                         daemon=True)
 
@@ -168,6 +185,20 @@ class RangeServer:
     def start(self) -> "RangeServer":
         self._thread.start()
         return self
+
+    def kill_connections(self) -> None:
+        """Forcibly sever every established client connection (the
+        streams, not the listener): ``stop()`` only halts the accept
+        loop, while handler threads keep serving persistent sessions to
+        completion.  Mirror-death tests use this to cut a connection
+        with pipelined requests still in flight."""
+        with self._srv.gauge_lock:                # type: ignore[attr-defined]
+            conns = list(self._srv.open_conns)    # type: ignore[attr-defined]
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
 
     def stop(self) -> None:
         self._srv.shutdown()

@@ -178,5 +178,8 @@ def test_client_retune_adopts_winner():
         observed_throughputs={"h0:1": 50.0 * MB, "h1:2": 10.0 * MB})
     res = client.retune(2 * GB)
     assert client._params_arg == res.params
-    expect = autotune_chunk_params([50.0 * MB, 10.0 * MB], 0.03, 2 * GB)
+    # the sweep models the client's pipelined data plane
+    expect = autotune_chunk_params(
+        [50.0 * MB, 10.0 * MB], 0.03, 2 * GB,
+        pipeline_depth=client.pipeline_depth)
     assert res.params == expect.params

@@ -110,6 +110,47 @@ def test_committed_bench_online_contention_wins():
                        for t in traces}
 
 
+def test_dataplane_bench_rows(bench_run):
+    """The dataplane section emits the loopback copy/zero-copy/pipelined
+    goodput rows and the high-RTT serial-vs-pipelined pair, and on the
+    high-RTT trace the pipelined client wins (the same invariant the
+    ``run.py --check`` win-guard enforces in CI)."""
+    res, _ = bench_run
+    out = res.stdout
+    assert "# === dataplane ===" in out
+    rows = [l for l in out.splitlines() if l.startswith("dataplane/")]
+    names = [r.split(",")[0] for r in rows]
+    for n in ("dataplane/loopback/1rep/copy_serial",
+              "dataplane/loopback/1rep/zerocopy_serial",
+              "dataplane/loopback/1rep/zerocopy_pipelined",
+              "dataplane/loopback/3rep/zerocopy_pipelined",
+              "dataplane/highrtt/serial",
+              "dataplane/highrtt/pipelined"):
+        assert n in names, rows
+    by_name = {r.split(",")[0]: r.split(",") for r in rows}
+    serial = float(by_name["dataplane/highrtt/serial"][2])
+    piped = float(by_name["dataplane/highrtt/pipelined"][2])
+    assert piped >= serial, (serial, piped)
+
+
+def test_committed_bench_dataplane_pipelined_wins():
+    """The committed BENCH_dataplane.json records the pipelined zero-copy
+    path beating the serial path on loopback goodput for the high-RTT
+    throttled trace — the tentpole claim, pinned as an artifact."""
+    path = os.path.join(_ROOT, "BENCH_dataplane.json")
+    assert os.path.exists(path), "BENCH_dataplane.json must be committed"
+    payload = json.loads(open(path).read())
+    rows = {r["name"]: r for r in payload["rows"]}
+    serial = float(rows["dataplane/highrtt/serial"]["derived"])
+    piped = float(rows["dataplane/highrtt/pipelined"]["derived"])
+    assert piped > serial, (serial, piped)
+    # and the zero-copy receive path is not slower than the copy path
+    # (loopback assembly goodput, 1-replica)
+    copy = float(rows["dataplane/loopback/1rep/copy_serial"]["derived"])
+    zc = float(rows["dataplane/loopback/1rep/zerocopy_serial"]["derived"])
+    assert zc >= copy, (copy, zc)
+
+
 def test_committed_bench_json_tracks_engines():
     """The committed BENCH_autotune.json (perf trajectory across PRs) is
     valid and records both simulator engines."""

@@ -1,0 +1,123 @@
+"""Pipelined data-plane model: ``SimConfig.pipeline_depth`` semantics on
+the simulator cores and its threading through the tuner stack."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import autotune_chunk_params
+from repro.core.chunking import ChunkParams
+from repro.core.jax_alloc import ChunkArrays
+from repro.core.jax_sim import SimConfig, simulate_scan_core, simulate_transfer
+
+MB = 1024 * 1024
+GB = 1024 * MB
+
+BW = [40.0 * MB, 80.0 * MB, 160.0 * MB]
+PARAMS = ChunkParams(initial_chunk=2 * MB, large_chunk=20 * MB)
+
+
+def _time(depth, rtt=0.2, engine="round", file_size=2 * GB):
+    return float(simulate_transfer(
+        BW, rtt, file_size, PARAMS,
+        config=SimConfig(pipeline_depth=depth), engine=engine,
+    ).total_time)
+
+
+def test_depth_one_is_the_legacy_model():
+    """``pipeline_depth=1`` (the default) must reproduce the serial
+    request-response model exactly — every chunk pays a full RTT."""
+    for engine in ("event", "round"):
+        t_default = float(simulate_transfer(
+            BW, 0.2, 2 * GB, PARAMS, config=SimConfig(),
+            engine=engine).total_time)
+        assert _time(1, engine=engine) == t_default
+
+
+@pytest.mark.parametrize("engine", ["event", "round"])
+def test_pipelining_amortizes_rtt(engine):
+    """On a high-RTT path, deeper pipelines strictly beat serial and the
+    improvement is monotone: per-chunk latency max(0, rtt - (k-1)*body)
+    can only shrink with k."""
+    t1 = _time(1, engine=engine)
+    t4 = _time(4, engine=engine)
+    t8 = _time(8, engine=engine)
+    assert t4 < t1
+    assert t8 <= t4 + 1e-4
+    # and bounded below by the pure wire time (bandwidth-limited floor)
+    wire_floor = 2 * GB / sum(BW)
+    assert t8 >= 0.5 * wire_floor
+
+
+def test_deep_pipeline_approaches_zero_rtt_limit():
+    """With the RTT fully hidden behind in-flight bodies, the transfer
+    time approaches the (near-)zero-RTT serial time — the regime where
+    the wire, not the request loop, is the bottleneck."""
+    t_deep = _time(64, rtt=0.2)
+    t_nortt = float(simulate_transfer(
+        BW, 1e-4, 2 * GB, PARAMS, config=SimConfig(),
+        engine="round").total_time)
+    assert t_deep == pytest.approx(t_nortt, rel=0.05)
+
+
+def test_first_chunk_still_pays_full_rtt():
+    """The cold-pipe ramp is modeled: a one-chunk transfer cannot hide
+    its RTT behind a pipeline that has nothing in flight yet."""
+    small = 1 * MB          # a single chunk per server at most
+    t1 = _time(1, rtt=0.5, file_size=small)
+    t8 = _time(8, rtt=0.5, file_size=small)
+    # every server's first (and only) chunk pays the RTT in both cases
+    assert t8 == pytest.approx(t1, rel=1e-5)
+
+
+def test_scan_core_depth_is_differentiable():
+    """The smooth max(0, rtt - (k-1)*body) keeps reverse-mode gradients
+    of the scan core finite and non-degenerate under pipelining."""
+    cfg = SimConfig(max_rounds=256, exact_sizes=False, pipeline_depth=4)
+    bw = jnp.asarray(BW, jnp.float32)
+    rtt = jnp.full((3,), 0.2, jnp.float32)
+    inf = jnp.full((3,), jnp.inf, jnp.float32)
+
+    def loss(cl):
+        chunk = ChunkArrays(cl[0], cl[1], jnp.float32(64 * 1024))
+        return simulate_scan_core(
+            bw, rtt, inf, bw, 0, chunk, jnp.float32(512 * MB),
+            mode="proportional", config=cfg).total_time
+
+    g = jax.grad(loss)(jnp.asarray([4.0 * MB, 40.0 * MB], jnp.float32))
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.any(np.asarray(g) != 0.0)
+
+
+def test_autotune_pipeline_depth_shifts_the_tradeoff():
+    """The fused sweep models request overlap: with pipelining, every
+    grid point's predicted time is no worse than its serial prediction
+    (RTT amortization only removes cost), so the adopted (C, L) stops
+    over-paying for small chunks that pipelining makes cheap."""
+    grid = [(1 * MB, 10 * MB), (2 * MB, 20 * MB), (4 * MB, 40 * MB),
+            (8 * MB, 80 * MB), (16 * MB, 160 * MB)]
+    serial = autotune_chunk_params(BW, 0.2, 4 * GB, grid=grid)
+    piped = autotune_chunk_params(BW, 0.2, 4 * GB, grid=grid,
+                                  pipeline_depth=4)
+    t_serial = np.asarray(serial.predicted_times)
+    t_piped = np.asarray(piped.predicted_times)
+    assert np.all(t_piped <= t_serial + 1e-3)
+    assert piped.predicted_time <= serial.predicted_time + 1e-3
+    # the pipelined plan never needs a LARGER initial chunk than the
+    # serial plan does to amortize the same latency
+    assert piped.params.initial_chunk <= serial.params.initial_chunk
+
+
+def test_online_tuners_thread_pipeline_depth():
+    """GridTuner with pipeline_depth plans against the pipelined model —
+    same result as calling the sweep directly with that depth."""
+    from repro.core.online import GridTuner, Telemetry
+
+    grid = [(1 * MB, 10 * MB), (4 * MB, 40 * MB), (16 * MB, 160 * MB)]
+    tel = Telemetry(bandwidth=tuple(BW), rtt=(0.2, 0.2, 0.2),
+                    remaining_bytes=float(4 * GB))
+    tuned = GridTuner(grid=grid, pipeline_depth=4).update(tel)
+    expect = autotune_chunk_params(
+        list(BW), [0.2, 0.2, 0.2], 4 * GB, grid=grid, pipeline_depth=4)
+    assert tuned == expect.params

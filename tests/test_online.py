@@ -75,28 +75,29 @@ def test_rtt_corrected_bandwidth_inverts_estimator_bias():
     assert rtt_corrected_bandwidth(10 * MB, 1.0, 1 * MB) == 10 * MB
 
 
-def test_telemetry_from_report_corrects_rtt_bias():
-    """Regression: the wave-boundary (``Telemetry.from_report``) path
-    corrects the per-request estimator bias exactly like the in-fetch
-    snapshots — a high-RTT replica reaches the tuner at its wire rate."""
+def test_telemetry_from_report_passes_wire_rates_through():
+    """Regression: ``observed_throughputs`` are wire rates (the client
+    strips the per-request RTT bias at the observation point), so the
+    wave-boundary ``Telemetry.from_report`` path must NOT correct them a
+    second time — only zero failed slots and carry the measured RTTs."""
     from repro.transfer.client import Replica, TransferReport
 
     replicas = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b"),
                 Replica("h2", 3, "/b")]
-    wire, rtt, chunk = 70.0 * MB, 0.5, 40.0 * MB
-    biased = chunk / (rtt + chunk / wire)
+    wire, rtt = 70.0 * MB, 0.5
     report = TransferReport(
         total_bytes=1, elapsed=2.0,
-        bytes_per_replica={"h0:1": int(chunk * 4), "h1:2": 8 * MB,
+        bytes_per_replica={"h0:1": 160 * MB, "h1:2": 8 * MB,
                            "h2:3": MB},
         requests_per_replica={"h0:1": 4, "h1:2": 2, "h2:3": 1},
         failed_replicas=["h2:3"], refetched_ranges=0,
-        observed_throughputs={"h0:1": biased, "h1:2": 20.0 * MB,
+        observed_throughputs={"h0:1": wire, "h1:2": 20.0 * MB,
                               "h2:3": 5.0 * MB},
         observed_rtts={"h0:1": rtt, "h1:2": 0.0, "h2:3": 0.02})
     tel = Telemetry.from_report(report, replicas, remaining_bytes=64 * MB)
-    assert tel.bandwidth[0] == pytest.approx(wire, rel=1e-6)  # corrected
-    assert tel.bandwidth[1] == 20.0 * MB       # no RTT sample: as-is
+    assert tel.bandwidth[0] == wire            # as-is (already de-biased;
+    # a second rtt_corrected_bandwidth pass would inflate it past wire)
+    assert tel.bandwidth[1] == 20.0 * MB
     assert tel.bandwidth[2] == 0.0             # failed slot preserved
     assert tel.rtt == (rtt, 0.0, 0.02)
     assert tel.remaining_bytes == 64 * MB

@@ -62,13 +62,15 @@ def test_roundtrip_integrity(blob):
 def test_retune_uses_measured_rtts():
     """retune feeds the fused tuner the MEASURED per-replica RTTs from the
     last transfer (falling back to the default only for replicas that
-    never produced a sample), not a hardcoded constant."""
+    never produced a sample), not a hardcoded constant — and the client's
+    own pipeline depth, so the sweep models the runtime's actual request
+    overlap."""
     from repro.core.autotune import autotune_chunk_params
     from repro.transfer.client import MDTPClient, Replica, TransferReport
 
     GB = 1024 * MB
     replicas = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b")]
-    client = MDTPClient(replicas)
+    client = MDTPClient(replicas, pipeline_depth=3)
     client.last_report = TransferReport(
         total_bytes=1, elapsed=1.0, bytes_per_replica={},
         requests_per_replica={}, failed_replicas=[], refetched_ranges=0,
@@ -77,76 +79,73 @@ def test_retune_uses_measured_rtts():
     res = client.retune(2 * GB)
     expect = autotune_chunk_params(
         [50.0 * MB, 10.0 * MB], rtt=[0.25, MDTPClient.DEFAULT_RTT],
-        file_size=2 * GB)
+        file_size=2 * GB, pipeline_depth=3)
     assert res.predicted_times == expect.predicted_times
     assert res.params == expect.params
     # a quarter-second RTT penalizes small chunks: the winner must differ
     # from the low-latency tune unless both argmins coincide by chance —
     # at minimum the predicted times must reflect the measured latency
     low_lat = autotune_chunk_params(
-        [50.0 * MB, 10.0 * MB], rtt=0.001, file_size=2 * GB)
+        [50.0 * MB, 10.0 * MB], rtt=0.001, file_size=2 * GB,
+        pipeline_depth=3)
     assert res.predicted_time > low_lat.predicted_time
 
 
-def test_retune_corrects_estimator_rtt_bias():
-    """Regression: the per-request estimator's biased readings are
-    corrected back to the wire rate (via the measured RTT and mean served
-    chunk) BEFORE they reach the fused tuner.  Uncorrected, the bias
-    systematically under-weights high-RTT replicas in re-tuning — a
-    40 MB-chunk mirror at 70 MB/s behind 0.5 s RTT reads as ~37 MB/s."""
+def test_wire_elapsed_strips_request_rtt():
+    """Regression for the observation-point bias correction: a serial
+    (idle-pipe) chunk observation spans rtt + body time, and
+    ``wire_elapsed`` recovers the on-wire body time exactly; impossible
+    corrections pass the elapsed through unchanged."""
+    from repro.transfer.client import wire_elapsed
+
+    wire, rtt, chunk = 70.0 * MB, 0.5, 40.0 * MB
+    elapsed = rtt + chunk / wire
+    corrected = wire_elapsed(int(chunk), elapsed, rtt)
+    assert corrected == pytest.approx(chunk / wire, rel=1e-9)
+    assert int(chunk) / corrected == pytest.approx(wire, rel=1e-9)
+    # no RTT sample -> passthrough; implied non-positive wire time ->
+    # passthrough; degenerate inputs -> passthrough
+    assert wire_elapsed(int(chunk), elapsed, 0.0) == elapsed
+    assert wire_elapsed(int(chunk), 0.3, 0.5) == 0.3
+    assert wire_elapsed(0, 1.0, 0.5) == 1.0
+    assert wire_elapsed(int(chunk), 0.0, 0.5) == 0.0
+
+
+def test_retune_passes_wire_rates_through():
+    """``observed_throughputs`` are already wire rates (the RTT bias is
+    stripped per observation via ``wire_elapsed``), so ``retune`` must
+    feed them to the fused sweep UNCHANGED — re-applying
+    ``rtt_corrected_bandwidth`` on top would overstate every high-RTT
+    replica's capacity."""
     from repro.core.autotune import autotune_chunk_params
+    from repro.core.throughput import rtt_corrected_bandwidth
     from repro.transfer.client import MDTPClient, Replica, TransferReport
 
     GB = 1024 * MB
     replicas = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b")]
     wire = {"h0:1": 70.0 * MB, "h1:2": 12.0 * MB}
     rtts = {"h0:1": 0.5, "h1:2": 0.03}
-    chunk = {"h0:1": 40.0 * MB, "h1:2": 2.0 * MB}
-    # what the estimator actually observes: s / (rtt + s / bw)
-    biased = {n: chunk[n] / (rtts[n] + chunk[n] / wire[n]) for n in wire}
-    assert all(biased[n] < wire[n] for n in wire)
-    client = MDTPClient(replicas)
+    client = MDTPClient(replicas, pipeline_depth=1)
     client.last_report = TransferReport(
         total_bytes=1, elapsed=1.0,
-        bytes_per_replica={n: int(chunk[n] * 8) for n in wire},
+        bytes_per_replica={n: 320 * MB for n in wire},
         requests_per_replica={n: 8 for n in wire},
         failed_replicas=[], refetched_ranges=0,
-        observed_throughputs=biased, observed_rtts=rtts)
+        observed_throughputs=dict(wire), observed_rtts=rtts)
     res = client.retune(2 * GB)
-    # the tuner must have been fed the RECOVERED wire rates
     expect = autotune_chunk_params(
         [wire["h0:1"], wire["h1:2"]], rtt=[rtts["h0:1"], rtts["h1:2"]],
-        file_size=2 * GB)
+        file_size=2 * GB, pipeline_depth=1)
     assert res.predicted_times == expect.predicted_times
     assert res.params == expect.params
-    # and NOT the biased readings
-    biased_res = autotune_chunk_params(
-        [biased["h0:1"], biased["h1:2"]],
-        rtt=[rtts["h0:1"], rtts["h1:2"]], file_size=2 * GB)
-    assert res.predicted_times != biased_res.predicted_times
-
-
-def test_fetch_telemetry_bandwidth_is_rtt_corrected():
-    """Regression for the in-fetch Telemetry snapshots: the bandwidth
-    vector handed to ``tuner.update`` carries RTT-bias-corrected
-    estimates (full-fleet positional contract preserved: dead slot 0.0,
-    un-correctable readings passed through)."""
-    from repro.transfer.client import Replica, _corrected_bandwidths
-
-    replicas = [Replica("h0", 1, "/b"), Replica("h1", 2, "/b"),
-                Replica("h2", 3, "/b")]
-    wire, rtt, chunk = 70.0 * MB, 0.5, 40.0 * MB
-    biased = chunk / (rtt + chunk / wire)
-    bw = _corrected_bandwidths(
-        replicas,
-        est_values=[biased, 50.0 * MB, 5.0 * MB],
-        rtt_min=[rtt, 0.0, 0.2],
-        failed=["h2:3"],
-        bytes_per={"h0:1": int(chunk * 4), "h1:2": 10 * MB, "h2:3": 0},
-        reqs_per={"h0:1": 4, "h1:2": 2, "h2:3": 0})
-    assert bw[0] == pytest.approx(wire, rel=1e-6)   # bias inverted
-    assert bw[1] == 50.0 * MB                       # no RTT sample: as-is
-    assert bw[2] == 0.0                             # dead slot preserved
+    # and NOT a double-corrected (inflated) fleet
+    inflated = [rtt_corrected_bandwidth(wire[n], rtts[n], 40.0 * MB)
+                for n in ("h0:1", "h1:2")]
+    assert inflated[0] > wire["h0:1"]               # the hazard is real
+    double = autotune_chunk_params(
+        inflated, rtt=[rtts["h0:1"], rtts["h1:2"]], file_size=2 * GB,
+        pipeline_depth=1)
+    assert res.predicted_times != double.predicted_times
 
 
 def test_retune_all_dead_replica_telemetry():
@@ -263,3 +262,160 @@ def test_blob_size_head(blob):
         assert bytes(data) == blob
     finally:
         s.stop()
+
+
+def test_pipelined_connection_death_repools_every_owed_range(blob):
+    """Kill a mirror while its connection holds a deep pipeline of
+    in-flight ranges: every owed range must re-enter the pool exactly
+    once, the survivors must finish the transfer, and the assembled bytes
+    must hash identical — delivered-byte conservation (== size) is the
+    exactly-once witness: a dropped range fails the fetch with IOError, a
+    double-pooled one overshoots ``done_bytes``."""
+    import threading
+
+    # slow deterministic victim so several pipelined requests are still
+    # in flight when it dies; small chunks keep the pipeline populated
+    victim = RangeServer(
+        throttle=Throttle(bytes_per_s=4 * MB, deterministic=True)).start()
+    victim.add_blob("/data", blob)
+    healthy = RangeServer(
+        throttle=Throttle(bytes_per_s=30 * MB, deterministic=True)).start()
+    healthy.add_blob("/data", blob)
+    try:
+        replicas = [Replica("127.0.0.1", victim.port, "/data"),
+                    Replica("127.0.0.1", healthy.port, "/data")]
+
+        def kill():
+            # sever the live stream (pipelined requests mid-flight) AND
+            # the listener, so reconnect attempts fail too
+            victim.kill_connections()
+            victim.stop()
+
+        killer = threading.Timer(0.1, kill)
+        killer.start()
+        params = ChunkParams(initial_chunk=256 * 1024, large_chunk=MB)
+        data, report = fetch_blob(replicas, len(blob), params=params,
+                                  max_failures=2, pipeline_depth=4)
+        assert hashlib.sha256(bytes(data)).hexdigest() == \
+            hashlib.sha256(blob).hexdigest()
+        # conservation: each byte delivered exactly once, no range lost
+        # or duplicated across the re-pool
+        assert sum(report.bytes_per_replica.values()) == len(blob)
+        assert report.refetched_ranges >= 1
+        assert report.failed_replicas == [replicas[0].name]
+    finally:
+        healthy.stop()
+        try:
+            victim.stop()
+        except Exception:
+            pass
+
+
+def test_serial_depth_one_still_works(blob):
+    """pipeline_depth=1 degrades to the serial request-response plane."""
+    s = RangeServer().start()
+    s.add_blob("/data", blob)
+    try:
+        data, report = fetch_blob(
+            [Replica("127.0.0.1", s.port, "/data")], len(blob),
+            params=ChunkParams(initial_chunk=256 * 1024, large_chunk=MB),
+            pipeline_depth=1)
+        assert bytes(data) == blob
+    finally:
+        s.stop()
+
+
+def test_copy_mode_fallback_matches(blob):
+    """``zero_copy=False`` (the legacy bytes-assembly path, kept as the
+    benchmark baseline) still produces identical bytes."""
+    s = RangeServer().start()
+    s.add_blob("/data", blob)
+    try:
+        data, _ = fetch_blob(
+            [Replica("127.0.0.1", s.port, "/data")], len(blob),
+            params=ChunkParams(initial_chunk=256 * 1024, large_chunk=MB),
+            zero_copy=False)
+        assert bytes(data) == blob
+    finally:
+        s.stop()
+
+
+def test_callable_sink_receives_transient_memoryviews(blob):
+    """Callable sinks get memoryviews (zero materialized ``bytes`` on the
+    receive path) and must copy before returning — the client recycles
+    nothing the sink can keep."""
+    import asyncio
+
+    from repro.transfer.client import MDTPClient
+
+    s = RangeServer().start()
+    s.add_blob("/data", blob)
+    try:
+        got = bytearray(len(blob))
+        kinds = set()
+
+        def sink(start, view):
+            kinds.add(type(view))
+            got[start:start + len(view)] = view
+
+        client = MDTPClient(
+            [Replica("127.0.0.1", s.port, "/data")],
+            params=ChunkParams(256 * 1024, MB))
+        asyncio.run(client.fetch(len(blob), sink=sink))
+        assert bytes(got) == blob
+        assert kinds == {memoryview}
+    finally:
+        s.stop()
+
+
+def test_writable_commit_sink_is_zero_copy_destination(blob):
+    """The ``writable``/``commit`` sink protocol: the client reads socket
+    bytes straight into the buffer the sink exposes and commits exactly
+    the landed spans (each byte exactly once)."""
+    import asyncio
+
+    from repro.transfer.client import MDTPClient
+
+    s = RangeServer().start()
+    s.add_blob("/data", blob)
+    try:
+        class ZeroCopySink:
+            def __init__(self, size):
+                self.buf = bytearray(size)
+                self.committed = 0
+                self.views = []
+
+            def writable(self, start, length):
+                view = memoryview(self.buf)[start:start + length]
+                self.views.append((start, length))
+                return view
+
+            def commit(self, start, nbytes):
+                self.committed += nbytes
+
+        zc = ZeroCopySink(len(blob))
+        client = MDTPClient(
+            [Replica("127.0.0.1", s.port, "/data")],
+            params=ChunkParams(256 * 1024, MB))
+        asyncio.run(client.fetch(len(blob), sink=zc))
+        assert bytes(zc.buf) == blob
+        assert zc.committed == len(blob)     # exactly-once accounting
+        assert zc.views                       # the zero-copy path was used
+    finally:
+        s.stop()
+
+
+def test_half_sink_protocol_rejected(blob):
+    """A sink with ``writable`` but no ``commit`` (or vice versa) is a
+    contract bug — fail loudly instead of silently copying."""
+    import asyncio
+
+    from repro.transfer.client import MDTPClient
+
+    class Half:
+        def writable(self, start, length):
+            return memoryview(bytearray(length))
+
+    client = MDTPClient([Replica("127.0.0.1", 1, "/data")])
+    with pytest.raises(TypeError, match="writable"):
+        asyncio.run(client.fetch(MB, sink=Half()))
