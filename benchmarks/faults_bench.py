@@ -1,0 +1,144 @@
+"""Fault-recovery economics: managed re-fetch vs restart-from-zero.
+
+The robustness layer's headline claim is that per-chunk integrity
+verification plus banned-range re-pooling makes corruption CHEAP: only
+the corrupt ranges are re-fetched (from an alternate mirror), so a
+chronically corrupting path costs a few chunks of overhead, not a
+restart.  This bench measures that claim on real loopback sockets:
+
+``faults/corruption/clean``
+    Reference: the same fleet and geometry with no fault injection.
+
+``faults/corruption/managed``
+    Two deterministic token-bucket mirrors, one corrupting 5% of bodies
+    (``FaultPolicy(corrupt_rate=0.05)``, fixed seed).  The client
+    verifies per-chunk CRCs and re-pools mismatches banned-for-that-
+    replica — one transfer, integrity-checked end to end.
+
+``faults/corruption/restart``
+    The naive baseline: integrity checked only at the END (whole-file
+    hash), and any mismatch restarts the ENTIRE transfer — what a
+    single-source client with a trailing checksum does.  Wall time
+    accumulates across attempts until a clean run lands.
+
+Derived column = goodput in MB/s (delivered bytes / total wall).  Every
+server uses a fixed fault seed and deterministic pacing, so rows are
+load-independent perf signal: ``benchmarks/run.py --check`` guards them
+at 3x and additionally requires managed goodput >= restart goodput (the
+corruption win-guard).  Rows land in ``BENCH_online.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import time
+
+import numpy as np
+
+from .common import emit  # noqa: F401  (also wires sys.path to src/)
+
+from repro.core.chunking import ChunkParams
+from repro.transfer import (FaultPolicy, RangeServer, Replica, Throttle,
+                            fetch_blob)
+
+MB = 1024 * 1024
+
+#: per-body corruption probability on the tainted mirror.
+CORRUPT_RATE = 0.05
+#: restart-from-zero safety valve — deterministic seeds land a clean run
+#: long before this, but a bound keeps a misconfigured run finite.
+MAX_RESTARTS = 25
+
+
+def _blob(size: int) -> bytes:
+    rng = np.random.default_rng(13)
+    return rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+
+
+def _fleet(blob, *, corrupt: bool, seed: int):
+    """Two 30 MiB/s deterministic mirrors; the first optionally corrupts
+    ``CORRUPT_RATE`` of its bodies.  Fresh servers per measurement so the
+    fault RNG replays the same draw sequence every rep."""
+    servers = []
+    for i in range(2):
+        faults = (FaultPolicy(corrupt_rate=CORRUPT_RATE, seed=seed)
+                  if corrupt and i == 0 else None)
+        s = RangeServer(
+            throttle=Throttle(bytes_per_s=30 * MB, deterministic=True),
+            faults=faults).start()
+        s.add_blob("/data", blob)
+        servers.append(s)
+    return servers
+
+
+def _params() -> ChunkParams:
+    return ChunkParams(initial_chunk=256 * 1024, large_chunk=MB)
+
+
+def _managed(blob, *, corrupt: bool, seed: int) -> float:
+    """One verified transfer; corrupt ranges re-fetch from the clean
+    mirror in-flight.  Returns wall seconds."""
+    servers = _fleet(blob, corrupt=corrupt, seed=seed)
+    try:
+        replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
+        t0 = time.perf_counter()
+        data, report = fetch_blob(replicas, len(blob), params=_params(),
+                                  max_failures=50)
+        wall = time.perf_counter() - t0
+        assert hashlib.sha256(bytes(data)).hexdigest() == \
+            hashlib.sha256(blob).hexdigest(), "integrity"
+        if corrupt:
+            assert report.refetched_ranges >= 1 or \
+                sum(report.corrupt_ranges.values()) >= 1
+        return wall
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def _restart_from_zero(blob, *, seed: int) -> float:
+    """Trailing-checksum baseline: no per-chunk verification, whole-file
+    hash at the end, full restart on mismatch.  Returns cumulative wall
+    seconds until a clean attempt."""
+    servers = _fleet(blob, corrupt=True, seed=seed)
+    want = hashlib.sha256(blob).hexdigest()
+    try:
+        replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
+        t0 = time.perf_counter()
+        for _ in range(MAX_RESTARTS):
+            data, _ = fetch_blob(replicas, len(blob), params=_params(),
+                                 verify_integrity=False, max_failures=50)
+            if hashlib.sha256(bytes(data)).hexdigest() == want:
+                return time.perf_counter() - t0
+        raise RuntimeError(f"no clean run in {MAX_RESTARTS} restarts")
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke sizes/reps (CI check mode)")
+    args = ap.parse_args(argv)
+
+    size = 16 * MB if args.quick else 64 * MB
+    reps = 2 if args.quick else 5
+    blob = _blob(size)
+
+    for name, fn in (
+        ("faults/corruption/clean",
+         lambda s: _managed(blob, corrupt=False, seed=s)),
+        ("faults/corruption/managed",
+         lambda s: _managed(blob, corrupt=True, seed=s)),
+        ("faults/corruption/restart",
+         lambda s: _restart_from_zero(blob, seed=s)),
+    ):
+        walls = [fn(17) for _ in range(reps)]
+        mean = float(np.mean(walls))
+        emit(name, mean * 1e6, size / mean / MB)
+
+
+if __name__ == "__main__":
+    main()

@@ -56,10 +56,16 @@ CHECK_ROW_PREFIXES = (
 #: deliberately excluded); the dataplane suite ALSO enforces the
 #: win-guard: pipelined goodput must stay >= serial on the high-RTT
 #: trace (see ``_check_dataplane_wins``).
+#: ``faults/*`` rows are deterministic-token-bucket transfers with a
+#: seeded fault policy, so they are pacing-dominated and machine-stable
+#: too; the suite ALSO enforces the corruption win-guard: managed
+#: per-chunk re-fetch must beat restart-from-zero on goodput (see
+#: ``_check_fault_wins``).
 CHECK_SUITES = (
     ("BENCH_autotune.json", "autotune", CHECK_ROW_PREFIXES),
     ("BENCH_online.json", "contention", ("contention/",)),
     ("BENCH_dataplane.json", "dataplane", ("dataplane/highrtt/",)),
+    ("BENCH_online.json", "faults", ("faults/",)),
 )
 
 
@@ -82,6 +88,30 @@ def _check_dataplane_wins(rows) -> int:
     if piped < serial:
         print("# check FAILED: pipelined goodput fell below serial on "
               "the high-RTT trace", file=sys.stderr)
+        return 1
+    return 0
+
+
+def _check_fault_wins(rows) -> int:
+    """The corruption win-guard: on the freshly-run seeded-fault trace,
+    the managed client's goodput (derived column, MB/s — per-chunk CRC
+    verify + banned re-pool) must beat the restart-from-zero baseline.
+    A verification regression that silently re-fetches everything, or a
+    re-pool bug that restarts work, shows up here long before the 3x
+    wall-time tolerance trips."""
+    by_name = {r["name"]: float(r["derived"]) for r in rows
+               if r["name"].startswith("faults/corruption/")}
+    managed = by_name.get("faults/corruption/managed", 0.0)
+    restart = by_name.get("faults/corruption/restart", 0.0)
+    if managed <= 0.0 or restart <= 0.0:
+        print("# check: corruption win-guard rows missing", file=sys.stderr)
+        return 1
+    verdict = "ok" if managed >= restart else "REGRESSION"
+    print(f"# check corruption win-guard: managed {managed:.1f} MB/s vs "
+          f"restart {restart:.1f} MB/s {verdict}", flush=True)
+    if managed < restart:
+        print("# check FAILED: managed re-fetch goodput fell below "
+              "restart-from-zero under corruption", file=sys.stderr)
         return 1
     return 0
 
@@ -128,12 +158,17 @@ def _run_check_suite(path: str, section: str, prefixes) -> int:
     elif section == "dataplane":
         from . import dataplane_bench
         dataplane_bench.main(["--quick"])
+    elif section == "faults":
+        from . import faults_bench
+        faults_bench.main(["--quick"])
     else:
         raise ValueError(f"unknown check section: {section!r}")
 
     rc_extra = 0
     if section == "dataplane":
         rc_extra = _check_dataplane_wins(emitted_rows())
+    elif section == "faults":
+        rc_extra = _check_fault_wins(emitted_rows())
 
     compared, failures = 0, []
     for row in emitted_rows():
@@ -184,8 +219,8 @@ def main(argv=None) -> None:
                     help="paper-fidelity reps/sizes (slow)")
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (fig2 fig3 fig4 fig5 table2 "
-                         "autotune online contention dataplane restore "
-                         "roofline)")
+                         "autotune online contention dataplane faults "
+                         "restore roofline)")
     ap.add_argument("--json", nargs="?", const="BENCH_autotune.json",
                     default=None, metavar="PATH",
                     help="also dump every emitted row as machine-readable "
@@ -249,6 +284,10 @@ def main(argv=None) -> None:
 
     from . import dataplane_bench
     run("dataplane", lambda: dataplane_bench.main(
+        [] if args.full else ["--quick"]))
+
+    from . import faults_bench
+    run("faults", lambda: faults_bench.main(
         [] if args.full else ["--quick"]))
 
     # Framework-layer benches (present once the substrates land).

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import bisect
 import contextlib
+import gc
 import json
 import os
 import shutil
@@ -40,6 +41,7 @@ import jax
 import numpy as np
 
 from repro.transfer.client import MDTPClient, NoTelemetryError, Replica
+from repro.transfer.journal import ResumeJournal
 
 __all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
            "latest_step"]
@@ -141,14 +143,38 @@ class _StreamingRestore:
     """
 
     def __init__(self, manifest: dict, like: Any,
-                 shardings: Optional[Any] = None):
+                 shardings: Optional[Any] = None,
+                 spool_path: Optional[str] = None):
         self._covered: list[tuple[int, int]] = []   # disjoint [s, e), sorted
         self.duplicate_bytes = 0                    # re-delivered byte count
         leaves, self._treedef = _leaf_paths(like)
         by_key = {e["key"]: e for e in manifest["leaves"]}
         shard_leaves = (jax.tree_util.tree_leaves(shardings)
                         if shardings is not None else [None] * len(leaves))
-        self._buf = bytearray(int(manifest["total_bytes"]))
+        total = int(manifest["total_bytes"])
+        self._mmap = None
+        self._spool_file = None
+        if spool_path is None or total == 0:
+            self._buf = bytearray(total)
+        else:
+            # crash-resumable restore: the landing buffer is a file-backed
+            # mmap, so bytes that reached the page cache (and were then
+            # journaled + fsync'd by the client) survive a process death.
+            # An existing spool's content is preserved — the resume path
+            # re-verifies journaled CRCs against exactly these bytes.
+            import mmap
+
+            f = open(spool_path, "a+b")
+            try:
+                f.seek(0, os.SEEK_END)
+                if f.tell() != total:
+                    f.truncate(total)
+                self._mmap = mmap.mmap(f.fileno(), total)
+            except BaseException:
+                f.close()
+                raise
+            self._spool_file = f
+            self._buf = self._mmap
         self._out: list = [None] * len(leaves)
         # slots ordered by blob offset for bisect lookup of landed ranges
         order = sorted(
@@ -250,6 +276,10 @@ class _StreamingRestore:
             self._buf, dtype=np.dtype(e["dtype"]),
             count=int(np.prod(e["shape"])) if e["shape"] else 1,
             offset=int(e["offset"])).reshape(e["shape"])
+        if self._mmap is not None:
+            # device_put may alias aligned host memory on CPU backends;
+            # never hand XLA a view of the spool mmap we intend to unmap.
+            arr = arr.copy()
         shd = self._shards[j]
         self._out[self._slot_of[j]] = (
             jax.device_put(arr, shd) if shd is not None
@@ -267,6 +297,26 @@ class _StreamingRestore:
             if r == 0 and self._out[self._slot_of[j]] is None:
                 self._materialize(j)
         return jax.tree_util.tree_unflatten(self._treedef, self._out)
+
+    def close(self) -> None:
+        """Release the spool mmap (no-op for in-memory restores).  Only
+        safe once every materialized leaf is off the buffer — the restore
+        path blocks on the device arrays before calling this."""
+        if self._mmap is not None:
+            try:
+                self._mmap.close()
+            except BufferError:
+                # A transient view (e.g. a writable() slice pinned by a
+                # traceback) is still exported; collect and retry, and if
+                # one survives even that, leave the map for process exit —
+                # the spool is scratch state, leaking it is benign.
+                gc.collect()
+                with contextlib.suppress(BufferError):
+                    self._mmap.close()
+            self._mmap = None
+        if self._spool_file is not None:
+            self._spool_file.close()
+            self._spool_file = None
 
 
 def _rebuild(manifest: dict, blob: bytes, like: Any,
@@ -289,6 +339,22 @@ def _rebuild(manifest: dict, blob: bytes, like: Any,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def _finish_restore(stream: _StreamingRestore, jr, spool: Optional[str]):
+    """Assemble the restored tree; for resumable restores, retire the
+    scratch state (journal + spool) once every leaf is safely on device —
+    ``device_put`` dispatch is async, so block before unmapping the spool
+    the arrays were read from."""
+    state = stream.finish()
+    if jr is not None:
+        jax.block_until_ready(state)
+        jr.complete()
+        stream.close()
+        if spool is not None:
+            with contextlib.suppress(OSError):
+                os.remove(spool)
+    return state
+
+
 def restore_checkpoint(
     root: str,
     like: Any,
@@ -298,6 +364,7 @@ def restore_checkpoint(
     tuner: Any = None,
     wave_bytes: Optional[int] = None,
     manager: Any = None,
+    resume: Optional[str] = None,
 ) -> tuple[Any, int]:
     """Restore (state, step).
 
@@ -336,6 +403,16 @@ def restore_checkpoint(
     always wins: the manager's hook is silenced for this restore and the
     wave-boundary updates feed the given tuner exactly as without a
     manager.
+
+    ``resume`` (a scratch directory path; replica restores only) makes
+    the restore **crash-resumable**: ranges land in a file-backed spool
+    (``<resume>/data.spool``) and every committed range is journaled with
+    its CRC32 (``<resume>/journal.log``, fsync'd at the journal's
+    checkpoint interval).  Re-running the same restore after a crash
+    replays the journal, re-verifies each journaled range against the
+    spool, and fetches only what is missing — the mirrors serve the
+    uncovered bytes, not the whole blob again.  On success both files
+    are deleted (a completed restore has nothing to resume).
     """
     if step is None:
         step = latest_step(root)
@@ -373,21 +450,48 @@ def restore_checkpoint(
                 msize = await mclient.blob_size()
                 mbuf, _ = await mclient.fetch(msize)
             manifest = json.loads(bytes(mbuf).decode())
-            stream = _StreamingRestore(manifest, like, shardings)
             total = int(manifest["total_bytes"])
-            async with client_for(
-                    [Replica(r.host, r.port, r.path + "/" + _DATA)
-                     for r in base]) as dclient:
+            jr = None
+            spool = None
+            if resume is not None:
+                os.makedirs(resume, exist_ok=True)
+                spool = os.path.join(resume, "data.spool")
+                # the journal is bound to (total, step): a scratch dir
+                # left over from a DIFFERENT restore fails the header
+                # check and starts fresh instead of poisoning this one
+                jr = ResumeJournal.open(
+                    os.path.join(resume, "journal.log"),
+                    total_bytes=total, meta={"step": int(step)})
+            stream = _StreamingRestore(manifest, like, shardings,
+                                       spool_path=spool)
+            try:
+                return await _restore_waves(stream, jr, spool, total,
+                                            dclient_factory=lambda: client_for(
+                                                [Replica(r.host, r.port,
+                                                         r.path + "/" + _DATA)
+                                                 for r in base]))
+            finally:
+                # idempotent: a successful restore already retired these;
+                # on failure the journal handle is released with its
+                # records flushed (the client syncs on the way out), so a
+                # re-run — same process or not — can resume cleanly
+                if jr is not None:
+                    jr.close()
+                stream.close()
+
+        async def _restore_waves(stream, jr, spool, total, dclient_factory):
+            async with dclient_factory() as dclient:
                 # the stream object carries the writable/commit zero-copy
                 # protocol: ranges are received straight into its buffer
                 if not wave_bytes or wave_bytes >= total:
-                    await dclient.fetch(total, sink=stream, tuner=tuner)
-                    return stream.finish()
+                    await dclient.fetch(total, sink=stream, tuner=tuner,
+                                        resume=jr)
+                    return _finish_restore(stream, jr, spool)
                 pos = 0
                 while pos < total:
                     n = min(int(wave_bytes), total - pos)
                     _, report = await dclient.fetch(n, sink=stream,
-                                                    offset=pos)
+                                                    offset=pos, resume=jr)
                     pos += n
                     if pos >= total:
                         break
@@ -420,7 +524,7 @@ def restore_checkpoint(
                             new = None
                         if new is not None:
                             dclient.adopt_params(new)
-            return stream.finish()
+            return _finish_restore(stream, jr, spool)
 
         return asyncio.run(run()), step
 

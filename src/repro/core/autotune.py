@@ -146,11 +146,19 @@ def _sized_config(cfg: SimConfig, engine: str, grid, file_size) -> SimConfig:
     """For the scan engine, widen ``max_rounds`` to cover the sweep's
     worst case (smallest L, largest file) — every round moves at least
     ``L`` bytes, so ``ceil(max_file / min_L) + 2`` bounds the trip count.
-    The bound is static config, so this is a Python-level decision."""
+    Injected faults forfeit whole chunks, so under a per-chunk failure
+    probability ``p`` the expected useful fraction of rounds is ``1 - p``:
+    the bound is inflated to ``need / (1 - p)`` plus slack (``p`` capped
+    well below 1 — a tuner run at near-certain failure is degenerate and
+    a finite bound keeps it from scanning forever).  The bound is static
+    config, so this is a Python-level decision."""
     if engine != "scan":
         return cfg
     min_l = min(l for _, l in grid)
     need = int(np.ceil(float(np.max(file_size)) / float(min_l))) + 2
+    p_fail = min(cfg.loss_rate + cfg.corruption_rate, 0.75)
+    if p_fail > 0.0:
+        need = int(np.ceil(need / (1.0 - p_fail))) + 8
     return cfg if cfg.max_rounds >= need else cfg._replace(max_rounds=need)
 
 
@@ -164,6 +172,8 @@ def autotune_chunk_params(
     mode: str = "proportional",
     engine: str | None = None,
     pipeline_depth: int = 1,
+    loss_rate: float = 0.0,
+    corruption_rate: float = 0.0,
 ) -> AutotuneResult:
     """Pick (C, L) minimizing simulated transfer time.
 
@@ -187,13 +197,20 @@ def autotune_chunk_params(
         (``SimConfig.pipeline_depth``) — without it the sweep over-pays
         for small chunks the pipelined data plane makes cheap and the
         adopted (C, L) diverges from what the wire actually does.
+      loss_rate / corruption_rate: observed per-chunk fault probabilities
+        (``SimConfig`` fault axes) — a faulted chunk burns its full
+        duration and is re-fetched, which taxes large L harder (more
+        bytes forfeited per fault), so a fleet reporting corrupt ranges
+        tunes to different geometry than a clean one.  Stochastic: pair
+        with ``n_seeds > 1`` so one unlucky draw doesn't pick the winner.
     """
     grid = list(grid or default_grid())
     engine = resolve_engine(engine, mode)
     bw, rtt, throttle_t, throttle_bw = _prep(
         bandwidth, rtt, None, None)
     cfg = _sized_config(
-        SimConfig(jitter=jitter, pipeline_depth=pipeline_depth),
+        SimConfig(jitter=jitter, pipeline_depth=pipeline_depth,
+                  loss_rate=loss_rate, corruption_rate=corruption_rate),
         engine, grid, file_size)
     grid_c, grid_l, grid_min = _grid_arrays(grid)
     seeds = jnp.arange(max(n_seeds, 1))
@@ -227,6 +244,8 @@ def sweep_scenarios(
     mode: str = "proportional",
     engine: str | None = None,
     pipeline_depth: int = 1,
+    loss_rate: float = 0.0,
+    corruption_rate: float = 0.0,
 ) -> jax.Array:
     """Seed-averaged predicted times for a batch of scenarios.
 
@@ -257,7 +276,8 @@ def sweep_scenarios(
     file_size = jnp.broadcast_to(
         jnp.asarray(file_size, jnp.float32), (s,))
     cfg = _sized_config(
-        SimConfig(jitter=jitter, pipeline_depth=pipeline_depth),
+        SimConfig(jitter=jitter, pipeline_depth=pipeline_depth,
+                  loss_rate=loss_rate, corruption_rate=corruption_rate),
         engine, grid, np.asarray(file_size))
     grid_c, grid_l, grid_min = _grid_arrays(grid)
     seeds = jnp.arange(max(n_seeds, 1))
@@ -282,6 +302,8 @@ def autotune_batch(
     mode: str = "proportional",
     engine: str | None = None,
     pipeline_depth: int = 1,
+    loss_rate: float = 0.0,
+    corruption_rate: float = 0.0,
 ) -> list[AutotuneResult]:
     """Per-scenario chunk-size selection over an ``[S, N]`` scenario batch.
 
@@ -296,6 +318,7 @@ def autotune_batch(
         throttle_t=throttle_t, throttle_bw=throttle_bw,
         jitter=jitter, n_seeds=n_seeds, mode=mode, engine=engine,
         pipeline_depth=pipeline_depth,
+        loss_rate=loss_rate, corruption_rate=corruption_rate,
     ), np.float64)
 
     results = []
@@ -323,6 +346,8 @@ def contention_sweep(
     mode: str = "proportional",
     engine: str | None = None,
     pipeline_depth: int = 1,
+    loss_rate: float = 0.0,
+    corruption_rate: float = 0.0,
 ) -> dict[int, AutotuneResult]:
     """Per-contention-level chunk tuning: the (C, L) ladder a fleet
     scheduler adopts as concurrent transfers arrive and drain.
@@ -350,7 +375,8 @@ def contention_sweep(
     mat = np.stack([bw / k for k in ks])
     results = autotune_batch(
         mat, rtt, file_size, grid=grid, jitter=jitter, n_seeds=n_seeds,
-        mode=mode, engine=engine, pipeline_depth=pipeline_depth)
+        mode=mode, engine=engine, pipeline_depth=pipeline_depth,
+        loss_rate=loss_rate, corruption_rate=corruption_rate)
     return dict(zip(ks, results))
 
 
@@ -383,8 +409,15 @@ class GradTuneResult:
 # and L at ``file_size / (max_rounds - 2)``, which keeps the static scan
 # bound valid for every point the optimizer can visit.
 
-def _l_floor_for(min_chunk: float, file_size: float, max_rounds: int) -> float:
-    return max(float(min_chunk), float(file_size) / max(max_rounds - 2, 1))
+def _l_floor_for(min_chunk: float, file_size: float, max_rounds: int,
+                 p_fail: float = 0.0) -> float:
+    """With faults on (``p_fail > 0``) the useful-round budget shrinks by
+    the expected forfeit fraction, so the L floor rises to keep the static
+    scan bound valid in expectation (fault-free callers are unchanged)."""
+    rounds = max(max_rounds - 2, 1)
+    if p_fail > 0.0:
+        rounds = max(int(rounds * (1.0 - min(p_fail, 0.75))) - 2, 1)
+    return max(float(min_chunk), float(file_size) / rounds)
 
 
 def _z_init(init: tuple[float, float], min_chunk: float,
@@ -431,15 +464,20 @@ def _adam_descend(vg, z: jax.Array, steps: int, lr: float, args=()):
 
 
 def _exact_time(params: ChunkParams, bw, rtt_a, throttle_t, throttle_bw,
-                file_f, mode: str, pipeline_depth: int = 1) -> float:
+                file_f, mode: str, pipeline_depth: int = 1,
+                loss_rate: float = 0.0,
+                corruption_rate: float = 0.0) -> float:
     """Honest number for integer params: exact sizes, round core, no
-    jitter — the metric both gradient tuners report and compare on.
+    jitter — the metric both gradient tuners report and compare on (under
+    faults, at the fixed seed 0 so init/final compare on the same draws).
     Routed through the cached jit dispatcher (an eager ``while_loop``
     costs seconds; online tuners call this every update)."""
     return float(_simulate(
         bw, rtt_a, throttle_t, throttle_bw, jnp.int32(0),
         ChunkArrays.from_params(params), file_f,
-        mode=mode, config=SimConfig(pipeline_depth=pipeline_depth),
+        mode=mode, config=SimConfig(pipeline_depth=pipeline_depth,
+                                    loss_rate=loss_rate,
+                                    corruption_rate=corruption_rate),
         engine="round",
     ).total_time)
 
@@ -448,7 +486,9 @@ def _finish_grad_tune(vg, vg_args, best_z, history,
                       init: tuple[float, float], min_chunk: int,
                       l_floor: float, mode: str,
                       bw, rtt_a, throttle_t, throttle_bw,
-                      file_f, pipeline_depth: int = 1) -> GradTuneResult:
+                      file_f, pipeline_depth: int = 1,
+                      loss_rate: float = 0.0,
+                      corruption_rate: float = 0.0) -> GradTuneResult:
     """Round ``best_z`` to integer ``ChunkParams``, guarantee never-worse
     than ``init`` on the EXACT metric (rounding can cross a round-count
     jump), and report the (dT/dC, dT/dL) chain-rule gradient."""
@@ -459,13 +499,15 @@ def _finish_grad_tune(vg, vg_args, best_z, history,
         large_chunk=max(l_best, min_chunk),
         min_chunk=min_chunk, mode=mode)
     t_final = _exact_time(params, bw, rtt_a, throttle_t, throttle_bw,
-                          file_f, mode, pipeline_depth)
+                          file_f, mode, pipeline_depth,
+                          loss_rate, corruption_rate)
     init_params = ChunkParams(
         initial_chunk=max(int(round(init[0])), min_chunk),
         large_chunk=max(int(round(init[1])), min_chunk),
         min_chunk=min_chunk, mode=mode)
     t_init = _exact_time(init_params, bw, rtt_a, throttle_t, throttle_bw,
-                         file_f, mode, pipeline_depth)
+                         file_f, mode, pipeline_depth,
+                         loss_rate, corruption_rate)
     if t_init < t_final:
         params, t_final = init_params, t_init
     # grad w.r.t. (C, L) via the chain rule through the softplus-free
@@ -494,6 +536,8 @@ def tune_chunk_params_grad(
     max_rounds: int = 1024,
     grid: Sequence[tuple[int, int]] | None = None,
     pipeline_depth: int = 1,
+    loss_rate: float = 0.0,
+    corruption_rate: float = 0.0,
 ) -> GradTuneResult:
     """Continuous (C, L) refinement: ``jax.grad`` polish of the grid winner.
 
@@ -525,15 +569,19 @@ def tune_chunk_params_grad(
     """
     bw, rtt_a, throttle_t, throttle_bw = _prep(bandwidth, rtt, None, None)
     file_f = jnp.float32(file_size)
+    p_fail = loss_rate + corruption_rate
     if init is None:
         seed_res = autotune_chunk_params(
             bandwidth, rtt, int(file_size), grid=grid, mode=mode,
-            pipeline_depth=pipeline_depth)
+            pipeline_depth=pipeline_depth,
+            loss_rate=loss_rate, corruption_rate=corruption_rate,
+            n_seeds=4 if p_fail > 0.0 else 1)
         init = (float(seed_res.params.initial_chunk),
                 float(seed_res.params.large_chunk))
-    l_floor = _l_floor_for(min_chunk, file_size, max_rounds)
+    l_floor = _l_floor_for(min_chunk, file_size, max_rounds, p_fail)
     cfg = SimConfig(max_rounds=max_rounds, exact_sizes=False,
-                    pipeline_depth=pipeline_depth)
+                    pipeline_depth=pipeline_depth,
+                    loss_rate=loss_rate, corruption_rate=corruption_rate)
 
     def total_time(z, bw, rtt_a, throttle_t, throttle_bw):
         c, l = _z_decode(z, min_chunk, l_floor)
@@ -549,4 +597,5 @@ def tune_chunk_params_grad(
     best_z, history = _adam_descend(vg, z0, steps, lr, args=vg_args)
     return _finish_grad_tune(
         vg, vg_args, best_z, history, init, min_chunk, l_floor, mode,
-        bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth)
+        bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth,
+        loss_rate, corruption_rate)

@@ -3,8 +3,14 @@
 Two re-expressions of the discrete-event simulator for the MDTP and
 static-chunking policies — one persistent connection per server, constant
 per-server bandwidth with an optional single throttle breakpoint
-(Fig. 4-style), optional per-chunk lognormal jitter.  No failure modeling —
-that path needs the Python simulator's range-reclaim pool.
+(Fig. 4-style), optional per-chunk lognormal jitter, and optional
+per-chunk fault injection (``SimConfig.loss_rate`` /
+``corruption_rate``): a faulted chunk occupies its connection for the
+full duration but delivers nothing, and its byte range is re-requested —
+the on-device mirror of the real client's verify-and-re-pool path, so
+re-fetch overhead is visible to the (C, L) autotuners.  Richer failure
+shapes (mid-chunk cuts, server death, flapping) still need the Python
+simulator's range-reclaim pool.
 
 Engines
 -------
@@ -128,6 +134,22 @@ class SimConfig(NamedTuple):
     #: (baked into the jaxpr) like the rest of the config; the smooth
     #: max(0, ...) keeps the scan core differentiable.
     pipeline_depth: int = 1
+    #: per-chunk probability the connection is cut / the body is lost
+    #: mid-flight.  A lost chunk occupies its connection for the full
+    #: modeled duration but credits no bytes and no throughput sample;
+    #: its range re-enters the remaining budget and is re-requested.
+    #: (The Python simulator models loss as a partial mid-chunk cut; here
+    #: the whole chunk is forfeited — a conservative upper bound that
+    #: keeps the cores branch-free.)  Fault draws consume PRNG splits
+    #: ONLY when a rate is nonzero, so fault-free configs reproduce the
+    #: exact seeded streams of earlier builds.
+    loss_rate: float = 0.0
+    #: per-chunk probability the delivered body fails integrity
+    #: verification (CRC mismatch in the real client).  Identical dynamics
+    #: to ``loss_rate`` on-device — full-duration waste, zero credit,
+    #: re-fetch — kept as a separate axis so tuner calls mirror the
+    #: client's telemetry split between resets and corrupt ranges.
+    corruption_rate: float = 0.0
 
 
 class JaxSimResult(NamedTuple):
@@ -148,6 +170,7 @@ class _State(NamedTuple):
     t_done: jax.Array        # scalar, latest completion seen
     pending: jax.Array       # [N] in-flight chunk size (0 = none)
     pending_dt: jax.Array    # [N] in-flight chunk duration
+    pending_ok: jax.Array    # [N] bool, in-flight chunk will verify/arrive
     bytes_srv: jax.Array     # [N]
     reqs: jax.Array          # [N] i32
     it: jax.Array            # scalar i32
@@ -212,18 +235,27 @@ def _make_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
         now = state.t_free[i]
 
         # 1) Complete its in-flight chunk (if any) and observe throughput.
+        # A faulted chunk (lost / failed verification) consumed the full
+        # duration but credits nothing: no bytes, no throughput sample,
+        # no t_done — and its range rolls back into the remaining budget
+        # so the allocator re-issues it, exactly like the real client's
+        # verify-and-re-pool path.
         size_done = state.pending[i]
         has_pending = size_done > 0.0
+        ok_i = jnp.logical_and(has_pending, state.pending_ok[i])
+        bad_i = jnp.logical_and(has_pending,
+                                jnp.logical_not(state.pending_ok[i]))
         th_obs = size_done / jnp.maximum(state.pending_dt[i], 1e-12)
-        th = state.th.at[i].set(jnp.where(has_pending, th_obs, state.th[i]))
-        bytes_srv = state.bytes_srv.at[i].add(jnp.where(has_pending, size_done, 0.0))
-        t_done = jnp.where(has_pending, jnp.maximum(state.t_done, now), state.t_done)
+        th = state.th.at[i].set(jnp.where(ok_i, th_obs, state.th[i]))
+        bytes_srv = state.bytes_srv.at[i].add(jnp.where(ok_i, size_done, 0.0))
+        t_done = jnp.where(ok_i, jnp.maximum(state.t_done, now), state.t_done)
+        cursor0 = state.cursor - jnp.where(bad_i, size_done, 0.0)
 
         # 2) Ask the allocator for the next request.  float32 cursor
         # accumulation absorbs sub-eps residues at 64 GB scale, so anything
         # below ~2 ulp of the file size counts as done (planning tool — the
         # byte-exact path is the Python simulator / real client).
-        remaining = jnp.maximum(file_size - state.cursor, 0.0)
+        remaining = jnp.maximum(file_size - cursor0, 0.0)
         eps = file_size * jnp.float32(3e-7) + jnp.float32(1.0)
         remaining = jnp.where(remaining <= eps, 0.0, remaining)
         size = chunk_sizes(th, remaining, chunk, mode=mode,
@@ -240,16 +272,27 @@ def _make_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
                              bw1[i] * scale, depth=cfg.pipeline_depth,
                              warm=state.reqs[i] > 0)
 
+        # Fault draw at issue time (the outcome is predetermined but only
+        # observed at completion).  The extra split happens ONLY when a
+        # fault rate is set, so fault-free seeds replay bit-identically.
+        p_fail = cfg.loss_rate + cfg.corruption_rate
+        ok_new = jnp.bool_(True)
+        if p_fail > 0.0:
+            key, fk = jax.random.split(key)
+            ok_new = jax.random.uniform(fk) >= jnp.float32(p_fail)
+        pending_ok = state.pending_ok.at[i].set(
+            jnp.where(active, ok_new, True))
+
         t_free = state.t_free.at[i].set(jnp.where(active, now + dt, _INF))
         pending = state.pending.at[i].set(jnp.where(active, size, 0.0))
         pending_dt = state.pending_dt.at[i].set(jnp.where(active, dt, 0.0))
-        cursor = state.cursor + jnp.where(active, size, 0.0)
+        cursor = cursor0 + jnp.where(active, size, 0.0)
         reqs = state.reqs.at[i].add(jnp.where(active, 1, 0))
 
         new_state = _State(
             t_free=t_free, th=th, cursor=cursor, t_done=t_done,
-            pending=pending, pending_dt=pending_dt, bytes_srv=bytes_srv,
-            reqs=reqs, it=state.it + 1, key=key,
+            pending=pending, pending_dt=pending_dt, pending_ok=pending_ok,
+            bytes_srv=bytes_srv, reqs=reqs, it=state.it + 1, key=key,
         )
         return (new_state, bw0, throttle_t, bw1, rtt)
 
@@ -284,6 +327,7 @@ def _init_state(n: int, seed) -> _State:
         t_done=jnp.float32(0.0),
         pending=jnp.zeros((n,), jnp.float32),
         pending_dt=jnp.zeros((n,), jnp.float32),
+        pending_ok=jnp.ones((n,), jnp.bool_),
         bytes_srv=jnp.zeros((n,), jnp.float32),
         reqs=jnp.zeros((n,), jnp.int32),
         it=jnp.int32(0),
@@ -356,21 +400,28 @@ def _make_round_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
 
     def step(state: _State, bw0, throttle_t, bw1, rtt) -> _State:
         # 1) Complete ALL in-flight chunks; observe every server at once.
+        # Faulted chunks (predrawn at issue) credit nothing — no bytes,
+        # no throughput sample, no t_done — and roll their ranges back
+        # into the remaining budget for re-allocation.
         has_pending = state.pending > 0.0
+        ok_v = jnp.logical_and(has_pending, state.pending_ok)
+        bad_v = jnp.logical_and(has_pending,
+                                jnp.logical_not(state.pending_ok))
         th = jnp.where(
-            has_pending,
+            ok_v,
             state.pending / jnp.maximum(state.pending_dt, 1e-12),
             state.th)
-        bytes_srv = state.bytes_srv + jnp.where(has_pending, state.pending,
-                                                0.0)
+        bytes_srv = state.bytes_srv + jnp.where(ok_v, state.pending, 0.0)
         t_done = jnp.maximum(
             state.t_done,
-            jnp.max(jnp.where(has_pending, state.t_free, -_INF)))
+            jnp.max(jnp.where(ok_v, state.t_free, -_INF)))
+        cursor0 = state.cursor - jnp.sum(
+            jnp.where(bad_v, state.pending, 0.0))
 
         # 2) One batched allocation for the whole round (same eps logic as
         # the event core: float32 cursor residue below ~2 ulp of the file
         # size counts as done).
-        remaining = jnp.maximum(file_size - state.cursor, 0.0)
+        remaining = jnp.maximum(file_size - cursor0, 0.0)
         eps = file_size * jnp.float32(3e-7) + jnp.float32(1.0)
         remaining = jnp.where(remaining <= eps, 0.0, remaining)
 
@@ -421,14 +472,24 @@ def _make_round_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
                              bw1 * scale, depth=cfg.pipeline_depth,
                              warm=state.reqs > 0)
         t_free = jnp.where(active, now + dt, _INF)
+
+        # Fault draws for the whole round at once; extra split only when a
+        # rate is set so fault-free seeds replay bit-identically.
+        p_fail = cfg.loss_rate + cfg.corruption_rate
+        ok_new = jnp.ones(now.shape, jnp.bool_)
+        if p_fail > 0.0:
+            key, fk = jax.random.split(key)
+            ok_new = jax.random.uniform(fk, now.shape) >= jnp.float32(p_fail)
+
         stepped = jnp.logical_or(jnp.any(has_pending), jnp.any(active))
         return _State(
             t_free=t_free,
             th=th,
-            cursor=state.cursor + total,
+            cursor=cursor0 + total,
             t_done=t_done,
             pending=jnp.where(active, granted, 0.0),
             pending_dt=jnp.where(active, dt, 0.0),
+            pending_ok=jnp.where(active, ok_new, True),
             bytes_srv=bytes_srv,
             reqs=state.reqs + active.astype(jnp.int32),
             it=state.it + stepped.astype(jnp.int32),

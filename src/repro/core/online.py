@@ -198,9 +198,17 @@ def tune_chunk_params_mcgrad(
     max_rounds: int = 1024,
     grid: Sequence[tuple[int, int]] | None = None,
     pipeline_depth: int = 1,
+    loss_rate: float = 0.0,
+    corruption_rate: float = 0.0,
 ) -> GradTuneResult:
     """Monte-Carlo (C, L) descent on the scan core: one compile, ``n_seeds``
     pathwise gradients averaged per step.
+
+    ``loss_rate`` / ``corruption_rate`` are the fleet's observed per-chunk
+    fault probabilities (``SimConfig`` fault axes): faulted chunks burn
+    their duration and are re-fetched, a tax that grows with L — the MC
+    seed batch already averages over the fault draws, so the smoothed
+    gradient prices it in.
 
     Each seed draws per-chunk lognormal bandwidth jitter (``bw_jitter``)
     and a per-simulation lognormal RTT scale (``rtt_jitter``), so the
@@ -215,16 +223,20 @@ def tune_chunk_params_mcgrad(
     """
     bw, rtt_a, throttle_t, throttle_bw = _prep(bandwidth, rtt, None, None)
     file_f = jnp.float32(file_size)
+    p_fail = loss_rate + corruption_rate
     if init is None:
         seed_res = autotune_chunk_params(
             bandwidth, rtt, int(file_size), grid=grid, mode=mode,
-            pipeline_depth=pipeline_depth)
+            pipeline_depth=pipeline_depth,
+            loss_rate=loss_rate, corruption_rate=corruption_rate,
+            n_seeds=4 if p_fail > 0.0 else 1)
         init = (float(seed_res.params.initial_chunk),
                 float(seed_res.params.large_chunk))
-    l_floor = _l_floor_for(min_chunk, file_size, max_rounds)
+    l_floor = _l_floor_for(min_chunk, file_size, max_rounds, p_fail)
     cfg = SimConfig(max_rounds=max_rounds, exact_sizes=False,
                     jitter=bw_jitter, rtt_jitter=rtt_jitter,
-                    pipeline_depth=pipeline_depth)
+                    pipeline_depth=pipeline_depth,
+                    loss_rate=loss_rate, corruption_rate=corruption_rate)
     vg = _mc_value_and_grad(mode, cfg, max(n_seeds, 1))
     vg_args = (bw, rtt_a, throttle_t, throttle_bw, file_f,
                jnp.float32(min_chunk), jnp.float32(l_floor))
@@ -232,7 +244,8 @@ def tune_chunk_params_mcgrad(
     best_z, history = _adam_descend(vg, z0, steps, lr, args=vg_args)
     return _finish_grad_tune(
         vg, vg_args, best_z, history, init, min_chunk, l_floor, mode,
-        bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth)
+        bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth,
+        loss_rate, corruption_rate)
 
 
 # --------------------------------------------------------------------------
@@ -254,6 +267,10 @@ class GridTuner:
     #: request pipeline depth of the runtime being tuned — keeps the
     #: simulated RTT amortization honest (``SimConfig.pipeline_depth``).
     pipeline_depth: int = 1
+    #: observed per-chunk fault probabilities of the fleet being tuned
+    #: (``SimConfig.loss_rate`` / ``corruption_rate``) — re-fetch tax.
+    loss_rate: float = 0.0
+    corruption_rate: float = 0.0
     params: Optional[ChunkParams] = None
     updates: int = 0
 
@@ -265,9 +282,12 @@ class GridTuner:
         if not bw or t.remaining_bytes < 2 * DEFAULT_MIN_CHUNK:
             return None
         self.updates += 1
+        p_fail = self.loss_rate + self.corruption_rate
         res = autotune_chunk_params(
             bw, rtts, int(t.remaining_bytes), grid=self.grid, mode=self.mode,
-            pipeline_depth=self.pipeline_depth)
+            pipeline_depth=self.pipeline_depth,
+            loss_rate=self.loss_rate, corruption_rate=self.corruption_rate,
+            n_seeds=4 if p_fail > 0.0 else 1)
         self.params = res.params
         return res.params
 
@@ -293,6 +313,9 @@ class MCGradTuner:
     grid: Optional[list[tuple[int, int]]] = None
     #: request pipeline depth of the runtime being tuned (see GridTuner).
     pipeline_depth: int = 1
+    #: observed per-chunk fault probabilities (see GridTuner).
+    loss_rate: float = 0.0
+    corruption_rate: float = 0.0
     params: Optional[ChunkParams] = None
     updates: int = 0
     last_result: Optional[GradTuneResult] = None
@@ -315,7 +338,8 @@ class MCGradTuner:
             bw_jitter=self.bw_jitter, rtt_jitter=self.rtt_jitter,
             mode=self.mode, min_chunk=self.min_chunk,
             max_rounds=self.max_rounds, grid=self.grid,
-            pipeline_depth=self.pipeline_depth)
+            pipeline_depth=self.pipeline_depth,
+            loss_rate=self.loss_rate, corruption_rate=self.corruption_rate)
         self.params, self.last_result = res.params, res
         return res.params
 
@@ -364,6 +388,11 @@ class BanditTuner:
     #: request pipeline depth of the runtime being tuned (see GridTuner) —
     #: shapes the seeding sweep that proposes the arm set.
     pipeline_depth: int = 1
+    #: observed per-chunk fault probabilities (see GridTuner) — shape the
+    #: seeding sweep; the measured-throughput reward already prices in
+    #: real re-fetch waste without them, so they only affect proposals.
+    loss_rate: float = 0.0
+    corruption_rate: float = 0.0
     arms: list[_Arm] = field(default_factory=list)
     params: Optional[ChunkParams] = None
     updates: int = 0
@@ -381,9 +410,12 @@ class BanditTuner:
         bw, rtts = t.live(self.default_rtt)
         if not bw or t.remaining_bytes < 2 * DEFAULT_MIN_CHUNK:
             return None
+        p_fail = self.loss_rate + self.corruption_rate
         res = autotune_chunk_params(
             bw, rtts, int(t.remaining_bytes), grid=self.grid, mode=self.mode,
-            pipeline_depth=self.pipeline_depth)
+            pipeline_depth=self.pipeline_depth,
+            loss_rate=self.loss_rate, corruption_rate=self.corruption_rate,
+            n_seeds=4 if p_fail > 0.0 else 1)
         order = np.argsort(res.predicted_times)
         self.arms = []
         seen = set()

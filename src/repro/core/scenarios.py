@@ -22,7 +22,7 @@ Calibration notes live in EXPERIMENTS.md §Reproduction.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from .simulator import ServerSpec
 
@@ -40,6 +40,9 @@ __all__ = [
     "contention_matrix",
     "ContentionTrace",
     "contention_traces",
+    "with_faults",
+    "FaultTrace",
+    "fault_traces",
 ]
 
 MBPS = 1024 * 1024  # we quote server rates in MiB/s
@@ -94,17 +97,10 @@ def with_added_latency(
 ) -> list[ServerSpec]:
     """Paper §VII-C: +0.5 s latency on the *fastest* server's requests."""
     fastest = max(range(len(servers)), key=lambda i: servers[i].bandwidth)
-    out = []
-    for i, s in enumerate(servers):
-        if i == fastest:
-            out.append(ServerSpec(
-                name=s.name, bandwidth=s.bandwidth, rtt=s.rtt + extra_rtt,
-                connect_latency=s.connect_latency, profile=s.profile,
-                jitter=s.jitter,
-            ))
-        else:
-            out.append(s)
-    return out
+    return [
+        replace(s, rtt=s.rtt + extra_rtt) if i == fastest else s
+        for i, s in enumerate(servers)
+    ]
 
 
 # --------------------------------------------------------------------------
@@ -142,13 +138,8 @@ def with_fair_share(servers: list[ServerSpec], k: int) -> list[ServerSpec]:
     if k == 1:
         return list(servers)
     return [
-        ServerSpec(
-            name=s.name, bandwidth=s.bandwidth / k, rtt=s.rtt,
-            connect_latency=s.connect_latency,
-            profile=tuple((t, bw / k) for t, bw in s.profile),
-            jitter=s.jitter, fail_at=s.fail_at,
-            avail_up=s.avail_up, avail_down=s.avail_down,
-        )
+        replace(s, bandwidth=s.bandwidth / k,
+                profile=tuple((t, bw / k) for t, bw in s.profile))
         for s in servers
     ]
 
@@ -215,6 +206,84 @@ def contention_traces() -> list[ContentionTrace]:
     ]
 
 
+# --------------------------------------------------------------------------
+# Fault injection (integrity + loss — the chaos-harness mirror)
+# --------------------------------------------------------------------------
+#
+# The real stack injects faults at the HTTP server (``transfer.server
+# .FaultPolicy``) and recovers in the client (CRC verify, banned re-pool,
+# resume journal).  These traces are the simulator-side mirror: the same
+# per-chunk loss/corruption probabilities on ``ServerSpec``, with matching
+# ``SimConfig.loss_rate``/``corruption_rate`` for the on-device tuner
+# cores, so (C, L) tuning can price in re-fetch overhead.
+
+
+def with_faults(
+    servers: list[ServerSpec],
+    loss_rate: float = 0.0,
+    corruption_rate: float = 0.0,
+    only: int | None = None,
+) -> list[ServerSpec]:
+    """Inject per-chunk fault probabilities into a fleet.
+
+    ``only=None`` applies the rates to every replica (a lossy client-side
+    path); ``only=i`` taints just replica ``i`` (one bad mirror — the
+    regime where re-fetch-from-alternate wins big).
+    """
+    return [
+        replace(s, loss_rate=loss_rate, corruption_rate=corruption_rate)
+        if only is None or i == only else s
+        for i, s in enumerate(servers)
+    ]
+
+
+@dataclass(frozen=True)
+class FaultTrace:
+    """One named fault regime, with the fleet-wide effective rates the
+    on-device tuner cores should mirror (``SimConfig.loss_rate`` /
+    ``corruption_rate`` are scalar, so per-replica taints are averaged
+    into an effective fleet rate weighted by nothing fancier than 1/N —
+    the tuner only needs the right order of magnitude of re-fetch tax)."""
+
+    name: str
+    servers: tuple[ServerSpec, ...]
+    loss_rate: float
+    corruption_rate: float
+
+
+def fault_traces(rtt: float = _DEFAULT_RTT) -> list[FaultTrace]:
+    """The three fault regimes the robustness suite exercises:
+
+    * ``lossy-path`` — every replica drops 5% of chunks mid-body (WAN
+      resets); tests reclaim + backoff overhead.
+    * ``corrupt-mirror`` — ONE replica (the fastest, worst case) corrupts
+      20% of its bodies; tests CRC verify + banned re-pool + the fleet
+      health deprioritization.
+    * ``flaky-fleet`` — 2% loss and 2% corruption everywhere; the
+      background-noise regime (C, L) tuning should price in.
+
+    Deterministic base fleets (``jitter=0``) so fault overhead is the
+    only stochastic term.
+    """
+    base = paper_baseline(rtt=rtt, jitter=0.0)
+    fastest = max(range(len(base)), key=lambda i: base[i].bandwidth)
+    n = len(base)
+    return [
+        FaultTrace(
+            "lossy-path",
+            tuple(with_faults(base, loss_rate=0.05)),
+            loss_rate=0.05, corruption_rate=0.0),
+        FaultTrace(
+            "corrupt-mirror",
+            tuple(with_faults(base, corruption_rate=0.20, only=fastest)),
+            loss_rate=0.0, corruption_rate=0.20 / n),
+        FaultTrace(
+            "flaky-fleet",
+            tuple(with_faults(base, loss_rate=0.02, corruption_rate=0.02)),
+            loss_rate=0.02, corruption_rate=0.02),
+    ]
+
+
 def with_throttled_fastest(
     servers: list[ServerSpec],
     limit_bytes_per_s: float = 62.5 * 1000 * 1000,  # 500 Mbps
@@ -226,12 +295,7 @@ def with_throttled_fastest(
     for i, s in enumerate(servers):
         if i == fastest:
             capped = min(s.bandwidth, limit_bytes_per_s)
-            out.append(ServerSpec(
-                name=s.name, bandwidth=s.bandwidth, rtt=s.rtt,
-                connect_latency=s.connect_latency,
-                profile=s.profile + ((at_time, capped),),
-                jitter=s.jitter,
-            ))
+            out.append(replace(s, profile=s.profile + ((at_time, capped),)))
         else:
             out.append(s)
     return out

@@ -71,6 +71,16 @@ class ServerSpec:
       avail_up / avail_down: mean up/down durations of an on/off Markov
         availability process (BitTorrent seeders, Fig. 2c).  ``avail_up <=
         0`` means always up.
+      loss_rate: per-chunk probability the connection is cut mid-body: a
+        uniform fraction of the chunk arrives (taking the time those bytes
+        take), the tail is reclaimed and re-issued.  Models flaky paths /
+        resets without taking the whole server down.
+      corruption_rate: per-chunk probability the body arrives complete but
+        fails integrity verification — full transfer time is paid, zero
+        bytes are credited, and the whole range is re-issued.  Mirrors the
+        real client's CRC verify-and-re-pool path.  Both fault draws
+        consume RNG only when their rate is nonzero, so fault-free
+        scenarios replay the exact seeded event streams of earlier builds.
     """
 
     name: str
@@ -82,6 +92,8 @@ class ServerSpec:
     fail_at: float = _INF
     avail_up: float = 0.0
     avail_down: float = 0.0
+    loss_rate: float = 0.0
+    corruption_rate: float = 0.0
 
     def bandwidth_at(self, t: float) -> float:
         bw = self.bandwidth
@@ -356,9 +368,19 @@ class _ServerRuntime:
         """Simulate fetching ``nbytes`` starting with a request at ``t0``.
 
         Returns ``(t_finish, delivered)``.  ``delivered < nbytes`` iff the
-        server went down mid-transfer (the caller reclaims the tail).
+        server went down mid-transfer, the connection was cut by an
+        injected loss, or the body failed verification (``delivered == 0``
+        with full time paid); the caller reclaims the undelivered tail.
         """
         spec = self.spec
+        # Fault predraws — each guarded by its own rate so fault-free
+        # specs consume no extra RNG and replay historical streams.
+        lost_after = None
+        if spec.loss_rate > 0.0 and rng.random() < spec.loss_rate:
+            lost_after = int(rng.random() * nbytes)  # bytes that make it
+        corrupt = False
+        if spec.corruption_rate > 0.0:
+            corrupt = lost_after is None and rng.random() < spec.corruption_rate
         scale = 1.0
         if spec.jitter > 0.0:
             # mean-1 lognormal so calibration is unbiased.
@@ -366,6 +388,23 @@ class _ServerRuntime:
                 rng.lognormal(mean=-0.5 * spec.jitter**2, sigma=spec.jitter)
             )
         t = t0 + spec.rtt + (spec.connect_latency if first_use else 0.0)
+        if lost_after is not None:
+            # Walk the rate/availability segments only up to the cut point:
+            # the client sees a clean partial body then a dead socket.
+            t_cut, got = self._walk(t, lost_after, scale)
+            return (t_cut, got)
+        t_fin, delivered = self._walk(t, nbytes, scale)
+        if corrupt and delivered == nbytes:
+            # Full time burned, nothing trustworthy landed: the client's
+            # checksum rejects the body and re-pools the whole range.
+            return (t_fin, 0)
+        return (t_fin, delivered)
+
+    def _walk(
+        self, t: float, nbytes: int, scale: float
+    ) -> tuple[float, int]:
+        """Advance through rate/availability segments delivering up to
+        ``nbytes`` from time ``t`` (first-byte time, post-RTT)."""
         remaining = float(nbytes)
         while remaining > 0.0:
             down = self.next_downtime_covering(t)

@@ -1,10 +1,15 @@
 """Real asyncio transfer runtime: MDTP client + range-serving HTTP server
-plus the fleet-level multi-transfer scheduler."""
+plus the fleet-level multi-transfer scheduler, end-to-end integrity
+(per-range CRC32 verification), crash-resume journaling, and a
+fault-injecting chaos harness."""
 
-from .client import MDTPClient, Replica, TransferReport, fetch_blob
+from .client import (MDTPClient, Replica, TransferIncompleteError,
+                     TransferReport, fetch_blob)
+from .journal import ResumeJournal
 from .manager import FleetModel, TransferJob, TransferManager
-from .server import RangeServer, Throttle
+from .server import FaultPolicy, RangeServer, Throttle
 
-__all__ = ["MDTPClient", "Replica", "TransferReport", "fetch_blob",
+__all__ = ["MDTPClient", "Replica", "TransferReport",
+           "TransferIncompleteError", "fetch_blob", "ResumeJournal",
            "FleetModel", "TransferJob", "TransferManager",
-           "RangeServer", "Throttle"]
+           "RangeServer", "Throttle", "FaultPolicy"]

@@ -16,10 +16,21 @@ asyncio's ``loop.sock_*`` primitives with:
   (``repro.core.chunking`` — single source of truth),
 * per-chunk throughput observation feeding the next allocation (RTT bias
   removed at the observation point — see :func:`wire_elapsed`),
-* failure handling: a replica that errors mid-chunk is retired (or retried
-  after ``retry_after``) and every range it still owes — including all
-  pipelined in-flight requests — is atomically re-pooled for surviving
-  peers (the checkpoint-restore path's fault tolerance).
+* **end-to-end integrity**: every range's CRC32 (the server's
+  ``X-Range-Checksum`` header) is verified off the event loop as bodies
+  land; a mismatching range is atomically re-pooled tagged "not this
+  replica" so it re-fetches from an alternate mirror, and a chronically
+  corrupt replica is retired like a dead one,
+* **crash-resume**: ``fetch(resume=journal)`` replays an append-only
+  :class:`~repro.transfer.journal.ResumeJournal`, re-verifies journaled
+  range checksums against the destination, and requests only the
+  uncovered intervals,
+* failure handling: a replica that errors mid-chunk — or stalls past the
+  per-read inactivity timeout — is retired (or retried with capped
+  exponential backoff after ``retry_after``) and every range it still
+  owes, including all pipelined in-flight requests, is atomically
+  re-pooled for surviving peers (the checkpoint-restore path's fault
+  tolerance).
 
 Sink contract
 -------------
@@ -44,16 +55,20 @@ from __future__ import annotations
 import asyncio
 import contextlib
 import heapq
+import random
 import socket
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import NamedTuple, Optional, Sequence
 
 from repro.core.chunking import ChunkParams, default_chunk_params, next_chunk_size
 from repro.core.throughput import make_estimator, rtt_corrected_bandwidth
+from repro.transfer.journal import merge_intervals, uncovered_intervals
 
 __all__ = ["Replica", "TransferReport", "MDTPClient", "NoTelemetryError",
-           "fetch_blob", "wire_elapsed", "DEFAULT_PIPELINE_DEPTH"]
+           "TransferIncompleteError", "fetch_blob", "wire_elapsed",
+           "DEFAULT_PIPELINE_DEPTH"]
 
 #: default per-connection request pipeline depth.  2 keeps a request on
 #: the wire while the previous body streams (the RTT-hiding that matters)
@@ -63,6 +78,12 @@ __all__ = ["Replica", "TransferReport", "MDTPClient", "NoTelemetryError",
 #: another ~10-20% from depth 4 (see benchmarks/dataplane_bench.py);
 #: tune per deployment via ``MDTPClient(pipeline_depth=...)``.
 DEFAULT_PIPELINE_DEPTH = 2
+
+#: bodies at or below this size are CRC'd inline on the event loop (the
+#: executor round-trip costs more than the hash); larger bodies hash in
+#: the thread pool — zlib releases the GIL, so verification overlaps the
+#: next body's socket reads instead of stalling them.
+_CRC_INLINE_MAX = 128 * 1024
 
 
 class NoTelemetryError(RuntimeError):
@@ -74,6 +95,25 @@ class NoTelemetryError(RuntimeError):
     ``RuntimeError`` — which would also swallow real failures like
     jax's ``XlaRuntimeError`` from the fused sweep itself.
     """
+
+
+class TransferIncompleteError(IOError):
+    """``fetch()`` could not deliver every byte (all replicas failed or
+    were retired for corruption before the pool drained).
+
+    A dedicated type — previously this surfaced as a bare ``IOError``,
+    and before that a short buffer could silently escape — so callers
+    can distinguish "the transfer is incomplete, retry/resume it" from
+    unrelated I/O failures.  Subclasses ``IOError`` for compatibility.
+    """
+
+    def __init__(self, message: str, *, done_bytes: int = 0,
+                 expected_bytes: int = 0,
+                 failed_replicas: Sequence[str] = ()):
+        super().__init__(message)
+        self.done_bytes = done_bytes
+        self.expected_bytes = expected_bytes
+        self.failed_replicas = list(failed_replicas)
 
 
 @dataclass(frozen=True)
@@ -109,6 +149,15 @@ class TransferReport:
     #: ``retune`` so the simulated sweep uses live latencies, not a
     #: guessed constant.
     observed_rtts: dict = field(default_factory=dict)
+    #: per-replica count of connection-level retries (reconnect after a
+    #: break/stall, with capped exponential backoff between attempts).
+    retries_per_replica: dict = field(default_factory=dict)
+    #: per-replica count of ranges that failed checksum verification and
+    #: were re-fetched from an alternate mirror.
+    corrupt_ranges: dict = field(default_factory=dict)
+    #: bytes satisfied from the resume journal instead of the wire
+    #: (``fetch(resume=...)``); 0 for fresh transfers.
+    resumed_bytes: int = 0
 
     @property
     def throughput(self) -> float:
@@ -134,6 +183,19 @@ def wire_elapsed(nbytes: int, elapsed: float, rtt: float) -> float:
     return nbytes / corrected if corrected > 0.0 else elapsed
 
 
+async def _crc32_async(data) -> int:
+    """CRC32 of a body, off the event loop for large bodies.
+
+    ``zlib.crc32`` accepts any buffer and releases the GIL, so hashing a
+    multi-megabyte range in the default executor runs concurrently with
+    the loop's socket reads; small bodies aren't worth the thread hop.
+    """
+    if len(data) <= _CRC_INLINE_MAX:
+        return zlib.crc32(data)
+    return await asyncio.get_running_loop().run_in_executor(
+        None, zlib.crc32, data)
+
+
 class _RangeReply(NamedTuple):
     """One completed range request, with the timing metadata the
     observation layer needs to de-bias throughput samples."""
@@ -148,6 +210,9 @@ class _RangeReply(NamedTuple):
     #: True when ``elapsed`` spans the full request round-trip (the pipe
     #: was idle at issue time) — the estimator must strip the RTT.
     rtt_included: bool
+    #: server-declared CRC32 of the range (``X-Range-Checksum`` header),
+    #: None when the server doesn't checksum.
+    crc32: Optional[int] = None
 
 
 class _Conn:
@@ -166,10 +231,11 @@ class _Conn:
     turnaround measures the predecessor's streaming time, not the path).
     Consumers drain ``take_rtt_samples()`` and min-aggregate.
 
-    Any failure (transport error, malformed response, cancellation
-    mid-read) marks the connection ``broken``: the stream position is
-    unrecoverable, so every queued request fails fast instead of parsing
-    from the middle of a predecessor's body.
+    Any failure (transport error, malformed response, a read stalled past
+    ``read_timeout``, cancellation mid-read) marks the connection
+    ``broken``: the stream position is unrecoverable, so every queued
+    request fails fast instead of parsing from the middle of a
+    predecessor's body.
     """
 
     #: recv size while parsing status/headers — small so read-ahead into
@@ -177,7 +243,8 @@ class _Conn:
     #: the zero-copy path per response.
     _HEADER_RECV = 4096
 
-    def __init__(self, replica: Replica, request_latency: float = 0.0):
+    def __init__(self, replica: Replica, request_latency: float = 0.0,
+                 read_timeout: float = 0.0):
         self.replica = replica
         #: emulated request-path propagation delay (seconds) — a test and
         #: benchmark knob: loopback has no real RTT, so the dataplane
@@ -185,6 +252,13 @@ class _Conn:
         #: pipelining pays off.  Applied before each request send, off
         #: the critical path of already-streaming predecessors.
         self.request_latency = request_latency
+        #: per-READ inactivity bound (seconds; 0 disables).  A replica
+        #: that stalls without dying would otherwise hang a lane forever
+        #: — the timeout converts the stall into a ``ConnectionError`` so
+        #: it takes the same re-pool path as a connection death.  Scoped
+        #: per socket read, not per request: a huge range streaming
+        #: slowly-but-steadily never trips it.
+        self.read_timeout = read_timeout
         self.broken = False
         self._sock: Optional[socket.socket] = None
         self._rbuf = bytearray()
@@ -224,8 +298,20 @@ class _Conn:
 
     # -- buffered header reads / zero-copy body reads ----------------------
 
+    async def _timed(self, aw):
+        """Bound one socket read by the inactivity timeout."""
+        if self.read_timeout <= 0.0:
+            return await aw
+        try:
+            return await asyncio.wait_for(aw, self.read_timeout)
+        except asyncio.TimeoutError:
+            raise ConnectionError(
+                f"read stalled > {self.read_timeout:g}s "
+                f"(inactivity timeout)") from None
+
     async def _fill(self, hint: int) -> None:
-        data = await asyncio.get_running_loop().sock_recv(self._sock, hint)
+        data = await self._timed(
+            asyncio.get_running_loop().sock_recv(self._sock, hint))
         if not data:
             raise ConnectionError("connection closed")
         self._rbuf += data
@@ -275,7 +361,8 @@ class _Conn:
             del self._rbuf[:got]
         loop = asyncio.get_running_loop()
         while got < n:
-            r = await loop.sock_recv_into(self._sock, view[got:n])
+            r = await self._timed(
+                loop.sock_recv_into(self._sock, view[got:n]))
             if r <= 0:
                 raise ConnectionError(
                     f"connection closed mid-body ({got}/{n} B)")
@@ -290,6 +377,16 @@ class _Conn:
         return (f"{method} {self.replica.path} HTTP/1.1\r\n"
                 f"Host: {self.replica.host}\r\n{rng}"
                 f"Connection: keep-alive\r\n\r\n").encode()
+
+    @staticmethod
+    def _parse_checksum(headers: dict) -> Optional[int]:
+        raw = headers.get("x-range-checksum")
+        if raw and raw.startswith("crc32:"):
+            try:
+                return int(raw[len("crc32:"):], 16)
+            except ValueError:
+                return None
+        return None
 
     async def fetch_range(self, start: int, end: int,
                           into: Optional[memoryview] = None) -> _RangeReply:
@@ -350,7 +447,8 @@ class _Conn:
             return _RangeReply(
                 data=body, nbytes=n,
                 elapsed=t_end - (t_ready if pipelined else t_send),
-                rtt_included=not pipelined)
+                rtt_included=not pipelined,
+                crc32=self._parse_checksum(headers))
         except BaseException:
             self.broken = True
             raise
@@ -382,6 +480,9 @@ class MDTPClient:
         pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
         zero_copy: bool = True,
         request_latency: float = 0.0,
+        verify_integrity: bool = True,
+        read_timeout: float = 30.0,
+        retry_backoff_cap: float = 5.0,
     ):
         self.replicas = list(replicas)
         self._params_arg = params
@@ -402,6 +503,18 @@ class MDTPClient:
         self.zero_copy = zero_copy
         #: emulated request-path delay per request (see ``_Conn``).
         self.request_latency = request_latency
+        #: verify each range's CRC32 against the server's
+        #: ``X-Range-Checksum`` header and re-fetch mismatches from an
+        #: alternate mirror.  On by default; servers that don't send the
+        #: header are simply not verified (no error).
+        self.verify_integrity = verify_integrity
+        #: per-read inactivity timeout (seconds; 0 disables) applied to
+        #: every connection — see ``_Conn.read_timeout``.
+        self.read_timeout = read_timeout
+        #: ceiling (seconds) on the exponential dead-replica retry
+        #: backoff: attempt k waits ``min(retry_after * 2**(k-1), cap)``
+        #: scaled by ±50% jitter so reconnect storms decorrelate.
+        self.retry_backoff_cap = retry_backoff_cap
         #: report of the most recent ``fetch`` (None before the first one).
         self.last_report: Optional[TransferReport] = None
 
@@ -426,7 +539,9 @@ class MDTPClient:
 
         The client's own ``pipeline_depth`` is passed to the sweep (unless
         overridden) so the simulated request-latency amortization matches
-        what this runtime actually does on the wire.
+        what this runtime actually does on the wire; likewise an observed
+        corruption rate (re-fetched ranges / requests) is folded in so the
+        sweep's (C, L) pays the same re-fetch overhead the wire did.
 
         Returns the ``AutotuneResult``; raises if no transfer has been
         observed yet or no replica produced a throughput sample.
@@ -454,6 +569,13 @@ class MDTPClient:
             raise NoTelemetryError("no throughput observations to retune from")
         autotune_kw.setdefault("rtt", rtts)
         autotune_kw.setdefault("pipeline_depth", self.pipeline_depth)
+        total_reqs = sum(rep.requests_per_replica.values())
+        total_corrupt = sum(rep.corrupt_ranges.values())
+        if total_corrupt > 0 and total_reqs > 0:
+            autotune_kw.setdefault(
+                "corruption_rate", min(total_corrupt / total_reqs, 0.5))
+            # a single seed sees one fault realization; average a few
+            autotune_kw.setdefault("n_seeds", 4)
         res = autotune_chunk_params(bw, file_size=int(file_size),
                                     **autotune_kw)
         self._params_arg = res.params
@@ -472,7 +594,8 @@ class MDTPClient:
         """Connection factory — subclasses may translate offsets (the data
         pipeline's virtual-blob client) or wrap requests (the fleet
         manager's capped, telemetry-fed connections)."""
-        return _Conn(replica, request_latency=self.request_latency)
+        return _Conn(replica, request_latency=self.request_latency,
+                     read_timeout=self.read_timeout)
 
     def _allocation_throughputs(self, est_values: list) -> list:
         """Per-replica throughput vector the allocator sizes chunks from.
@@ -485,19 +608,42 @@ class MDTPClient:
         """
         return est_values
 
+    def _on_corruption(self, name: str) -> None:
+        """Integrity-failure hook: called once per checksum-mismatched
+        range, outside the transfer lock.  The fleet manager overrides
+        this to feed per-replica corruption counters into the
+        ``FleetModel`` so chronically corrupt replicas are deprioritized
+        fleet-wide, not just within this transfer."""
+
     async def fetch(self, size: int, sink=None, *, offset: int = 0,
                     tuner=None, tune_interval_bytes: Optional[int] = None,
+                    resume=None, into: Optional[bytearray] = None,
                     ) -> tuple[Optional[bytearray], TransferReport]:
         """Fetch ``size`` bytes.  ``sink`` (if given) receives ranges as
         they land — see the module docstring for the two sink protocols
         (callable receiving transient memoryviews, or ``writable``/
         ``commit`` for the copy-free path); otherwise an in-memory buffer
-        is assembled (and received into directly — zero-copy).
+        is assembled (and received into directly — zero-copy).  ``into``
+        supplies that buffer (``len(into) >= size``) instead of a fresh
+        allocation — resume needs the previous attempt's bytes in place.
 
         ``offset`` shifts every byte-range request (and the ``sink`` start
         offsets) by a constant — a wave of a larger blob fetches
         ``[offset, offset + size)`` while the internal cursor/pool stay
         0-based (the checkpoint-restore wave loop uses this).
+
+        ``resume`` (a :class:`~repro.transfer.journal.ResumeJournal`)
+        replays previously committed intervals: each journaled record
+        inside this fetch's window is re-verified against the destination
+        (its CRC32 — data that never reached stable storage fails and is
+        re-fetched), verified bytes are counted done without touching the
+        wire, and every NEW committed range is appended to the journal
+        (fsync'd at the journal's checkpoint interval).  The journal is
+        left open; call ``complete()`` on it after the overall operation
+        (which may span several waves) succeeds.
+
+        Raises :class:`TransferIncompleteError` if the surviving replicas
+        could not deliver every byte — a short buffer never escapes.
 
         ``tuner`` (default: the client's ``tuner``) re-tunes chunk
         geometry mid-transfer: every ``tune_interval_bytes`` delivered
@@ -523,23 +669,44 @@ class MDTPClient:
         # holds enough signal, then fed to the estimator as one reading
         obs_win = [[0, 0.0] for _ in range(n)]
         zero_copy = self.zero_copy
-        buf = bytearray(size) if sink is None else None
+        if sink is not None and into is not None:
+            raise TypeError("into= only applies when assembling in-memory "
+                            "(sink is None)")
+        if into is not None and len(into) < size:
+            raise ValueError(f"into buffer ({len(into)} B) smaller than "
+                             f"transfer size ({size} B)")
+        buf = (into if into is not None else bytearray(size)) \
+            if sink is None else None
         sink_writable = getattr(sink, "writable", None)
         sink_commit = getattr(sink, "commit", None)
         if (sink_writable is None) != (sink_commit is None):
             raise TypeError(
                 "zero-copy sinks must provide BOTH writable() and commit()")
 
+        verify = self.verify_integrity
+        journal = resume
+        need_crc = verify or journal is not None
+
         cursor = 0
-        # reclaimed (start, len) min-heap keyed on range start (ranges never
-        # overlap); ``pooled`` mirrors its byte total so the hot remaining-
-        # work check is O(1)
-        pool: list[tuple[int, int]] = []
+        # reclaimed (start, len, banned) min-heap keyed on range start
+        # (ranges never overlap, so comparisons never reach the
+        # non-orderable ban set); ``banned`` is the frozenset of replica
+        # indices that served this range corrupt — the packer re-fetches
+        # it from anyone else.  ``pooled`` mirrors the heap's byte total
+        # so the hot remaining-work check is O(1).
+        pool: list[tuple[int, int, frozenset]] = []
         pooled = 0
         bytes_per = {r.name: 0 for r in self.replicas}
         reqs_per = {r.name: 0 for r in self.replicas}
+        retries_per = {r.name: 0 for r in self.replicas}
+        corrupt_per = {r.name: 0 for r in self.replicas}
         rtt_min = [0.0] * n                      # 0 = no sample yet
         failed: list[str] = []
+        #: replica indices whose worker is still running — the ban-set
+        #: escape hatch (a range banned for EVERY live replica may be
+        #: retried by anyone rather than deadlock) and the worker-exit
+        #: wakeup both key off this.
+        alive: set = set(range(n))
         refetched = 0
         lock = asyncio.Lock()
         #: signalled whenever reclaimed work appears or in-flight bytes
@@ -549,6 +716,44 @@ class MDTPClient:
         #: surviving taker — the mirror-death fault-tolerance contract).
         cond = asyncio.Condition(lock)
         done_bytes = 0
+        resumed_bytes = 0
+
+        if journal is not None:
+            # Replay: every journaled record inside this window whose
+            # bytes still verify is covered; everything else re-fetches.
+            # Verification needs a readable destination — the assembly
+            # buffer or a writable() sink view; callable sinks can't be
+            # read back, so their records are trusted as journaled.
+            def _view_of(abs_start: int, nb: int):
+                if buf is not None:
+                    lo = abs_start - offset
+                    return memoryview(buf)[lo:lo + nb]
+                if sink_writable is not None:
+                    return sink_writable(abs_start, nb)
+                return None
+
+            verified: list[tuple[int, int]] = []
+            for s_abs, nb, rcrc in journal.records():
+                if s_abs < offset or s_abs + nb > offset + size:
+                    continue
+                v = _view_of(s_abs, nb)
+                if v is not None and rcrc is not None \
+                        and zlib.crc32(v) != rcrc:
+                    continue
+                verified.append((s_abs - offset, nb))
+            covered = merge_intervals(verified)
+            for s_, n_ in uncovered_intervals(covered, size):
+                heapq.heappush(pool, (s_, n_, frozenset()))
+                pooled += n_
+            cursor = size            # all remaining work lives in the pool
+            resumed_bytes = size - pooled
+            done_bytes = resumed_bytes
+            if sink_commit is not None:
+                # drive the sink's covered-interval accounting so resumed
+                # regions materialize exactly like freshly landed ones
+                for s_, n_ in covered:
+                    sink_commit(offset + s_, n_)
+
         t0 = time.monotonic()
 
         tuner = tuner if tuner is not None else self.tuner
@@ -557,7 +762,8 @@ class MDTPClient:
         # but never finer than a couple of large chunks' worth of signal
         tune_every = tune_interval_bytes or max(
             size // 8, 2 * params_box[0].large_chunk)
-        tune_state = {"bytes": 0, "t": t0, "busy": False, "task": None}
+        tune_state = {"bytes": done_bytes, "t": t0, "busy": False,
+                      "task": None}
 
         def _telemetry_bandwidths() -> tuple:
             """Full-fleet positional wire-rate vector for ``Telemetry``:
@@ -617,17 +823,33 @@ class MDTPClient:
                 rtt_min[i] = (sample if rtt_min[i] <= 0.0
                               else min(rtt_min[i], sample))
 
-        async def _reclaim(start: int, length: int, *, count: bool) -> None:
+        async def _reclaim(start: int, length: int, ban: frozenset, *,
+                           count: bool) -> None:
             """Return an owed range to the pool and settle the in-flight
             count, atomically, waking parked lanes."""
             nonlocal inflight, pooled, refetched
             async with lock:
-                heapq.heappush(pool, (start, length))
+                heapq.heappush(pool, (start, length, ban))
                 pooled += length
                 inflight -= length
                 if count:
                     refetched += 1
                 cond.notify_all()
+
+        def _pick_pool_entry(i: int) -> Optional[int]:
+            """Index of the lowest-start pool entry replica ``i`` may
+            take: any entry it isn't banned from — or, if every LIVE
+            replica is banned from an entry, anyone may retry it (the
+            re-verify catches a repeat corruption; refusing would
+            deadlock the tail).  Linear scan: the pool holds reclaimed
+            ranges only, a handful at worst."""
+            best = None
+            for k, (s_, _ln, ban_) in enumerate(pool):
+                if i in ban_ and not alive <= ban_:
+                    continue
+                if best is None or s_ < pool[best][0]:
+                    best = k
+            return best
 
         async def pipe_lane(i: int, conn: "_Conn") -> str:
             """One pipelined request lane on replica ``i``'s shared
@@ -635,8 +857,10 @@ class MDTPClient:
             their concurrent ``fetch_range`` calls are what keeps k
             requests on the wire.  Returns ``"done"`` when the transfer
             has no work left, ``"broken"`` on a connection failure (the
-            owed range is already back in the pool)."""
-            nonlocal cursor, inflight, pooled, done_bytes
+            owed range is already back in the pool), ``"corrupt-dead"``
+            when this replica crossed the corruption cap and was
+            retired."""
+            nonlocal cursor, inflight, pooled, done_bytes, refetched
             name = self.replicas[i].name
             while True:
                 if conn.broken:
@@ -645,12 +869,26 @@ class MDTPClient:
                     return "broken"
                 async with lock:
                     while True:
+                        if conn.broken:
+                            # woke from cond.wait to a sibling's failure:
+                            # don't draw a range a doomed send would just
+                            # bounce back (and spuriously count as
+                            # refetched)
+                            return "broken"
                         remaining = (size - cursor) + pooled
-                        if remaining > 0:
-                            break
-                        if inflight <= 0:
-                            return "done"
-                        await cond.wait()
+                        if remaining <= 0:
+                            if inflight <= 0:
+                                return "done"
+                            await cond.wait()
+                            continue
+                        pick = _pick_pool_entry(i) if pool else None
+                        if pick is None and cursor >= size:
+                            # every pooled range is tagged away from this
+                            # replica and another live replica can take
+                            # it — park until the pool changes
+                            await cond.wait()
+                            continue
+                        break
                     want = next_chunk_size(
                         i,
                         self._allocation_throughputs(
@@ -658,11 +896,6 @@ class MDTPClient:
                         params_box[0], remaining)
                     if want <= 0:
                         return "done"
-                    if conn.broken:
-                        # woke from cond.wait to a sibling's failure:
-                        # don't draw a range a doomed send would just
-                        # bounce back (and spuriously count as refetched)
-                        return "broken"
                     if depth > 1:
                         # the allocator sizes one MDTP round's share for
                         # this replica; the lanes split it so the
@@ -683,19 +916,31 @@ class MDTPClient:
                                    want, remaining)
                         want = min(want, max(remaining // (2 * depth),
                                              params_box[0].min_chunk))
-                    if pool:
-                        s, ln = pool[0]
+                    if pick is not None:
+                        s, ln, ban = pool[pick]
                         take = min(ln, want)
-                        if take == ln:
-                            heapq.heappop(pool)
+                        if pick == 0:
+                            if take == ln:
+                                heapq.heappop(pool)
+                            else:
+                                # shrunk head keeps its heap position
+                                heapq.heapreplace(
+                                    pool, (s + take, ln - take, ban))
                         else:
-                            # shrunk head keeps its heap position
-                            heapq.heapreplace(pool, (s + take, ln - take))
+                            # non-head draw (ban-skip path): ranges are
+                            # disjoint, so a start that only grows within
+                            # its own range keeps the heap order
+                            if take == ln:
+                                pool.pop(pick)
+                                heapq.heapify(pool)
+                            else:
+                                pool[pick] = (s + take, ln - take, ban)
                         pooled -= take
                     else:
                         take = min(want, size - cursor)
                         s = cursor
                         cursor += take
+                        ban = frozenset()
                     start, length = s, take
                     inflight += length
                 # destination: straight into the assembly buffer / the
@@ -713,7 +958,7 @@ class MDTPClient:
                         mv = (memoryview(bytearray(length))
                               if zero_copy else None)
                 except BaseException:
-                    await _reclaim(start, length, count=False)
+                    await _reclaim(start, length, ban, count=False)
                     raise
                 try:
                     reply = await conn.fetch_range(
@@ -721,17 +966,47 @@ class MDTPClient:
                         into=mv)
                 except (ConnectionError, OSError,
                         asyncio.IncompleteReadError):
-                    await _reclaim(start, length, count=True)
+                    await _reclaim(start, length, ban, count=True)
                     return "broken"
                 except BaseException:
                     # cancellation / unexpected error: release the range
                     # so peers waiting on in-flight work aren't stranded
-                    await _reclaim(start, length, count=False)
+                    await _reclaim(start, length, ban, count=False)
                     raise
                 try:
                     ndata = reply.nbytes
                     for sample in conn.take_rtt_samples():
                         observe_rtt(i, sample)
+                    crc = None
+                    if need_crc:
+                        # off the event loop for big bodies; the range is
+                        # exclusively ours until committed or re-pooled,
+                        # so hashing it unlocked is safe
+                        crc = await _crc32_async(reply.data)
+                    if (verify and reply.crc32 is not None
+                            and crc != reply.crc32):
+                        # corrupt body: the bytes never count — re-pool
+                        # the WHOLE range tagged "not this replica" so
+                        # the packer re-fetches from an alternate mirror
+                        async with lock:
+                            corrupt_per[name] += 1
+                            dead = corrupt_per[name] >= self.max_failures
+                            heapq.heappush(
+                                pool, (start, length, ban | {i}))
+                            pooled += length
+                            inflight -= length
+                            refetched += 1
+                            if dead and name not in failed:
+                                failed.append(name)
+                            cond.notify_all()
+                        self._on_corruption(name)
+                        if dead:
+                            # chronically corrupt = retired, like a dead
+                            # mirror; breaking the shared conn stops
+                            # sibling lanes too
+                            conn.broken = True
+                            return "corrupt-dead"
+                        continue
                     # estimators track the WIRE rate: serial observations
                     # have their request RTT stripped here, pipelined ones
                     # already measure pure body-streaming time
@@ -760,8 +1035,12 @@ class MDTPClient:
                     # e.g. the user-supplied sink raised (disk full): the
                     # bytes were NOT delivered — reclaim the whole range
                     # and settle the in-flight count before propagating
-                    await _reclaim(start, length, count=False)
+                    await _reclaim(start, length, ban, count=False)
                     raise
+                if journal is not None:
+                    # committed: journal the interval (buffered append;
+                    # fsync at the journal's checkpoint interval)
+                    journal.record(offset + start, ndata, crc)
                 async with lock:
                     bytes_per[name] += ndata
                     reqs_per[name] += 1
@@ -771,7 +1050,7 @@ class MDTPClient:
                         # tail re-enters the pool atomically with the
                         # inflight decrement so no peer can exit between
                         heapq.heappush(
-                            pool, (start + ndata, length - ndata))
+                            pool, (start + ndata, length - ndata, ban))
                         pooled += length - ndata
                         cond.notify_all()
                     elif inflight <= 0:
@@ -792,38 +1071,59 @@ class MDTPClient:
         async def worker(i: int):
             """Per-replica supervisor: owns the connection, runs
             ``pipeline_depth`` lanes over it, and on failure re-pools are
-            already done lane-side — it just counts the failure,
-            reconnects, and respawns the lanes."""
+            already done lane-side — it just counts the failure, backs
+            off (capped exponential + jitter), reconnects, and respawns
+            the lanes."""
+            name = self.replicas[i].name
             failures = 0
-            while True:
-                async with lock:
-                    if (size - cursor) + pooled <= 0 and inflight <= 0:
+            try:
+                while True:
+                    async with lock:
+                        if (size - cursor) + pooled <= 0 and inflight <= 0:
+                            return
+                    conn = self._make_conn(self.replicas[i])
+                    lanes = [asyncio.ensure_future(pipe_lane(i, conn))
+                             for _ in range(self.pipeline_depth)]
+                    try:
+                        outcomes = await asyncio.gather(
+                            *lanes, return_exceptions=True)
+                    finally:
+                        for t in lanes:
+                            t.cancel()
+                        await asyncio.gather(*lanes, return_exceptions=True)
+                        await conn.close()
+                        for sample in conn.take_rtt_samples():
+                            observe_rtt(i, sample)
+                    fatal = [o for o in outcomes
+                             if isinstance(o, BaseException)]
+                    if fatal:
+                        raise fatal[0]
+                    if "corrupt-dead" in outcomes:
+                        # retired for integrity (already in ``failed``)
                         return
-                conn = self._make_conn(self.replicas[i])
-                lanes = [asyncio.ensure_future(pipe_lane(i, conn))
-                         for _ in range(self.pipeline_depth)]
-                try:
-                    outcomes = await asyncio.gather(
-                        *lanes, return_exceptions=True)
-                finally:
-                    for t in lanes:
-                        t.cancel()
-                    await asyncio.gather(*lanes, return_exceptions=True)
-                    await conn.close()
-                    for sample in conn.take_rtt_samples():
-                        observe_rtt(i, sample)
-                fatal = [o for o in outcomes
-                         if isinstance(o, BaseException)]
-                if fatal:
-                    raise fatal[0]
-                if "broken" not in outcomes:
-                    return
-                failures += 1
-                if failures >= self.max_failures:
-                    failed.append(self.replicas[i].name)
-                    return
-                if self.retry_after > 0:
-                    await asyncio.sleep(self.retry_after)
+                    if "broken" not in outcomes:
+                        return
+                    failures += 1
+                    if failures >= self.max_failures:
+                        if name not in failed:
+                            failed.append(name)
+                        return
+                    retries_per[name] += 1
+                    if self.retry_after > 0:
+                        # capped exponential backoff with ±50% jitter:
+                        # repeated failures probe ever less often, and
+                        # decorrelated delays keep N clients' reconnect
+                        # storms from synchronizing on a recovering mirror
+                        delay = min(self.retry_after * (2 ** (failures - 1)),
+                                    self.retry_backoff_cap)
+                        delay *= 0.5 + random.random()
+                        await asyncio.sleep(delay)
+            finally:
+                # parked peers key takeability off the live-replica set
+                # (see ``alive``) — they must recheck when it shrinks
+                async with lock:
+                    alive.discard(i)
+                    cond.notify_all()
 
         workers = [asyncio.ensure_future(worker(i))
                    for i in range(len(self.replicas))]
@@ -839,6 +1139,8 @@ class MDTPClient:
             task = tune_state["task"]
             if task is not None and not task.done():
                 task.cancel()
+            if journal is not None:
+                journal.sync()
             raise
         t_end = time.monotonic()
         # settle an in-flight tuner update BEFORE any raise, so no task
@@ -854,10 +1156,17 @@ class MDTPClient:
                     await task
                 except asyncio.CancelledError:
                     pass
+        if journal is not None:
+            # everything committed so far is durable before we either
+            # report success or raise (an incomplete transfer's journal
+            # is exactly what the resume path replays)
+            journal.sync()
         if done_bytes != size:
-            raise IOError(
+            raise TransferIncompleteError(
                 f"transfer incomplete: {done_bytes}/{size} bytes "
-                f"(failed replicas: {failed})")
+                f"(failed replicas: {failed})",
+                done_bytes=done_bytes, expected_bytes=size,
+                failed_replicas=failed)
         if retunes > 0:
             # adaptation persists: the next fetch starts from the tuned
             # geometry instead of re-learning from the defaults.  Guarded
@@ -877,6 +1186,9 @@ class MDTPClient:
                 r.name: float(rtt_min[i])
                 for i, r in enumerate(self.replicas)
             },
+            retries_per_replica=retries_per,
+            corrupt_ranges=corrupt_per,
+            resumed_bytes=resumed_bytes,
         )
         self.last_report = report
         return buf, report
@@ -884,7 +1196,7 @@ class MDTPClient:
     async def blob_size(self) -> int:
         """HEAD the first healthy replica for the blob size."""
         for r in self.replicas:
-            conn = _Conn(r)
+            conn = _Conn(r, read_timeout=self.read_timeout)
             try:
                 code, headers = await conn.head()
                 if code == 200:

@@ -70,6 +70,14 @@ class _ReplicaState:
     rates: dict = field(default_factory=dict)
     #: completed chunks observed (diagnostics).
     chunks: int = 0
+    #: checksum-mismatched ranges served by this mirror (all transfers).
+    corruptions: int = 0
+    #: multiplicative trust factor in (0, 1]: decays on every corruption,
+    #: recovers slowly on clean chunks.  Scales the allocation view, so a
+    #: chronically corrupt replica is deprioritized exactly like a slow
+    #: one — it still gets probing-sized requests (re-fetch overhead is
+    #: bounded) but stops anchoring large chunks.
+    health: float = 1.0
 
 
 class FleetModel:
@@ -167,6 +175,17 @@ class FleetModel:
                            else self.alpha * total
                            + (1.0 - self.alpha) * st.capacity)
             st.chunks += 1
+            # clean evidence slowly rebuilds trust (asymmetric on purpose:
+            # one corruption costs more than one clean chunk repays)
+            st.health += 0.05 * (1.0 - st.health)
+
+    def observe_corruption(self, name: str) -> None:
+        """One checksum-mismatched range from this mirror: count it and
+        decay the mirror's trust factor (floored so it can recover)."""
+        with self._lock:
+            st = self._reps.setdefault(name, _ReplicaState())
+            st.corruptions += 1
+            st.health = max(st.health * 0.7, 0.05)
 
     def observe_rtt(self, name: str, sample: float) -> None:
         if sample <= 0.0:
@@ -196,11 +215,11 @@ class FleetModel:
                 own = float(est_values[i])
                 st = self._reps.get(r.name)
                 if own <= 0.0 or st is None or st.capacity <= 0.0:
-                    out.append(own)
+                    out.append(own if st is None else own * st.health)
                     continue
                 foreign = sum(v for u, v in st.rates.items() if u != tid)
                 floor = st.capacity / (2.0 * n_active)
-                out.append(max(st.capacity - foreign, floor))
+                out.append(max(st.capacity - foreign, floor) * st.health)
             return out
 
     def fleet_telemetry(self, tid, replicas: Sequence[Replica], telemetry):
@@ -229,6 +248,8 @@ class FleetModel:
                     "rtt": st.rtt,
                     "rates": dict(st.rates),
                     "chunks": st.chunks,
+                    "corruptions": st.corruptions,
+                    "health": st.health,
                 }
                 for name, st in self._reps.items()
             }
@@ -239,8 +260,8 @@ class _ManagedConn(_Conn):
     in-flight cap and (b) feeds every completed range request into the
     shared fleet model."""
 
-    def __init__(self, replica: Replica, fleet: FleetModel, tid):
-        super().__init__(replica)
+    def __init__(self, replica: Replica, fleet: FleetModel, tid, **conn_kw):
+        super().__init__(replica, **conn_kw)
         self._fleet = fleet
         self._tid = tid
 
@@ -294,11 +315,16 @@ class _ManagedClient(MDTPClient):
         self._tid = tid
 
     def _make_conn(self, replica: Replica) -> _Conn:
-        return _ManagedConn(replica, self._manager.fleet, self._tid)
+        return _ManagedConn(replica, self._manager.fleet, self._tid,
+                            request_latency=self.request_latency,
+                            read_timeout=self.read_timeout)
 
     def _allocation_throughputs(self, est_values: list) -> list:
         return self._manager.fleet.allocation_view(
             self._tid, self.replicas, est_values)
+
+    def _on_corruption(self, name: str) -> None:
+        self._manager.fleet.observe_corruption(name)
 
 
 @dataclass

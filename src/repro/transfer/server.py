@@ -7,7 +7,12 @@ Serves files (or in-memory blobs) with:
   * persistent connections (keep-alive) — the paper's one-session-per-server
     requirement,
   * optional per-connection bandwidth throttling and response latency, so
-    integration tests can reproduce heterogeneous replicas on localhost.
+    integration tests can reproduce heterogeneous replicas on localhost,
+  * an ``X-Range-Checksum`` CRC32 trailer-in-header so clients can verify
+    every range end-to-end, and
+  * an optional :class:`FaultPolicy` that injects bit-flips, truncations,
+    stalls, garbage headers and connection resets — the chaos harness the
+    robustness tests and benchmarks drive.
 
 This is the replica-store stand-in for the data pipeline and the
 checkpoint mirror in tests/examples.
@@ -15,14 +20,16 @@ checkpoint mirror in tests/examples.
 
 from __future__ import annotations
 
+import random
 import socket
 import threading
 import time
+import zlib
 from dataclasses import dataclass
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
-__all__ = ["RangeServer", "Throttle"]
+__all__ = ["RangeServer", "Throttle", "FaultPolicy"]
 
 
 @dataclass
@@ -41,6 +48,29 @@ class Throttle:
     #: rate *ratios* between mirrors are schedule-independent (host load
     #: can only add the same additive overhead to both sides).
     deterministic: bool = False
+
+
+@dataclass
+class FaultPolicy:
+    """Probabilistic per-range fault injection for chaos testing.
+
+    Each GET draws independently from a seeded RNG shared by all handler
+    threads, so a fixed seed gives a reproducible fault *sequence* for a
+    deterministic request order (and a reproducible fault *rate* always).
+    At most one fault fires per request; precedence when several rates are
+    set: reset > garbage > truncate > stall > corrupt.
+
+    The checksum header is always computed over the pristine bytes, so a
+    bit-flipped body is detectable by the client — that is the point.
+    """
+
+    corrupt_rate: float = 0.0    #: flip bytes in the body (headers intact)
+    truncate_rate: float = 0.0   #: full Content-Length, short body, sever
+    stall_rate: float = 0.0      #: sleep ``stall_s`` mid-body
+    garbage_rate: float = 0.0    #: malformed status line, then sever
+    reset_rate: float = 0.0      #: sever the connection before responding
+    stall_s: float = 5.0
+    seed: int = 0
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -83,9 +113,47 @@ class _Handler(BaseHTTPRequestHandler):
                 srv.peak_concurrent, srv.concurrent)
         try:
             self._serve_get()
+        except (BrokenPipeError, ConnectionResetError):
+            # the client gave up mid-body (stall timeout, kill) — the
+            # handler thread must not die noisily for that
+            self.close_connection = True
         finally:
             with srv.gauge_lock:                  # type: ignore[attr-defined]
                 srv.concurrent -= 1               # type: ignore[attr-defined]
+
+    def _draw_fault(self) -> Optional[str]:
+        faults: Optional[FaultPolicy] = (
+            self.server.faults)                   # type: ignore[attr-defined]
+        if faults is None:
+            return None
+        with self.server.fault_lock:              # type: ignore[attr-defined]
+            rng: random.Random = (
+                self.server.fault_rng)            # type: ignore[attr-defined]
+            for kind, rate in (
+                ("reset", faults.reset_rate),
+                ("garbage", faults.garbage_rate),
+                ("truncate", faults.truncate_rate),
+                ("stall", faults.stall_rate),
+                ("corrupt", faults.corrupt_rate),
+            ):
+                if rate > 0.0 and rng.random() < rate:
+                    counts = (
+                        self.server.fault_counts)  # type: ignore[attr-defined]
+                    counts[kind] = counts.get(kind, 0) + 1
+                    return kind
+        return None
+
+    def _sever(self) -> None:
+        """Abruptly cut the TCP stream (the reset/garbage/truncate tail)."""
+        self.close_connection = True
+        try:
+            self.connection.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+
+    def _account(self, n: int) -> None:
+        with self.server.gauge_lock:              # type: ignore[attr-defined]
+            self.server.served_bytes += n         # type: ignore[attr-defined]
 
     def _serve_get(self):
         blob = self._blob()
@@ -111,20 +179,68 @@ class _Handler(BaseHTTPRequestHandler):
             # memoryview slice: no per-range body copy — ranges (and the
             # throttle pieces below) are windows over the registered blob
             body = memoryview(blob)[lo:hi + 1]
-            self.send_response(206)
-            self.send_header("Content-Range",
-                             f"bytes {lo}-{hi}/{len(blob)}")
+            status = 206
+            content_range = f"bytes {lo}-{hi}/{len(blob)}"
         else:
             body = memoryview(blob)
-            self.send_response(200)
+            status = 200
+            content_range = None
+
+        fault = self._draw_fault()
+        if fault == "reset":
+            self._sever()
+            return
+        if fault == "garbage":
+            try:
+                self.wfile.write(b"HTTX/9.9 000 NOT-HTTP\r\n\r\n")
+                self.wfile.flush()
+            except OSError:
+                pass
+            self._sever()
+            return
+
+        # checksum of the PRISTINE range — computed before any corruption
+        # is applied, so a flipped bit downstream is detectable
+        crc = (zlib.crc32(body)
+               if self.server.checksums else None)  # type: ignore[attr-defined]
+
+        truncate_at = None
+        if fault == "truncate":
+            # correct headers, short body: the worst kind of short read
+            truncate_at = max(1, len(body) // 2)
+        stall_at = None
+        if fault == "stall":
+            stall_at = len(body) // 2
+        if fault == "corrupt":
+            faults: FaultPolicy = (
+                self.server.faults)               # type: ignore[attr-defined]
+            corrupted = bytearray(body)
+            with self.server.fault_lock:          # type: ignore[attr-defined]
+                frng: random.Random = (
+                    self.server.fault_rng)        # type: ignore[attr-defined]
+                nflips = max(1, len(corrupted) // (256 * 1024))
+                for _ in range(nflips):
+                    corrupted[frng.randrange(len(corrupted))] ^= 0xFF
+            body = memoryview(bytes(corrupted))
+
+        self.send_response(status)
+        if content_range is not None:
+            self.send_header("Content-Range", content_range)
         self.send_header("Content-Length", str(len(body)))
         self.send_header("Accept-Ranges", "bytes")
+        if crc is not None:
+            self.send_header("X-Range-Checksum", f"crc32:{crc:08x}")
         self.end_headers()
+
+        limit = truncate_at if truncate_at is not None else len(body)
         if throttle.bytes_per_s > 0:
             sent = 0
             t0 = time.monotonic()
-            while sent < len(body):
-                piece = body[sent:sent + throttle.chunk]
+            while sent < limit:
+                piece = body[sent:min(sent + throttle.chunk, limit)]
+                if stall_at is not None and sent >= stall_at:
+                    time.sleep(self.server.faults.stall_s)  # type: ignore
+                    stall_at = None
                 if throttle.deterministic:
                     # bytes-only token bucket: every piece pays its wire
                     # time up front, unconditionally — host load cannot
@@ -135,6 +251,7 @@ class _Handler(BaseHTTPRequestHandler):
                     # honest).
                     time.sleep(len(piece) / throttle.bytes_per_s)
                 self.wfile.write(piece)
+                self._account(len(piece))
                 sent += len(piece)
                 if not throttle.deterministic:
                     target = sent / throttle.bytes_per_s
@@ -142,19 +259,43 @@ class _Handler(BaseHTTPRequestHandler):
                     if sleep > 0:
                         time.sleep(sleep)
         else:
-            self.wfile.write(body)
+            if stall_at is not None and stall_at > 0:
+                self.wfile.write(body[:stall_at])
+                self._account(stall_at)
+                time.sleep(self.server.faults.stall_s)  # type: ignore
+                self.wfile.write(body[stall_at:limit])
+                self._account(limit - stall_at)
+            else:
+                if stall_at is not None:
+                    time.sleep(self.server.faults.stall_s)  # type: ignore
+                self.wfile.write(body[:limit])
+                self._account(limit)
+        if truncate_at is not None:
+            self._sever()
 
 
 class RangeServer:
     """In-process replica server.  Register blobs or files by path."""
 
-    def __init__(self, throttle: Optional[Throttle] = None):
+    def __init__(
+        self,
+        throttle: Optional[Throttle] = None,
+        faults: Optional[FaultPolicy] = None,
+        checksums: bool = True,
+    ):
         self._srv = ThreadingHTTPServer(("127.0.0.1", 0), _Handler)
         self._srv.blobs = {}                      # type: ignore[attr-defined]
         self._srv.throttle = throttle or Throttle()  # type: ignore[attr-defined]
+        self._srv.checksums = checksums           # type: ignore[attr-defined]
+        self._srv.faults = faults                 # type: ignore[attr-defined]
+        self._srv.fault_rng = random.Random(      # type: ignore[attr-defined]
+            faults.seed if faults else 0)
+        self._srv.fault_lock = threading.Lock()   # type: ignore[attr-defined]
+        self._srv.fault_counts = {}               # type: ignore[attr-defined]
         self._srv.gauge_lock = threading.Lock()   # type: ignore[attr-defined]
         self._srv.concurrent = 0                  # type: ignore[attr-defined]
         self._srv.peak_concurrent = 0             # type: ignore[attr-defined]
+        self._srv.served_bytes = 0                # type: ignore[attr-defined]
         self._srv.open_conns = set()              # type: ignore[attr-defined]
         self._thread = threading.Thread(target=self._srv.serve_forever,
                                         daemon=True)
@@ -170,8 +311,26 @@ class RangeServer:
         return self._srv.peak_concurrent          # type: ignore[attr-defined]
 
     @property
+    def served_bytes(self) -> int:
+        """Body bytes actually written to clients (post-truncation) —
+        the served-byte accounting resume tests rely on."""
+        return self._srv.served_bytes             # type: ignore[attr-defined]
+
+    @property
+    def fault_counts(self) -> dict:
+        """How many faults of each kind have fired (by name)."""
+        return dict(self._srv.fault_counts)       # type: ignore[attr-defined]
+
+    @property
     def address(self) -> tuple[str, int]:
         return ("127.0.0.1", self.port)
+
+    def set_faults(self, faults: Optional[FaultPolicy]) -> None:
+        """Swap the fault policy at runtime (None disables injection);
+        the RNG is reseeded so a fresh policy starts a fresh sequence."""
+        self._srv.faults = faults                 # type: ignore[attr-defined]
+        self._srv.fault_rng = random.Random(      # type: ignore[attr-defined]
+            faults.seed if faults else 0)
 
     def add_blob(self, path: str, data: bytes) -> None:
         if not path.startswith("/"):
