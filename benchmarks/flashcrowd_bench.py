@@ -1,0 +1,169 @@
+"""Flash-crowd economics: the overload-robust manager vs the plain one.
+
+The robustness layer's overload claim is that admission control (SRPT
+queue + max-active gate), endgame hedging, and replica probation jointly
+cut the TAIL of per-transfer makespans when a storm of arrivals meets a
+fleet whose fastest mirror silently degrades.  This bench measures that
+claim on real loopback sockets, replaying the storm *shape* of
+``repro.core.scenarios.flash_crowd_traces`` at CI scale:
+
+``flashcrowd/burst/{plain,robust}``
+    A flash crowd: N equal transfers arrive within ~0.5 s on a clean
+    three-mirror fleet.  ``plain`` is the PR-6-style manager
+    (``hedge_quantile=0, probation=False``, no admission); ``robust``
+    is the current defaults plus ``max_active_transfers`` and an
+    in-flight byte budget.
+
+``flashcrowd/gray/{plain,robust}``
+    The same storm while the FASTEST mirror silently degrades to 10% of
+    its bandwidth mid-storm (``RangeServer.set_throttle`` — the
+    real-socket mirror of ``ServerSpec.degrade_at``).  The compound
+    case hedging + probation + admission are jointly built for.
+
+``flashcrowd/gray/waste``
+    Hedging's cost on the gray storm: duplicated (losing-copy) bytes as
+    a percentage of delivered bytes.
+
+``us_per_call`` is the p95 per-transfer makespan (arrival → completion)
+in microseconds; ``derived`` is aggregate goodput in MB/s.  Every mirror
+uses deterministic token-bucket pacing, so rows are load-independent
+perf signal: ``benchmarks/run.py --check`` guards them at 3x and
+additionally enforces the flash-crowd win-guard (robust p95 <= plain
+p95 on the gray storm, no p95 regression on the clean burst, hedge
+waste <= 5%; see ``_check_flashcrowd_wins``).  Rows land in
+``BENCH_online.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import hashlib
+import time
+
+import numpy as np
+
+from .common import emit  # noqa: F401  (also wires sys.path to src/)
+
+from repro.core.chunking import ChunkParams
+from repro.transfer import RangeServer, Replica, Throttle, TransferManager
+
+MB = 1024 * 1024
+
+#: mirror rates (MiB/s): one distinctly fast path, two slow — the
+#: paper_baseline shape at loopback-friendly scale.
+RATES = (24, 8, 8)
+#: gray failure: the fast mirror drops to this fraction of its rate —
+#: deep enough that its capacity EWMA sinks below the fleet model's
+#: probation trip ratio against the surviving 8 MiB/s peers.
+DEGRADE_FACTOR = 0.03
+#: seconds after the first arrival before the gray degradation lands —
+#: early enough to catch most of the storm mid-flight.
+DEGRADE_AT = 0.25
+#: the storm: every transfer this many bytes, arrivals 0.05 s apart
+#: (the ``burst`` trace's grid).
+ARRIVAL_STEP = 0.05
+
+
+def _blob(size: int) -> bytes:
+    rng = np.random.default_rng(29)
+    return rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+
+
+def _fleet(blob):
+    servers = []
+    for rate in RATES:
+        s = RangeServer(throttle=Throttle(bytes_per_s=rate * MB,
+                                          deterministic=True)).start()
+        s.add_blob("/data", blob)
+        servers.append(s)
+    return servers
+
+
+def _params() -> ChunkParams:
+    return ChunkParams(initial_chunk=256 * 1024, large_chunk=MB)
+
+
+def _manager(replicas, *, robust: bool) -> TransferManager:
+    if robust:
+        # current defaults (hedging on, probation on) + admission knobs
+        return TransferManager(replicas, params=_params(),
+                               max_active_transfers=3,
+                               max_inflight_bytes=16 * MB)
+    # the PR-6-style manager: no hedging, no probation, no admission
+    return TransferManager(replicas, params=_params(),
+                           hedge_quantile=0.0, probation=False)
+
+
+def _storm(blob, n: int, *, robust: bool, gray: bool):
+    """Run one storm; returns (makespans_s, wall_s, manager)."""
+    servers = _fleet(blob)
+    want = hashlib.sha256(blob).hexdigest()
+    try:
+        replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
+        mgr = _manager(replicas, robust=robust)
+        fast = servers[int(np.argmax(RATES))]
+
+        async def one(arrival: float) -> float:
+            t0 = time.perf_counter()
+            data, _ = await mgr.fetch(len(blob), start_delay=arrival)
+            assert hashlib.sha256(bytes(data)).hexdigest() == want, \
+                "integrity"
+            # makespan = arrival -> completion, excluding the staged delay
+            return time.perf_counter() - t0 - arrival
+
+        async def degrade() -> None:
+            await asyncio.sleep(DEGRADE_AT)
+            fast.set_throttle(Throttle(
+                bytes_per_s=max(RATES) * MB * DEGRADE_FACTOR,
+                deterministic=True))
+
+        async def go():
+            jobs = [one(ARRIVAL_STEP * j) for j in range(n)]
+            if gray:
+                jobs.append(degrade())
+            t0 = time.perf_counter()
+            results = await asyncio.gather(*jobs)
+            return ([m for m in results if m is not None],
+                    time.perf_counter() - t0)
+
+        makespans, wall = asyncio.run(go())
+        return makespans, wall, mgr
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke sizes/reps (CI check mode)")
+    args = ap.parse_args(argv)
+
+    size = 3 * MB if args.quick else 6 * MB
+    n = 6 if args.quick else 12
+    blob = _blob(size)
+
+    for trace, gray in (("burst", False), ("gray", True)):
+        waste_row = None
+        for label, robust in (("plain", False), ("robust", True)):
+            makespans, wall, mgr = _storm(blob, n, robust=robust, gray=gray)
+            p95 = float(np.percentile(makespans, 95))
+            goodput = n * size / wall / MB
+            emit(f"flashcrowd/{trace}/{label}", p95 * 1e6,
+                 f"{goodput:.1f}",
+                 f"admitted={mgr.admission['admitted']}",
+                 f"queued={mgr.admission['queued']}",
+                 f"probations={mgr.fleet.probations}")
+            if robust and gray:
+                wasted = sum(r.hedge_wasted_bytes for r in mgr.reports)
+                issued = sum(r.hedges_issued for r in mgr.reports)
+                waste_row = (wasted, 100.0 * wasted / (n * size), issued)
+        if waste_row is not None:
+            wasted, pct, issued = waste_row
+            emit("flashcrowd/gray/waste", float(wasted), f"{pct:.2f}",
+                 f"hedges_issued={issued}")
+
+
+if __name__ == "__main__":
+    main()

@@ -61,11 +61,18 @@ CHECK_ROW_PREFIXES = (
 #: too; the suite ALSO enforces the corruption win-guard: managed
 #: per-chunk re-fetch must beat restart-from-zero on goodput (see
 #: ``_check_fault_wins``).
+#: ``flashcrowd/*`` p95-makespan rows are pacing-dominated storm replays;
+#: the waste row (``flashcrowd/gray/waste``, an absolute byte count) is
+#: deliberately NOT in the 3x comparison — the win-guard bounds it as a
+#: percentage instead (see ``_check_flashcrowd_wins``).
 CHECK_SUITES = (
     ("BENCH_autotune.json", "autotune", CHECK_ROW_PREFIXES),
     ("BENCH_online.json", "contention", ("contention/",)),
     ("BENCH_dataplane.json", "dataplane", ("dataplane/highrtt/",)),
     ("BENCH_online.json", "faults", ("faults/",)),
+    ("BENCH_online.json", "flashcrowd",
+     ("flashcrowd/burst/", "flashcrowd/gray/plain",
+      "flashcrowd/gray/robust")),
 )
 
 
@@ -116,6 +123,66 @@ def _check_fault_wins(rows) -> int:
     return 0
 
 
+def _check_flashcrowd_wins(rows) -> int:
+    """The flash-crowd win-guard, on the freshly-run storm replays:
+
+    - GRAY storm: the robust manager's p95 makespan (us_per_call) must
+      not exceed the plain manager's — hedging + probation + admission
+      exist precisely to cut this tail, and a regression here means one
+      of the three quietly stopped working.
+    - CLEAN burst: robust p95 may not exceed 1.25x plain — the
+      robustness machinery must be near-free when nothing is wrong
+      (a tie is expected; a blowup means hedges or probation are firing
+      on a healthy fleet).
+    - Hedge waste on the gray storm (derived column of the waste row,
+      a percentage) must stay <= 5% of the delivered bytes.
+    """
+    by_name = {r["name"]: r for r in rows
+               if r["name"].startswith("flashcrowd/")}
+
+    def p95(name: str) -> float:
+        row = by_name.get(name)
+        return float(row["us_per_call"]) if row else 0.0
+
+    gray_plain = p95("flashcrowd/gray/plain")
+    gray_robust = p95("flashcrowd/gray/robust")
+    burst_plain = p95("flashcrowd/burst/plain")
+    burst_robust = p95("flashcrowd/burst/robust")
+    waste_row = by_name.get("flashcrowd/gray/waste")
+    if 0.0 in (gray_plain, gray_robust, burst_plain, burst_robust) \
+            or waste_row is None:
+        print("# check: flash-crowd win-guard rows missing",
+              file=sys.stderr)
+        return 1
+    rc = 0
+    verdict = "ok" if gray_robust <= gray_plain else "REGRESSION"
+    print(f"# check flash-crowd gray win-guard: robust p95 "
+          f"{gray_robust / 1e6:.2f}s vs plain {gray_plain / 1e6:.2f}s "
+          f"{verdict}", flush=True)
+    if gray_robust > gray_plain:
+        print("# check FAILED: robust p95 makespan exceeded plain on the "
+              "gray storm", file=sys.stderr)
+        rc = 1
+    burst_bar = 1.25 * burst_plain
+    verdict = "ok" if burst_robust <= burst_bar else "REGRESSION"
+    print(f"# check flash-crowd burst overhead-guard: robust p95 "
+          f"{burst_robust / 1e6:.2f}s vs plain {burst_plain / 1e6:.2f}s "
+          f"(bar 1.25x) {verdict}", flush=True)
+    if burst_robust > burst_bar:
+        print("# check FAILED: robustness overhead exceeded 1.25x plain "
+              "p95 on the clean burst", file=sys.stderr)
+        rc = 1
+    waste_pct = float(waste_row["derived"])
+    verdict = "ok" if waste_pct <= 5.0 else "REGRESSION"
+    print(f"# check flash-crowd waste-guard: hedge waste {waste_pct:.2f}% "
+          f"of delivered bytes (bar 5%) {verdict}", flush=True)
+    if waste_pct > 5.0:
+        print("# check FAILED: hedge waste exceeded 5% of delivered bytes "
+              "on the gray storm", file=sys.stderr)
+        rc = 1
+    return rc
+
+
 def _section(title: str) -> None:
     print(f"# === {title} ===", flush=True)
 
@@ -161,6 +228,9 @@ def _run_check_suite(path: str, section: str, prefixes) -> int:
     elif section == "faults":
         from . import faults_bench
         faults_bench.main(["--quick"])
+    elif section == "flashcrowd":
+        from . import flashcrowd_bench
+        flashcrowd_bench.main(["--quick"])
     else:
         raise ValueError(f"unknown check section: {section!r}")
 
@@ -169,6 +239,18 @@ def _run_check_suite(path: str, section: str, prefixes) -> int:
         rc_extra = _check_dataplane_wins(emitted_rows())
     elif section == "faults":
         rc_extra = _check_fault_wins(emitted_rows())
+    elif section == "flashcrowd":
+        rc_extra = _check_flashcrowd_wins(emitted_rows())
+        if rc_extra:
+            # The storm replay races real wall clocks; a host-load spike
+            # during the run can push the p95s or the hedge-waste pct
+            # over their bars without any code regression.  One full
+            # replay decides: a genuine regression fails both runs.
+            print("# check flash-crowd: guard failed, replaying the "
+                  "storm once to rule out host load", flush=True)
+            reset_rows()
+            flashcrowd_bench.main(["--quick"])
+            rc_extra = _check_flashcrowd_wins(emitted_rows())
 
     compared, failures = 0, []
     for row in emitted_rows():
@@ -220,7 +302,7 @@ def main(argv=None) -> None:
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (fig2 fig3 fig4 fig5 table2 "
                          "autotune online contention dataplane faults "
-                         "restore roofline)")
+                         "flashcrowd restore roofline)")
     ap.add_argument("--json", nargs="?", const="BENCH_autotune.json",
                     default=None, metavar="PATH",
                     help="also dump every emitted row as machine-readable "
@@ -288,6 +370,10 @@ def main(argv=None) -> None:
 
     from . import faults_bench
     run("faults", lambda: faults_bench.main(
+        [] if args.full else ["--quick"]))
+
+    from . import flashcrowd_bench
+    run("flashcrowd", lambda: flashcrowd_bench.main(
         [] if args.full else ["--quick"]))
 
     # Framework-layer benches (present once the substrates land).

@@ -174,6 +174,7 @@ def autotune_chunk_params(
     pipeline_depth: int = 1,
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
+    hedge_quantile: float = 0.0,
 ) -> AutotuneResult:
     """Pick (C, L) minimizing simulated transfer time.
 
@@ -210,7 +211,8 @@ def autotune_chunk_params(
         bandwidth, rtt, None, None)
     cfg = _sized_config(
         SimConfig(jitter=jitter, pipeline_depth=pipeline_depth,
-                  loss_rate=loss_rate, corruption_rate=corruption_rate),
+                  loss_rate=loss_rate, corruption_rate=corruption_rate,
+                  hedge_quantile=hedge_quantile),
         engine, grid, file_size)
     grid_c, grid_l, grid_min = _grid_arrays(grid)
     seeds = jnp.arange(max(n_seeds, 1))
@@ -246,6 +248,7 @@ def sweep_scenarios(
     pipeline_depth: int = 1,
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
+    hedge_quantile: float = 0.0,
 ) -> jax.Array:
     """Seed-averaged predicted times for a batch of scenarios.
 
@@ -277,7 +280,8 @@ def sweep_scenarios(
         jnp.asarray(file_size, jnp.float32), (s,))
     cfg = _sized_config(
         SimConfig(jitter=jitter, pipeline_depth=pipeline_depth,
-                  loss_rate=loss_rate, corruption_rate=corruption_rate),
+                  loss_rate=loss_rate, corruption_rate=corruption_rate,
+                  hedge_quantile=hedge_quantile),
         engine, grid, np.asarray(file_size))
     grid_c, grid_l, grid_min = _grid_arrays(grid)
     seeds = jnp.arange(max(n_seeds, 1))
@@ -304,6 +308,7 @@ def autotune_batch(
     pipeline_depth: int = 1,
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
+    hedge_quantile: float = 0.0,
 ) -> list[AutotuneResult]:
     """Per-scenario chunk-size selection over an ``[S, N]`` scenario batch.
 
@@ -319,6 +324,7 @@ def autotune_batch(
         jitter=jitter, n_seeds=n_seeds, mode=mode, engine=engine,
         pipeline_depth=pipeline_depth,
         loss_rate=loss_rate, corruption_rate=corruption_rate,
+        hedge_quantile=hedge_quantile,
     ), np.float64)
 
     results = []
@@ -348,6 +354,7 @@ def contention_sweep(
     pipeline_depth: int = 1,
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
+    hedge_quantile: float = 0.0,
 ) -> dict[int, AutotuneResult]:
     """Per-contention-level chunk tuning: the (C, L) ladder a fleet
     scheduler adopts as concurrent transfers arrive and drain.
@@ -376,7 +383,8 @@ def contention_sweep(
     results = autotune_batch(
         mat, rtt, file_size, grid=grid, jitter=jitter, n_seeds=n_seeds,
         mode=mode, engine=engine, pipeline_depth=pipeline_depth,
-        loss_rate=loss_rate, corruption_rate=corruption_rate)
+        loss_rate=loss_rate, corruption_rate=corruption_rate,
+        hedge_quantile=hedge_quantile)
     return dict(zip(ks, results))
 
 
@@ -466,7 +474,8 @@ def _adam_descend(vg, z: jax.Array, steps: int, lr: float, args=()):
 def _exact_time(params: ChunkParams, bw, rtt_a, throttle_t, throttle_bw,
                 file_f, mode: str, pipeline_depth: int = 1,
                 loss_rate: float = 0.0,
-                corruption_rate: float = 0.0) -> float:
+                corruption_rate: float = 0.0,
+                hedge_quantile: float = 0.0) -> float:
     """Honest number for integer params: exact sizes, round core, no
     jitter — the metric both gradient tuners report and compare on (under
     faults, at the fixed seed 0 so init/final compare on the same draws).
@@ -477,7 +486,8 @@ def _exact_time(params: ChunkParams, bw, rtt_a, throttle_t, throttle_bw,
         ChunkArrays.from_params(params), file_f,
         mode=mode, config=SimConfig(pipeline_depth=pipeline_depth,
                                     loss_rate=loss_rate,
-                                    corruption_rate=corruption_rate),
+                                    corruption_rate=corruption_rate,
+                                    hedge_quantile=hedge_quantile),
         engine="round",
     ).total_time)
 
@@ -488,7 +498,8 @@ def _finish_grad_tune(vg, vg_args, best_z, history,
                       bw, rtt_a, throttle_t, throttle_bw,
                       file_f, pipeline_depth: int = 1,
                       loss_rate: float = 0.0,
-                      corruption_rate: float = 0.0) -> GradTuneResult:
+                      corruption_rate: float = 0.0,
+                      hedge_quantile: float = 0.0) -> GradTuneResult:
     """Round ``best_z`` to integer ``ChunkParams``, guarantee never-worse
     than ``init`` on the EXACT metric (rounding can cross a round-count
     jump), and report the (dT/dC, dT/dL) chain-rule gradient."""
@@ -500,14 +511,14 @@ def _finish_grad_tune(vg, vg_args, best_z, history,
         min_chunk=min_chunk, mode=mode)
     t_final = _exact_time(params, bw, rtt_a, throttle_t, throttle_bw,
                           file_f, mode, pipeline_depth,
-                          loss_rate, corruption_rate)
+                          loss_rate, corruption_rate, hedge_quantile)
     init_params = ChunkParams(
         initial_chunk=max(int(round(init[0])), min_chunk),
         large_chunk=max(int(round(init[1])), min_chunk),
         min_chunk=min_chunk, mode=mode)
     t_init = _exact_time(init_params, bw, rtt_a, throttle_t, throttle_bw,
                          file_f, mode, pipeline_depth,
-                         loss_rate, corruption_rate)
+                         loss_rate, corruption_rate, hedge_quantile)
     if t_init < t_final:
         params, t_final = init_params, t_init
     # grad w.r.t. (C, L) via the chain rule through the softplus-free
@@ -538,6 +549,7 @@ def tune_chunk_params_grad(
     pipeline_depth: int = 1,
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
+    hedge_quantile: float = 0.0,
 ) -> GradTuneResult:
     """Continuous (C, L) refinement: ``jax.grad`` polish of the grid winner.
 
@@ -575,13 +587,15 @@ def tune_chunk_params_grad(
             bandwidth, rtt, int(file_size), grid=grid, mode=mode,
             pipeline_depth=pipeline_depth,
             loss_rate=loss_rate, corruption_rate=corruption_rate,
+            hedge_quantile=hedge_quantile,
             n_seeds=4 if p_fail > 0.0 else 1)
         init = (float(seed_res.params.initial_chunk),
                 float(seed_res.params.large_chunk))
     l_floor = _l_floor_for(min_chunk, file_size, max_rounds, p_fail)
     cfg = SimConfig(max_rounds=max_rounds, exact_sizes=False,
                     pipeline_depth=pipeline_depth,
-                    loss_rate=loss_rate, corruption_rate=corruption_rate)
+                    loss_rate=loss_rate, corruption_rate=corruption_rate,
+                    hedge_quantile=hedge_quantile)
 
     def total_time(z, bw, rtt_a, throttle_t, throttle_bw):
         c, l = _z_decode(z, min_chunk, l_floor)
@@ -598,4 +612,4 @@ def tune_chunk_params_grad(
     return _finish_grad_tune(
         vg, vg_args, best_z, history, init, min_chunk, l_floor, mode,
         bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth,
-        loss_rate, corruption_rate)
+        loss_rate, corruption_rate, hedge_quantile)

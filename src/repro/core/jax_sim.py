@@ -150,6 +150,17 @@ class SimConfig(NamedTuple):
     #: re-fetch — kept as a separate axis so tuner calls mirror the
     #: client's telemetry split between resets and corrupt ranges.
     corruption_rate: float = 0.0
+    #: endgame hedging quantile of the modeled client
+    #: (``MDTPClient.hedge_quantile``).  In the round/scan engines, once
+    #: the final round is in flight, a chunk whose duration exceeds this
+    #: quantile of the round's durations completes no later than the
+    #: first-finishing server could speculatively re-serve it (winner's
+    #: RTT + body time) — the on-device mirror of the client's hedged
+    #: endgame, so tuned (C, L) sees straggler tails the way the wire
+    #: does.  0 disables hedging; the transform is a pure function of
+    #: already-drawn durations (NO extra PRNG consumption), so
+    #: hedge-free configs replay bit-identical event streams.
+    hedge_quantile: float = 0.0
 
 
 class JaxSimResult(NamedTuple):
@@ -471,6 +482,47 @@ def _make_round_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
         dt = _chunk_duration(granted, now, rtt, bw0 * scale, throttle_t,
                              bw1 * scale, depth=cfg.pipeline_depth,
                              warm=state.reqs > 0)
+        if cfg.hedge_quantile > 0.0:
+            # Hedged endgame (the client's, see transfer.client): a range
+            # on a server whose chunk duration exceeds the fleet's hedge
+            # quantile is speculatively re-served once the transfer
+            # reaches its endgame with the range still outstanding, and
+            # the first completion wins.  Modeled as a completion-time
+            # cap: the straggler's chunk finishes no later than (a) the
+            # rest of the fleet drains the remaining budget — the moment
+            # the endgame frees a fast mirror — plus (b) the winner's
+            # RTT + body time at its then-current rate.  In the final
+            # round the drain term is zero and this is exactly "first
+            # idle server re-serves it"; mid-transfer it prices the
+            # many rounds the fleet still owes, so only chunks that
+            # genuinely outlive the transfer (a grayed mirror's
+            # transition chunk) are trimmed.  Bytes stay credited to the
+            # owner — wire-level win/waste accounting lives on
+            # TransferReport.  Pure transform of already-drawn
+            # durations: NO PRNG is consumed and the gating is static,
+            # so hedge-free configs replay bit-identical streams.
+            t_fin = now + dt
+            w = jnp.argmin(jnp.where(active, t_fin, _INF))
+            t_best = jnp.min(jnp.where(active, t_fin, _INF))
+            q = jnp.nanquantile(jnp.where(active, dt, jnp.nan),
+                                jnp.float32(cfg.hedge_quantile))
+            eff_bw = jnp.where(t_best >= throttle_t, bw1, bw0) * scale
+            fleet_bw = jnp.sum(jnp.where(active, eff_bw, 0.0))
+            others_bw = fleet_bw - eff_bw
+            remaining_after = jnp.maximum(remaining - total, 0.0)
+            t_drain = jnp.where(
+                others_bw > 0.0,
+                t_best + remaining_after / jnp.maximum(others_bw, 1e-9),
+                _INF)
+            hedge_fin = (t_drain + rtt[w]
+                         + granted / jnp.maximum(eff_bw[w], 1e-9))
+            straggler = jnp.logical_and(active, dt > q)
+            straggler = jnp.logical_and(
+                straggler, jnp.arange(dt.shape[0]) != w)
+            dt = jnp.where(straggler,
+                           jnp.minimum(dt, jnp.maximum(hedge_fin - now,
+                                                       1e-9)),
+                           dt)
         t_free = jnp.where(active, now + dt, _INF)
 
         # Fault draws for the whole round at once; extra split only when a

@@ -200,6 +200,7 @@ def tune_chunk_params_mcgrad(
     pipeline_depth: int = 1,
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
+    hedge_quantile: float = 0.0,
 ) -> GradTuneResult:
     """Monte-Carlo (C, L) descent on the scan core: one compile, ``n_seeds``
     pathwise gradients averaged per step.
@@ -229,6 +230,7 @@ def tune_chunk_params_mcgrad(
             bandwidth, rtt, int(file_size), grid=grid, mode=mode,
             pipeline_depth=pipeline_depth,
             loss_rate=loss_rate, corruption_rate=corruption_rate,
+            hedge_quantile=hedge_quantile,
             n_seeds=4 if p_fail > 0.0 else 1)
         init = (float(seed_res.params.initial_chunk),
                 float(seed_res.params.large_chunk))
@@ -236,7 +238,8 @@ def tune_chunk_params_mcgrad(
     cfg = SimConfig(max_rounds=max_rounds, exact_sizes=False,
                     jitter=bw_jitter, rtt_jitter=rtt_jitter,
                     pipeline_depth=pipeline_depth,
-                    loss_rate=loss_rate, corruption_rate=corruption_rate)
+                    loss_rate=loss_rate, corruption_rate=corruption_rate,
+                    hedge_quantile=hedge_quantile)
     vg = _mc_value_and_grad(mode, cfg, max(n_seeds, 1))
     vg_args = (bw, rtt_a, throttle_t, throttle_bw, file_f,
                jnp.float32(min_chunk), jnp.float32(l_floor))
@@ -245,7 +248,7 @@ def tune_chunk_params_mcgrad(
     return _finish_grad_tune(
         vg, vg_args, best_z, history, init, min_chunk, l_floor, mode,
         bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth,
-        loss_rate, corruption_rate)
+        loss_rate, corruption_rate, hedge_quantile)
 
 
 # --------------------------------------------------------------------------
@@ -271,6 +274,10 @@ class GridTuner:
     #: (``SimConfig.loss_rate`` / ``corruption_rate``) — re-fetch tax.
     loss_rate: float = 0.0
     corruption_rate: float = 0.0
+    #: endgame hedging quantile of the client being tuned
+    #: (``SimConfig.hedge_quantile``) — hedging trims the straggler tail
+    #: the simulator would otherwise charge to large L.
+    hedge_quantile: float = 0.0
     params: Optional[ChunkParams] = None
     updates: int = 0
 
@@ -287,6 +294,7 @@ class GridTuner:
             bw, rtts, int(t.remaining_bytes), grid=self.grid, mode=self.mode,
             pipeline_depth=self.pipeline_depth,
             loss_rate=self.loss_rate, corruption_rate=self.corruption_rate,
+            hedge_quantile=self.hedge_quantile,
             n_seeds=4 if p_fail > 0.0 else 1)
         self.params = res.params
         return res.params
@@ -316,6 +324,8 @@ class MCGradTuner:
     #: observed per-chunk fault probabilities (see GridTuner).
     loss_rate: float = 0.0
     corruption_rate: float = 0.0
+    #: endgame hedging quantile of the client being tuned (see GridTuner).
+    hedge_quantile: float = 0.0
     params: Optional[ChunkParams] = None
     updates: int = 0
     last_result: Optional[GradTuneResult] = None
@@ -339,7 +349,8 @@ class MCGradTuner:
             mode=self.mode, min_chunk=self.min_chunk,
             max_rounds=self.max_rounds, grid=self.grid,
             pipeline_depth=self.pipeline_depth,
-            loss_rate=self.loss_rate, corruption_rate=self.corruption_rate)
+            loss_rate=self.loss_rate, corruption_rate=self.corruption_rate,
+            hedge_quantile=self.hedge_quantile)
         self.params, self.last_result = res.params, res
         return res.params
 
@@ -393,6 +404,9 @@ class BanditTuner:
     #: real re-fetch waste without them, so they only affect proposals.
     loss_rate: float = 0.0
     corruption_rate: float = 0.0
+    #: endgame hedging quantile of the client being tuned (see GridTuner)
+    #: — shapes the seeding sweep's straggler-tail model.
+    hedge_quantile: float = 0.0
     arms: list[_Arm] = field(default_factory=list)
     params: Optional[ChunkParams] = None
     updates: int = 0
@@ -415,6 +429,7 @@ class BanditTuner:
             bw, rtts, int(t.remaining_bytes), grid=self.grid, mode=self.mode,
             pipeline_depth=self.pipeline_depth,
             loss_rate=self.loss_rate, corruption_rate=self.corruption_rate,
+            hedge_quantile=self.hedge_quantile,
             n_seeds=4 if p_fail > 0.0 else 1)
         order = np.argsort(res.predicted_times)
         self.arms = []

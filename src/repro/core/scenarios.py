@@ -43,6 +43,9 @@ __all__ = [
     "with_faults",
     "FaultTrace",
     "fault_traces",
+    "with_gray_degradation",
+    "FlashCrowdTrace",
+    "flash_crowd_traces",
 ]
 
 MBPS = 1024 * 1024  # we quote server rates in MiB/s
@@ -203,6 +206,82 @@ def contention_traces() -> list[ContentionTrace]:
             "bottleneck", bottleneck,
             sizes=(GB, GB, GB),
             arrivals=(0.0, 0.0, 0.0)),
+    ]
+
+
+def with_gray_degradation(
+    servers: list[ServerSpec],
+    degrade_at: float,
+    degrade_factor: float = 0.1,
+    only: int | None = None,
+) -> list[ServerSpec]:
+    """Inject silent mid-transfer degradation (``ServerSpec.degrade_at``/
+    ``degrade_factor``) — the paper's "bandwidth decrease to the fastest
+    server" case.  ``only=None`` grays the whole fleet; ``only=i`` grays
+    just replica ``i`` (one slow mirror, the hedging/probation regime)."""
+    return [
+        replace(s, degrade_at=degrade_at, degrade_factor=degrade_factor)
+        if only is None or i == only else s
+        for i, s in enumerate(servers)
+    ]
+
+
+@dataclass(frozen=True)
+class FlashCrowdTrace:
+    """One named overload regime: a fleet plus an arrival process.
+
+    ``sizes[j]`` bytes arrive at ``arrivals[j]`` seconds — the workload
+    the manager's admission gate, SRPT queue, and shed mode absorb.
+    Deterministic arrival times (no RNG) so benchmark replays and the
+    simulator agree on the exact storm shape.
+    """
+
+    name: str
+    servers: tuple[ServerSpec, ...]
+    sizes: tuple[int, ...]
+    arrivals: tuple[float, ...]
+
+
+def flash_crowd_traces(rtt: float = _DEFAULT_RTT) -> list[FlashCrowdTrace]:
+    """The three overload regimes of the ROADMAP's flash-crowd item:
+
+    * ``burst`` — a flash crowd: 12 same-sized transfers land within
+      ~0.6 s of each other on the calibrated baseline fleet.  Without
+      admission control everyone splits every mirror 12 ways and every
+      transfer finishes late together; with SRPT + a max-active gate the
+      short head of the queue drains fast.
+    * ``diurnal`` — two arrival waves (morning/evening) of 6 transfers
+      each with mixed sizes; exercises queue drain + re-expansion.
+    * ``gray-burst`` — the ``burst`` storm while the FASTEST mirror
+      silently degrades to 10% of its bandwidth mid-storm
+      (``ServerSpec.degrade_at``): the compound case hedged endgame +
+      probation + admission are jointly built for.
+
+    Deterministic fleets (``jitter=0``) and arrival grids, so real-socket
+    replays (``benchmarks/flashcrowd_bench.py``) and simulator runs see
+    the identical storm.
+    """
+    base = tuple(paper_baseline(rtt=rtt, jitter=0.0))
+    fastest = max(range(len(base)), key=lambda i: base[i].bandwidth)
+    burst_arrivals = tuple(0.05 * j for j in range(12))
+    wave = tuple(0.2 * j for j in range(6))
+    diurnal_arrivals = wave + tuple(30.0 + t for t in wave)
+    return [
+        FlashCrowdTrace(
+            "burst", base,
+            sizes=(GB // 4,) * 12,
+            arrivals=burst_arrivals),
+        FlashCrowdTrace(
+            "diurnal", base,
+            sizes=(GB // 4, GB // 2, GB // 8, GB // 4, GB // 2, GB // 8) * 2,
+            arrivals=diurnal_arrivals),
+        FlashCrowdTrace(
+            "gray-burst",
+            tuple(with_gray_degradation(
+                list(base), degrade_at=2.0, degrade_factor=0.1,
+                only=fastest)),
+            sizes=(GB // 4,) * 12,
+            arrivals=burst_arrivals),
     ]
 
 

@@ -81,6 +81,12 @@ class ServerSpec:
         real client's CRC verify-and-re-pool path.  Both fault draws
         consume RNG only when their rate is nonzero, so fault-free
         scenarios replay the exact seeded event streams of earlier builds.
+      degrade_at / degrade_factor: gray failure — at ``degrade_at`` the
+        server silently degrades to ``degrade_factor`` of its (possibly
+        profiled) bandwidth and stays there.  Unlike ``fail_at`` the
+        connection never breaks: the client sees a healthy but slow
+        mirror, the case hedged endgame + probation exist for (the
+        paper's "bandwidth decrease to the fastest server" experiment).
     """
 
     name: str
@@ -94,6 +100,8 @@ class ServerSpec:
     avail_down: float = 0.0
     loss_rate: float = 0.0
     corruption_rate: float = 0.0
+    degrade_at: float = _INF
+    degrade_factor: float = 1.0
 
     def bandwidth_at(self, t: float) -> float:
         bw = self.bandwidth
@@ -102,10 +110,15 @@ class ServerSpec:
                 bw = new_bw
             else:
                 break
+        if t >= self.degrade_at:
+            bw *= self.degrade_factor
         return bw
 
     def rate_boundaries(self) -> list[float]:
-        return [start for start, _ in self.profile]
+        bounds = [start for start, _ in self.profile]
+        if self.degrade_at < _INF and self.degrade_factor != 1.0:
+            bisect.insort(bounds, self.degrade_at)
+        return bounds
 
 
 @dataclass(frozen=True)
@@ -333,8 +346,17 @@ class _ServerRuntime:
         self._down_starts = [s for s, _ in merged]
         self._down_ends = [e for _, e in merged]
         #: rate at t = _rates[bisect_right(_rate_times, t)]
-        self._rate_times = [start for start, _ in spec.profile]
-        self._rates = [spec.bandwidth] + [bw for _, bw in spec.profile]
+        times = [start for start, _ in spec.profile]
+        rates = [spec.bandwidth] + [bw for _, bw in spec.profile]
+        if spec.degrade_at < _INF and spec.degrade_factor != 1.0:
+            # fold gray degradation into the flattened rate function:
+            # every segment at or after degrade_at is scaled down
+            i = bisect.bisect_right(times, spec.degrade_at)
+            times = times[:i] + [spec.degrade_at] + times[i:]
+            rates = (rates[:i + 1]
+                     + [r * spec.degrade_factor for r in rates[i:]])
+        self._rate_times = times
+        self._rates = rates
 
     def is_up(self, t: float) -> bool:
         return self.next_downtime_covering(t) is None

@@ -24,6 +24,7 @@ import asyncio
 import json
 import queue
 import threading
+import time
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -207,9 +208,14 @@ class _VirtualRangeClient(MDTPClient):
         outer = self
 
         class _VConn(_Conn):
-            async def fetch_range(conn_self, start, end, into=None):
+            async def fetch_range(conn_self, start, end, into=None,
+                                  progress=None):
                 parts = []
                 nbytes, elapsed, rtt_inc = 0, 0.0, False
+                if progress is not None and len(progress) > 1:
+                    # wire-send stamp (see _Conn.fetch_range): the first
+                    # piece's request goes out immediately below
+                    progress[1] = time.monotonic()
                 pos = start
                 while pos <= end:
                     row = int(np.searchsorted(outer._starts, pos, "right") - 1)
@@ -225,6 +231,10 @@ class _VirtualRangeClient(MDTPClient):
                     if into is None:
                         parts.append(reply.data)
                     nbytes += reply.nbytes
+                    if progress is not None:
+                        # piece-grained: good enough for the hedging
+                        # layer's landed-fraction check
+                        progress[0] = nbytes
                     elapsed += reply.elapsed
                     rtt_inc = rtt_inc or reply.rtt_included
                     if reply.nbytes < take:

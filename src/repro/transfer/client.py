@@ -85,6 +85,13 @@ DEFAULT_PIPELINE_DEPTH = 2
 #: next body's socket reads instead of stalling them.
 _CRC_INLINE_MAX = 128 * 1024
 
+#: endgame re-poll cadence (s) for lanes parked with hedging enabled: a
+#: grayed-out mirror produces NO events to wake a parked lane (that is
+#: the failure mode hedging exists for), so idle endgame lanes re-check
+#: for straggling in-flight ranges on this period instead of waiting on
+#: a notification that will never come.
+_HEDGE_POLL_S = 0.05
+
 
 class NoTelemetryError(RuntimeError):
     """``retune()`` had no usable observations to re-plan from (no
@@ -158,6 +165,19 @@ class TransferReport:
     #: bytes satisfied from the resume journal instead of the wire
     #: (``fetch(resume=...)``); 0 for fresh transfers.
     resumed_bytes: int = 0
+    #: seconds spent re-verifying journaled range checksums during resume
+    #: replay (large records hash in the executor); 0.0 for fresh fetches.
+    resume_verify_seconds: float = 0.0
+    #: endgame hedges (``hedge_quantile`` > 0): speculative duplicate
+    #: fetches issued for straggling in-flight ranges, and how many beat
+    #: their original copy to completion.
+    hedges_issued: int = 0
+    hedges_won: int = 0
+    #: duplicated bytes the losing copies cost.  Cancellation is
+    #: symmetric — whichever side lands first breaks the other's
+    #: connection — so each losing copy is charged the bytes it actually
+    #: received before the race resolved, not its whole range.
+    hedge_wasted_bytes: int = 0
 
     @property
     def throughput(self) -> float:
@@ -296,6 +316,19 @@ class _Conn:
                 self._sock.close()
             self._sock = None
 
+    def abort(self) -> None:
+        """Break the connection under a CONCURRENT reader (hedge-win
+        cancellation).  ``close()`` would free the fd while a
+        ``sock_recv`` future is still registered on it — the selector
+        never fires for a closed fd and the loser's read would only die
+        at the inactivity timeout.  ``shutdown()`` keeps the fd alive
+        and wakes the pending read with EOF immediately; the owning
+        worker then closes the socket on its normal unwind path."""
+        self.broken = True
+        if self._sock is not None:
+            with contextlib.suppress(OSError):
+                self._sock.shutdown(socket.SHUT_RDWR)
+
     # -- buffered header reads / zero-copy body reads ----------------------
 
     async def _timed(self, aw):
@@ -309,9 +342,20 @@ class _Conn:
                 f"read stalled > {self.read_timeout:g}s "
                 f"(inactivity timeout)") from None
 
+    def _live_sock(self) -> socket.socket:
+        """Snapshot the socket for one read.  A concurrent ``close()``
+        (a hedge winner severing the losing lane) nulls ``_sock`` between
+        awaits; reading through the snapshot turns that race into the
+        ConnectionError every caller already handles instead of an
+        AttributeError on ``None``."""
+        sock = self._sock
+        if sock is None:
+            raise ConnectionError("connection closed")
+        return sock
+
     async def _fill(self, hint: int) -> None:
         data = await self._timed(
-            asyncio.get_running_loop().sock_recv(self._sock, hint))
+            asyncio.get_running_loop().sock_recv(self._live_sock(), hint))
         if not data:
             raise ConnectionError("connection closed")
         self._rbuf += data
@@ -342,9 +386,13 @@ class _Conn:
             headers[k.strip().lower()] = v.strip()
         return code, headers
 
-    async def _read_body(self, n: int, into: Optional[memoryview]):
+    async def _read_body(self, n: int, into: Optional[memoryview],
+                         progress: Optional[list] = None):
         """Read exactly ``n`` body bytes — into the caller's view when
-        given (zero-copy), into fresh ``bytes`` otherwise."""
+        given (zero-copy), into fresh ``bytes`` otherwise.  Slot 0 of
+        ``progress`` (a list) is kept updated with the byte count landed
+        so far — the hedging layer reads it to avoid duplicating ranges
+        whose owner has already received most of the body."""
         if into is None:
             scratch = bytearray(n)
             view = memoryview(scratch)
@@ -359,14 +407,25 @@ class _Conn:
         if got:
             view[:got] = self._rbuf[:got]
             del self._rbuf[:got]
+        if progress is not None:
+            progress[0] = got
         loop = asyncio.get_running_loop()
-        while got < n:
-            r = await self._timed(
-                loop.sock_recv_into(self._sock, view[got:n]))
-            if r <= 0:
-                raise ConnectionError(
-                    f"connection closed mid-body ({got}/{n} B)")
-            got += r
+        try:
+            while got < n:
+                r = await self._timed(
+                    loop.sock_recv_into(self._live_sock(), view[got:n]))
+                if r <= 0:
+                    raise ConnectionError(
+                        f"connection closed mid-body ({got}/{n} B)")
+                got += r
+                if progress is not None:
+                    progress[0] = got
+        except ConnectionError as e:
+            # how much of the body actually landed before the break —
+            # the waste accounting for a hedge-cancelled read charges
+            # the bytes genuinely spent, not the whole range
+            e.partial_bytes = got
+            raise
         return bytes(scratch) if scratch is not None else view[:n]
 
     # -- requests ----------------------------------------------------------
@@ -389,7 +448,8 @@ class _Conn:
         return None
 
     async def fetch_range(self, start: int, end: int,
-                          into: Optional[memoryview] = None) -> _RangeReply:
+                          into: Optional[memoryview] = None,
+                          progress: Optional[list] = None) -> _RangeReply:
         """GET bytes [start, end] inclusive over the persistent session.
 
         May be called concurrently: the request goes on the wire
@@ -419,6 +479,10 @@ class _Conn:
             self._tail = my_done
             pipelined = prior is not None and not prior.is_set()
             t_send = time.monotonic()
+            if progress is not None and len(progress) > 1:
+                # wire-send stamp for the hedging layer: a range starts
+                # aging only once its request is actually on the wire
+                progress[1] = t_send
             try:
                 await asyncio.get_running_loop().sock_sendall(
                     self._sock, self._request_bytes("GET", start, end))
@@ -442,7 +506,7 @@ class _Conn:
                 n = int(headers["content-length"])
             except (KeyError, ValueError):
                 raise ConnectionError("missing/invalid Content-Length")
-            body = await self._read_body(n, into)
+            body = await self._read_body(n, into, progress)
             t_end = time.monotonic()
             return _RangeReply(
                 data=body, nbytes=n,
@@ -483,6 +547,9 @@ class MDTPClient:
         verify_integrity: bool = True,
         read_timeout: float = 30.0,
         retry_backoff_cap: float = 5.0,
+        hedge_quantile: float = 0.0,
+        hedge_waste_frac: float = 0.05,
+        rng: Optional[random.Random] = None,
     ):
         self.replicas = list(replicas)
         self._params_arg = params
@@ -515,6 +582,30 @@ class MDTPClient:
         #: backoff: attempt k waits ``min(retry_after * 2**(k-1), cap)``
         #: scaled by ±50% jitter so reconnect storms decorrelate.
         self.retry_backoff_cap = retry_backoff_cap
+        #: endgame hedging (0 disables): once the residual drops below
+        #: ~2 allocator rounds, an idle lane speculatively duplicates an
+        #: in-flight range whose owner's per-byte latency EWMA sits at or
+        #: above this fleet quantile (or whose range has aged well past
+        #: the owner's own expected service time — the grayed-out-mirror
+        #: case, where the EWMA goes stale).  First completion wins; the
+        #: loser is cancelled/discarded with byte accounting on the
+        #: report (``hedges_issued`` / ``hedges_won`` /
+        #: ``hedge_wasted_bytes``).  Applies only when assembling
+        #: in-memory (``sink=None``): hedge bodies land in private
+        #: scratch, never the destination, so a losing or corrupt copy
+        #: cannot touch committed bytes.
+        self.hedge_quantile = float(hedge_quantile)
+        #: hard cap on hedge waste as a fraction of the transfer size: a
+        #: hedge is only issued while committed waste plus every
+        #: in-flight hedge's reserved length stays under this budget —
+        #: each race can waste at most its own range, whichever side
+        #: loses, so ``hedge_wasted_bytes <= hedge_waste_frac * size``
+        #: holds by construction.
+        self.hedge_waste_frac = float(hedge_waste_frac)
+        #: randomness source for reconnect-backoff jitter — pass a seeded
+        #: ``random.Random`` to make chaos-test retry timing fully
+        #: reproducible; defaults to the module-global generator.
+        self._rng = rng if rng is not None else random
         #: report of the most recent ``fetch`` (None before the first one).
         self.last_report: Optional[TransferReport] = None
 
@@ -614,6 +705,13 @@ class MDTPClient:
         this to feed per-replica corruption counters into the
         ``FleetModel`` so chronically corrupt replicas are deprioritized
         fleet-wide, not just within this transfer."""
+
+    def _on_retry(self, name: str) -> None:
+        """Connection-retry hook: called once per reconnect-with-backoff
+        attempt (a break, stall, or reset that the worker survives).  The
+        fleet manager overrides this to feed retry counts into the
+        ``FleetModel``'s probation thresholds — a replica that keeps
+        costing reconnects goes on probation fleet-wide."""
 
     async def fetch(self, size: int, sink=None, *, offset: int = 0,
                     tuner=None, tune_interval_bytes: Optional[int] = None,
@@ -717,6 +815,7 @@ class MDTPClient:
         cond = asyncio.Condition(lock)
         done_bytes = 0
         resumed_bytes = 0
+        resume_verify = 0.0
 
         if journal is not None:
             # Replay: every journaled record inside this window whose
@@ -733,14 +832,16 @@ class MDTPClient:
                 return None
 
             verified: list[tuple[int, int]] = []
+            t_verify = time.monotonic()
             for s_abs, nb, rcrc in journal.records():
                 if s_abs < offset or s_abs + nb > offset + size:
                     continue
                 v = _view_of(s_abs, nb)
                 if v is not None and rcrc is not None \
-                        and zlib.crc32(v) != rcrc:
+                        and await _crc32_async(v) != rcrc:
                     continue
                 verified.append((s_abs - offset, nb))
+            resume_verify = time.monotonic() - t_verify
             covered = merge_intervals(verified)
             for s_, n_ in uncovered_intervals(covered, size):
                 heapq.heappush(pool, (s_, n_, frozenset()))
@@ -818,23 +919,249 @@ class MDTPClient:
         # range (see ``cond`` above).
         inflight = 0
 
+        # -- endgame hedging state (``hedge_quantile`` > 0) ----------------
+        # scratch-buffer hedges need a readable destination to commit to,
+        # so hedging is in-memory-assembly only (see __init__ docstring)
+        hedge_q = self.hedge_quantile if sink is None else 0.0
+        #: per-replica EWMA of per-byte receive latency (s/B) — the
+        #: straggler signal the hedge quantile cuts across.
+        lat_ewma = [0.0] * n
+        #: per-replica monotonic time of the last COMPLETED range — the
+        #: wedge signal: a gray mirror stops finishing anything, while an
+        #: honestly-congested one keeps completing sibling ranges.
+        last_done = [0.0] * n
+        #: scheduler-stall clock.  A heartbeat task sleeps
+        #: ``_HEDGE_POLL_S`` at a time; waking far later means the whole
+        #: process was starved (CPU contention, GC pause) — every
+        #: in-flight range aged without its owner getting any airtime,
+        #: and firing on that age would hedge perfectly healthy owners
+        #: at a full range's waste each.  ``stall_s[0]`` accumulates the
+        #: stolen time; the trigger subtracts the portion accrued over
+        #: each range's own lifetime, so a loaded host DELAYS hedges
+        #: instead of misfiring them.  ``last_done_stall`` pairs a
+        #: snapshot with each ``last_done`` stamp for the wedge window.
+        stall_s = [0.0]
+        last_done_stall = [0.0] * n
+        #: start -> (length, owner, ban, progress, stall_at) for every
+        #: range on the wire; maintained only while hedging is enabled.
+        #: ``progress`` is ``[bytes_landed, wire_send_time]``: the
+        #: owner's body read keeps slot 0 updated, and the connection
+        #: stamps slot 1 the moment the request is actually SENT — the
+        #: hedge trigger ages ranges from that stamp, because time spent
+        #: queued on a slot semaphore or byte budget says nothing about
+        #: the owner's health.  ``stall_at`` snapshots ``stall_s`` at
+        #: issue time.
+        outstanding: dict = {}
+        #: start -> (length, hedger, conn) for every hedge in flight;
+        #: the lengths are RESERVED against the waste budget (a hedge
+        #: can waste at most its own range, whichever side loses the
+        #: race), and the connection is what an owner that lands first
+        #: breaks to cancel the losing copy promptly.
+        hedged: dict = {}
+        settled: set = set()         # starts a winning hedge completed
+        #: winner bytes kept until the losing copy resolves, so a loser
+        #: body that zero-copy-landed over them can be healed back.
+        settled_data: dict = {}
+        #: owner indices whose connection was broken ON PURPOSE to cancel
+        #: a lost race — the worker reconnects without charging its
+        #: failure budget.
+        hedge_broke: set = set()
+        #: replica index -> the connection its worker currently runs
+        #: lanes on (so a winning hedge can break the loser's connection
+        #: and turn its pending read into a prompt error).
+        conn_of: dict = {}
+        hedges_issued = hedges_won = 0
+        hedge_wasted = 0
+
+        def observe_latency(i: int, ndata: int, elapsed: float) -> None:
+            if ndata <= 0 or elapsed <= 0.0:
+                return
+            last_done[i] = time.monotonic()
+            last_done_stall[i] = stall_s[0]
+            pb = elapsed / ndata
+            lat_ewma[i] = pb if lat_ewma[i] <= 0.0 \
+                else 0.5 * lat_ewma[i] + 0.5 * pb
+
+        async def _stall_clock() -> None:
+            """Heartbeat feeding ``stall_s``: each sleep should wake
+            after ``_HEDGE_POLL_S``; waking well past twice that means
+            the event loop (and so every lane) was starved, and the
+            overshoot is time stolen from ALL owners at once, not
+            evidence against any one of them."""
+            prev = time.monotonic()
+            while True:
+                await asyncio.sleep(_HEDGE_POLL_S)
+                t = time.monotonic()
+                if t - prev > 2.0 * _HEDGE_POLL_S:
+                    stall_s[0] += (t - prev) - _HEDGE_POLL_S
+                prev = t
+
+        def _heal_settled(start: int) -> None:
+            """Restore a winning hedge's bytes over whatever a losing
+            copy wrote into the destination (called under the lock when
+            the loser resolves)."""
+            settled.discard(start)
+            good = settled_data.pop(start, None)
+            if buf is not None and good is not None:
+                buf[start:start + len(good)] = good
+
+        def _pick_hedge(j: int):
+            """A straggling in-flight range worth duplicating onto idle
+            replica ``j`` (called under the lock), or None.
+
+            A candidate must be OVERDUE: aged past what its owner should
+            plausibly have needed, where "should" spans the lane queue —
+            a pipelined range can wait ``depth`` service times behind its
+            siblings while perfectly healthy, so the overdue bar starts
+            at ``depth + 1`` expected service times.  MDTP sizes chunks
+            so slow mirrors finish ON TIME; being slow per-byte is not by
+            itself straggling.  An owner whose per-byte latency EWMA sits
+            at or above the ``hedge_quantile`` of the live fleet's EWMAs
+            gets the lower bar; a healthy-looking owner must overshoot
+            twice that AND look wedged — no range completed within an
+            expected service time.  That is the gray-failure shape: a
+            stalled mirror stops producing samples, its EWMA stays
+            stale-fast (so the bar built on it is tiny) and only the
+            range's age betrays it, whereas an honestly-congested owner
+            keeps completing sibling ranges, and a near-tie duplicate
+            race against it would waste a range's worth of bytes to
+            save almost nothing.  Either way replica ``j`` must
+            plausibly beat continuing to wait: the range's age already
+            exceeds what ``j`` itself would have needed to fetch it.
+            All ages discount measured scheduler stall (``stall_s``):
+            on a starved host every range ages at once, and that is
+            evidence against the HOST, not any owner."""
+            if not hedge_q or not outstanding:
+                return None
+            # endgame window: residual below ~2 allocator rounds (upper
+            # bound — L per live replica is one full round's share)
+            if (size - cursor) + pooled + inflight > \
+                    2 * params_box[0].large_chunk * max(len(alive), 1):
+                return None
+            if lat_ewma[j] <= 0.0:
+                return None          # no evidence j is any faster
+            # waste budget: committed waste + reserved in-flight lengths.
+            # The first hedge is always affordable — on a small transfer
+            # a single range can exceed the fractional budget outright,
+            # and a cap that can never admit ANY hedge is no cap at all;
+            # the bound is therefore frac*size plus at most one range.
+            budget = self.hedge_waste_frac * size \
+                - hedge_wasted - sum(h[0] for h in hedged.values())
+            first_free = not hedged and hedge_wasted <= 0.0
+            samples = sorted(lat_ewma[k] for k in alive
+                             if lat_ewma[k] > 0.0)
+            slow_cut = None
+            if len(samples) >= 2:
+                pos = hedge_q * (len(samples) - 1)
+                lo = int(pos)
+                hi = min(lo + 1, len(samples) - 1)
+                slow_cut = samples[lo] \
+                    + (samples[hi] - samples[lo]) * (pos - lo)
+            now = time.monotonic()
+            my_rtt = rtt_min[j] if rtt_min[j] > 0.0 else self.DEFAULT_RTT
+            best = None
+            for s_, (ln_, owner, ban_, prog_, st_) in \
+                    outstanding.items():
+                if owner == j or s_ in hedged or s_ in settled \
+                        or j in ban_ or (ln_ > budget and not first_free):
+                    continue
+                if 2 * prog_[0] > ln_:
+                    # the owner already landed most of the body: cancel-
+                    # ling it would waste more bytes than the duplicate
+                    # could save — let the remainder trickle in
+                    continue
+                if prog_[1] <= 0.0:
+                    # the request never hit the wire (still queued on a
+                    # slot semaphore or the byte budget): whatever delays
+                    # it sits upstream of the owner, and a duplicate
+                    # would just queue behind the same gate
+                    continue
+                # age from the wire-send stamp, discounting scheduler
+                # stall accrued since issue: queueing and host starvation
+                # age every range at once and say nothing about THIS
+                # owner's health
+                age = (now - prog_[1]) - (stall_s[0] - st_)
+                if age <= my_rtt + ln_ * lat_ewma[j]:
+                    continue         # j would not have finished it yet
+                if prog_[0] > 0:
+                    # the owner is visibly streaming: from its observed
+                    # rate ON THIS RANGE, project the remainder's
+                    # landing time, and duplicate only when j would
+                    # finish the WHOLE range well before that — a
+                    # merely-contended owner (storm sharing the mirror)
+                    # streams slower than its EWMA promises, and racing
+                    # it is a near-tie that wastes a body to save
+                    # almost nothing.  A gray mirror's trickle projects
+                    # seconds of remainder and still qualifies.
+                    rem = (ln_ - prog_[0]) * age / prog_[0]
+                    if rem <= 2.0 * (my_rtt + ln_ * lat_ewma[j]):
+                        continue
+                slow = slow_cut is not None and lat_ewma[owner] >= slow_cut
+                o_rtt = rtt_min[owner] if rtt_min[owner] > 0.0 \
+                    else self.DEFAULT_RTT
+                expect_owner = o_rtt + ln_ * lat_ewma[owner]
+                # absolute grace floor: at small-chunk scale the expected
+                # times are milliseconds, and event-loop/scheduler jitter
+                # alone would look like lateness — a few poll periods of
+                # slack costs a genuine straggler almost nothing
+                overdue = (depth + 1.0) * expect_owner + 4.0 * _HEDGE_POLL_S
+                # wedge signal for healthy-LOOKING owners: a gray mirror
+                # stops completing anything, while an honestly-congested
+                # one keeps finishing sibling ranges — hedging the latter
+                # is a near-tie race that wastes a range to save nothing
+                wedged = last_done[owner] <= 0.0 or \
+                    (now - last_done[owner]) \
+                    - (stall_s[0] - last_done_stall[owner]) > \
+                    expect_owner + 4.0 * _HEDGE_POLL_S
+                if lat_ewma[owner] <= 0.0 \
+                        or (slow and age > overdue) \
+                        or (wedged and age > 2.0 * overdue):
+                    # cheapest insurance first: among overdue candidates
+                    # duplicate the SHORTEST range — a losing copy can
+                    # waste at most its own length, and a short range is
+                    # also the one a hedge can actually win by a margin
+                    if best is None or ln_ < best[1]:
+                        best = (s_, ln_, owner, ban_)
+            return best
+
         def observe_rtt(i: int, sample: float) -> None:
             if sample > 0.0:
                 rtt_min[i] = (sample if rtt_min[i] <= 0.0
                               else min(rtt_min[i], sample))
 
         async def _reclaim(start: int, length: int, ban: frozenset, *,
-                           count: bool) -> None:
+                           count: bool, lost: int = 0) -> None:
             """Return an owed range to the pool and settle the in-flight
-            count, atomically, waking parked lanes."""
-            nonlocal inflight, pooled, refetched
+            count, atomically, waking parked lanes.  A range a winning
+            hedge already settled is NOT re-pooled (its bytes are done
+            and its in-flight claim already released); the loser's
+            partial zero-copy writes are healed back instead, and the
+            ``lost`` bytes it did land are charged to the hedge waste.
+
+            A hedge still in flight on the reclaimed range is cancelled
+            too: the claim it raced is gone, and the endgame's shrinking
+            draws mean the re-pooled range usually re-enters SPLIT — a
+            shape the duplicate can no longer settle, so letting it
+            stream to completion could only charge a full body."""
+            nonlocal inflight, pooled, refetched, hedge_wasted
+            doomed = None
             async with lock:
+                outstanding.pop(start, None)
+                if start in settled:
+                    _heal_settled(start)
+                    hedge_wasted += min(lost, length)
+                    cond.notify_all()
+                    return
+                doomed = hedged.get(start)
                 heapq.heappush(pool, (start, length, ban))
                 pooled += length
                 inflight -= length
                 if count:
                     refetched += 1
                 cond.notify_all()
+            if doomed is not None and not doomed[2].broken:
+                hedge_broke.add(doomed[1])
+                doomed[2].abort()
 
         def _pick_pool_entry(i: int) -> Optional[int]:
             """Index of the lowest-start pool entry replica ``i`` may
@@ -851,6 +1178,111 @@ class MDTPClient:
                     best = k
             return best
 
+        async def hedge_fetch(j: int, conn: "_Conn", start: int,
+                              length: int, owner: int,
+                              ban: frozenset) -> Optional[str]:
+            """Speculatively duplicate an in-flight range onto replica
+            ``j``, into PRIVATE scratch — never the destination, so a
+            corrupt or losing body cannot touch committed bytes.  First
+            completion wins, and cancellation is symmetric: a winning
+            hedge commits its bytes, settles the owner's in-flight
+            claim, and cancels the loser by breaking its connection —
+            while an owner that lands first breaks THIS connection so
+            the doomed copy stops streaming (charging only its partial
+            bytes).  A truncated or corrupt hedge is discarded whole
+            (the owner still owes the range).  Returns a lane outcome
+            to propagate, or None to carry on."""
+            nonlocal done_bytes, inflight, hedges_won, hedge_wasted
+            name = self.replicas[j].name
+            scratch = bytearray(length)
+            try:
+                reply = await conn.fetch_range(
+                    offset + start, offset + start + length - 1,
+                    into=memoryview(scratch) if zero_copy else None)
+            except (ConnectionError, OSError,
+                    asyncio.IncompleteReadError) as e:
+                # broken mid-copy — usually the owner landing first and
+                # cancelling this race (see the settled commit below).
+                # Whatever the duplicate DID land before the break is
+                # real duplicated traffic, so it still charges the
+                # waste meter.
+                async with lock:
+                    hedged.pop(start, None)
+                    hedge_wasted += min(
+                        getattr(e, "partial_bytes", 0), length)
+                return "broken"
+            except BaseException:
+                async with lock:
+                    hedged.pop(start, None)
+                raise
+            ndata = reply.nbytes
+            for sample in conn.take_rtt_samples():
+                observe_rtt(j, sample)
+            body = scratch[:ndata] if zero_copy else reply.data
+            crc = await _crc32_async(body) if need_crc else None
+            if verify and reply.crc32 is not None and crc != reply.crc32:
+                # the range is not ours to re-pool — just discard the
+                # copy, but the corruption still counts against j
+                async with lock:
+                    hedged.pop(start, None)
+                    corrupt_per[name] += 1
+                    dead = corrupt_per[name] >= self.max_failures
+                    if dead and name not in failed:
+                        failed.append(name)
+                self._on_corruption(name)
+                if dead:
+                    conn.broken = True
+                    return "corrupt-dead"
+                return None
+            observe_latency(j, ndata, reply.elapsed)
+            o_conn = None
+            loser = None
+            async with lock:
+                hedged.pop(start, None)
+                # the live claim must still be the EXACT range this hedge
+                # duplicated: after a reclaim the range can re-enter the
+                # pool and be re-drawn SPLIT (same start, shorter length),
+                # and crediting the full hedge body against that narrower
+                # claim would double-count the remainder when its own
+                # re-fetch lands.  A re-draw by a different replica with
+                # identical boundaries is still a clean win — the
+                # cancellation just goes to the CURRENT owner.
+                entry = outstanding.get(start)
+                if ndata < length or start in settled \
+                        or entry is None or entry[0] != length:
+                    # truncated, re-split, or the owner resolved it
+                    # first: the duplicated body is pure waste
+                    hedge_wasted += ndata
+                else:
+                    # hedge wins: commit from scratch, release the
+                    # owner's in-flight claim, and keep the bytes so a
+                    # late-landing loser body can be healed back over
+                    loser = entry[1]
+                    if buf is not None:
+                        buf[start:start + ndata] = body
+                    settled.add(start)
+                    settled_data[start] = bytes(body)
+                    bytes_per[name] += ndata
+                    reqs_per[name] += 1
+                    done_bytes += ndata
+                    inflight -= length
+                    hedges_won += 1
+                    # the cancelled copy's waste is charged when the
+                    # loser RESOLVES — the bytes it actually landed, not
+                    # the whole range (see ``_reclaim`` / the settled
+                    # branches of the lane)
+                    o_conn = conn_of.get(loser)
+                    if journal is not None:
+                        journal.record(offset + start, ndata, crc)
+                    cond.notify_all()
+            if o_conn is not None and not o_conn.broken:
+                # actively cancel the loser: breaking its connection
+                # turns the pending read into a prompt ConnectionError
+                # instead of waiting out the straggler
+                hedge_broke.add(loser)
+                o_conn.abort()
+            return None
+
         async def pipe_lane(i: int, conn: "_Conn") -> str:
             """One pipelined request lane on replica ``i``'s shared
             connection.  Up to ``pipeline_depth`` lanes run per replica;
@@ -861,12 +1293,25 @@ class MDTPClient:
             when this replica crossed the corruption cap and was
             retired."""
             nonlocal cursor, inflight, pooled, done_bytes, refetched
+            nonlocal hedges_issued, hedge_wasted
             name = self.replicas[i].name
+
+            async def _park() -> None:
+                """Wait for pool/in-flight changes; with hedging on, wake
+                periodically anyway — a grayed-out straggler generates no
+                events, so only a poll can spot its aging range."""
+                if not hedge_q:
+                    await cond.wait()
+                    return
+                with contextlib.suppress(asyncio.TimeoutError):
+                    await asyncio.wait_for(cond.wait(), _HEDGE_POLL_S)
+
             while True:
                 if conn.broken:
                     # a sibling lane hit the failure first; don't draw
                     # work a doomed request would just bounce back
                     return "broken"
+                hedge = None
                 async with lock:
                     while True:
                         if conn.broken:
@@ -879,16 +1324,42 @@ class MDTPClient:
                         if remaining <= 0:
                             if inflight <= 0:
                                 return "done"
-                            await cond.wait()
+                            hedge = _pick_hedge(i)
+                            if hedge is not None:
+                                break
+                            await _park()
                             continue
                         pick = _pick_pool_entry(i) if pool else None
                         if pick is None and cursor >= size:
                             # every pooled range is tagged away from this
                             # replica and another live replica can take
-                            # it — park until the pool changes
-                            await cond.wait()
+                            # it — park until the pool changes (or hedge
+                            # a straggler meanwhile)
+                            hedge = _pick_hedge(i)
+                            if hedge is not None:
+                                break
+                            await _park()
                             continue
                         break
+                    if hedge is not None:
+                        h_start, h_len, h_owner, h_ban = hedge
+                        hedged[h_start] = (h_len, i, conn)
+                        hedges_issued += 1
+                if hedge is not None:
+                    outcome = await hedge_fetch(i, conn, h_start, h_len,
+                                                h_owner, h_ban)
+                    if outcome is not None:
+                        return outcome
+                    continue
+                async with lock:
+                    if conn.broken:
+                        return "broken"
+                    remaining = (size - cursor) + pooled
+                    if remaining <= 0:
+                        continue
+                    pick = _pick_pool_entry(i) if pool else None
+                    if pick is None and cursor >= size:
+                        continue
                     want = next_chunk_size(
                         i,
                         self._allocation_throughputs(
@@ -943,6 +1414,10 @@ class MDTPClient:
                         ban = frozenset()
                     start, length = s, take
                     inflight += length
+                    prog = [0, 0.0]
+                    if hedge_q:
+                        outstanding[start] = (length, i, ban, prog,
+                                              stall_s[0])
                 # destination: straight into the assembly buffer / the
                 # sink's own storage (zero-copy), or per-chunk scratch
                 # for callable sinks / the legacy copy path.  A raising
@@ -963,10 +1438,11 @@ class MDTPClient:
                 try:
                     reply = await conn.fetch_range(
                         offset + start, offset + start + length - 1,
-                        into=mv)
+                        into=mv, progress=prog)
                 except (ConnectionError, OSError,
-                        asyncio.IncompleteReadError):
-                    await _reclaim(start, length, ban, count=True)
+                        asyncio.IncompleteReadError) as e:
+                    await _reclaim(start, length, ban, count=True,
+                                   lost=getattr(e, "partial_bytes", 0))
                     return "broken"
                 except BaseException:
                     # cancellation / unexpected error: release the range
@@ -988,17 +1464,35 @@ class MDTPClient:
                         # corrupt body: the bytes never count — re-pool
                         # the WHOLE range tagged "not this replica" so
                         # the packer re-fetches from an alternate mirror
+                        doomed = None
                         async with lock:
                             corrupt_per[name] += 1
                             dead = corrupt_per[name] >= self.max_failures
-                            heapq.heappush(
-                                pool, (start, length, ban | {i}))
-                            pooled += length
-                            inflight -= length
-                            refetched += 1
+                            outstanding.pop(start, None)
+                            if start in settled:
+                                # a hedge already delivered this range:
+                                # heal its bytes over the corrupt landing
+                                # instead of re-pooling settled work (the
+                                # discarded duplicate is hedge waste)
+                                _heal_settled(start)
+                                hedge_wasted += ndata
+                            else:
+                                # like ``_reclaim``: a duplicate still
+                                # racing this now-re-pooled range can no
+                                # longer settle it — cancel rather than
+                                # let a doomed body stream whole
+                                doomed = hedged.get(start)
+                                heapq.heappush(
+                                    pool, (start, length, ban | {i}))
+                                pooled += length
+                                inflight -= length
+                                refetched += 1
                             if dead and name not in failed:
                                 failed.append(name)
                             cond.notify_all()
+                        if doomed is not None and not doomed[2].broken:
+                            hedge_broke.add(doomed[1])
+                            doomed[2].abort()
                         self._on_corruption(name)
                         if dead:
                             # chronically corrupt = retired, like a dead
@@ -1024,6 +1518,8 @@ class MDTPClient:
                         if win[1] > 0.0:
                             est[i].observe(win[0], win[1])
                         win[0], win[1] = 0, 0.0
+                    if hedge_q:
+                        observe_latency(i, ndata, elapsed)
                     if sink is None:
                         if not zero_copy:
                             buf[start:start + ndata] = reply.data
@@ -1037,24 +1533,57 @@ class MDTPClient:
                     # and settle the in-flight count before propagating
                     await _reclaim(start, length, ban, count=False)
                     raise
+                settled_won = False
+                lost_hedge = None
+                async with lock:
+                    outstanding.pop(start, None)
+                    if start in settled:
+                        # a hedge beat this body to completion: its
+                        # claim is already settled — heal the winner's
+                        # bytes over this landing and count nothing
+                        # toward progress (the full duplicate body is
+                        # pure hedge waste)
+                        _heal_settled(start)
+                        reqs_per[name] += 1
+                        hedge_wasted += ndata
+                        settled_won = True
+                        cond.notify_all()
+                    else:
+                        bytes_per[name] += ndata
+                        reqs_per[name] += 1
+                        done_bytes += ndata
+                        inflight -= length
+                        # the owner landed first: any still-running
+                        # duplicate of this range can no longer win the
+                        # race (the claim it would settle is gone) — so
+                        # cancel it NOW rather than let a whole losing
+                        # body stream to completion.  Mirror image of
+                        # the winning hedge aborting its owner.
+                        lost_hedge = hedged.get(start)
+                        if ndata < length:   # truncated: short range —
+                            # the tail re-enters the pool atomically with
+                            # the inflight decrement so no peer can exit
+                            # between
+                            heapq.heappush(
+                                pool, (start + ndata, length - ndata, ban))
+                            pooled += length - ndata
+                            cond.notify_all()
+                        elif inflight <= 0:
+                            cond.notify_all()
+                if lost_hedge is not None and not lost_hedge[2].broken:
+                    # break the loser's connection: its pending read
+                    # turns into a prompt ConnectionError charging only
+                    # the bytes it really landed (``partial_bytes``),
+                    # and its worker reconnects without failure-budget
+                    # cost (``hedge_broke``)
+                    hedge_broke.add(lost_hedge[1])
+                    lost_hedge[2].abort()
+                if settled_won:
+                    continue
                 if journal is not None:
                     # committed: journal the interval (buffered append;
                     # fsync at the journal's checkpoint interval)
                     journal.record(offset + start, ndata, crc)
-                async with lock:
-                    bytes_per[name] += ndata
-                    reqs_per[name] += 1
-                    done_bytes += ndata
-                    inflight -= length
-                    if ndata < length:   # truncated: short range — the
-                        # tail re-enters the pool atomically with the
-                        # inflight decrement so no peer can exit between
-                        heapq.heappush(
-                            pool, (start + ndata, length - ndata, ban))
-                        pooled += length - ndata
-                        cond.notify_all()
-                    elif inflight <= 0:
-                        cond.notify_all()
                 if (tuner is not None and done_bytes < size
                         and not tune_state["busy"]
                         and done_bytes - tune_state["bytes"] >= tune_every):
@@ -1082,6 +1611,7 @@ class MDTPClient:
                         if (size - cursor) + pooled <= 0 and inflight <= 0:
                             return
                     conn = self._make_conn(self.replicas[i])
+                    conn_of[i] = conn
                     lanes = [asyncio.ensure_future(pipe_lane(i, conn))
                              for _ in range(self.pipeline_depth)]
                     try:
@@ -1103,12 +1633,19 @@ class MDTPClient:
                         return
                     if "broken" not in outcomes:
                         return
+                    if i in hedge_broke:
+                        # the break was a deliberate hedge cancellation,
+                        # not a replica failure: reconnect straight away
+                        # without charging the failure budget
+                        hedge_broke.discard(i)
+                        continue
                     failures += 1
                     if failures >= self.max_failures:
                         if name not in failed:
                             failed.append(name)
                         return
                     retries_per[name] += 1
+                    self._on_retry(name)
                     if self.retry_after > 0:
                         # capped exponential backoff with ±50% jitter:
                         # repeated failures probe ever less often, and
@@ -1116,7 +1653,7 @@ class MDTPClient:
                         # storms from synchronizing on a recovering mirror
                         delay = min(self.retry_after * (2 ** (failures - 1)),
                                     self.retry_backoff_cap)
-                        delay *= 0.5 + random.random()
+                        delay *= 0.5 + self._rng.random()
                         await asyncio.sleep(delay)
             finally:
                 # parked peers key takeability off the live-replica set
@@ -1127,6 +1664,7 @@ class MDTPClient:
 
         workers = [asyncio.ensure_future(worker(i))
                    for i in range(len(self.replicas))]
+        clock = asyncio.ensure_future(_stall_clock()) if hedge_q else None
         try:
             await asyncio.gather(*workers)
         except BaseException:
@@ -1142,6 +1680,11 @@ class MDTPClient:
             if journal is not None:
                 journal.sync()
             raise
+        finally:
+            if clock is not None:
+                clock.cancel()
+                with contextlib.suppress(asyncio.CancelledError):
+                    await clock
         t_end = time.monotonic()
         # settle an in-flight tuner update BEFORE any raise, so no task
         # outlives the event loop: drain it on success (its adoption
@@ -1189,6 +1732,10 @@ class MDTPClient:
             retries_per_replica=retries_per,
             corrupt_ranges=corrupt_per,
             resumed_bytes=resumed_bytes,
+            resume_verify_seconds=resume_verify,
+            hedges_issued=hedges_issued,
+            hedges_won=hedges_won,
+            hedge_wasted_bytes=hedge_wasted,
         )
         self.last_report = report
         return buf, report

@@ -34,6 +34,20 @@ re-learns the same conditions its neighbors just measured.
    ``MCGradTuner``'s iterate survive across transfers instead of being
    re-learned from scratch (the ROADMAP PR-3 follow-on).
 
+4. **Replica probation** (:class:`FleetModel`): a mirror that trips a
+   corruption, retry, or gray-slowness threshold stops anchoring large
+   chunks — its allocation weight is pinned at a probe floor so the
+   packer keeps sending it single min-sized chunks, and a mirror that
+   proves itself clean again re-enters through multiplicative slow-start
+   instead of instantly reclaiming full share (no fast/dead oscillation,
+   the paper's "bandwidth decrease to the fastest server" case).
+
+5. **Admission control** (:class:`_AdmissionGate` + :class:`_ByteBudget`):
+   a max-active-transfers gate with an SRPT (smallest-residual-first,
+   starvation-aged) wait queue, a per-fleet in-flight byte budget, and a
+   shed mode that serves flash-crowd overflow a bounded trickle instead
+   of queueing it into timeout.
+
 The manager is jax-free at import time (like the rest of
 ``repro.transfer``); tuners and the contention planner pull in jax lazily.
 """
@@ -41,10 +55,12 @@ The manager is jax-free at import time (like the rest of
 from __future__ import annotations
 
 import asyncio
+import collections
 import contextlib
 import dataclasses
 import itertools
 import threading
+import time
 import weakref
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
@@ -78,6 +94,26 @@ class _ReplicaState:
     #: one — it still gets probing-sized requests (re-fetch overhead is
     #: bounded) but stops anchoring large chunks.
     health: float = 1.0
+    #: connection-level retries charged since the last probation reset.
+    retries: int = 0
+    #: probation: the mirror tripped a corruption/retry/slowness
+    #: threshold; its allocation weight is pinned at the probe floor
+    #: until it serves a clean streak at restored health.
+    probation: bool = False
+    #: times this mirror has been placed on probation (witness).
+    probations: int = 0
+    #: consecutive clean chunks since the last bad event.
+    clean_streak: int = 0
+    #: consecutive chunks served far below the best trusted peer — the
+    #: fast path onto probation for a gray (silently degraded) mirror:
+    #: per-chunk rates betray the degradation many EWMA steps before the
+    #: capacity estimate converges down to it.
+    slow_strikes: int = 0
+    #: slow-start readmission factor in (0, 1]: starts small when a
+    #: mirror leaves probation and doubles per clean chunk, so a
+    #: recovered mirror ramps back instead of instantly reclaiming (and
+    #: possibly re-losing) its full allocation share.
+    readmit: float = 1.0
 
 
 class FleetModel:
@@ -91,12 +127,35 @@ class FleetModel:
     """
 
     def __init__(self, max_inflight_per_replica: int = 2,
-                 alpha: float = 0.3, rtt_alpha: float = 0.3):
+                 alpha: float = 0.3, rtt_alpha: float = 0.3,
+                 probation: bool = True,
+                 probation_health: float = 0.3,
+                 probation_retry_limit: int = 3,
+                 probation_slow_frac: float = 0.125,
+                 probation_strikes: int = 3,
+                 probation_clean_streak: int = 3,
+                 probation_floor: float = 0.02,
+                 readmit_init: float = 0.1):
         if max_inflight_per_replica < 1:
             raise ValueError("max_inflight_per_replica must be >= 1")
         self.max_inflight_per_replica = max_inflight_per_replica
         self.alpha = alpha
         self.rtt_alpha = rtt_alpha
+        #: probation knobs (see :class:`_ReplicaState`): trip when trust
+        #: decays below ``probation_health``, when ``probation_retry_limit``
+        #: connection retries accumulate, or when the mirror serves
+        #: ``probation_slow_frac``x slower than the best trusted peer;
+        #: readmit after ``probation_clean_streak`` clean chunks at
+        #: restored health, ramping back via slow-start from
+        #: ``readmit_init``.
+        self.probation_enabled = probation
+        self.probation_health = probation_health
+        self.probation_retry_limit = probation_retry_limit
+        self.probation_slow_frac = probation_slow_frac
+        self.probation_strikes = probation_strikes
+        self.probation_clean_streak = probation_clean_streak
+        self.probation_floor = probation_floor
+        self.readmit_init = readmit_init
         self._lock = threading.Lock()
         self._reps: dict[str, _ReplicaState] = {}
         self._active: set = set()
@@ -178,6 +237,62 @@ class FleetModel:
             # clean evidence slowly rebuilds trust (asymmetric on purpose:
             # one corruption costs more than one clean chunk repays)
             st.health += 0.05 * (1.0 - st.health)
+            if not self.probation_enabled:
+                return
+            # per-chunk slowness strike: this very chunk was served far
+            # below the best trusted peer's capacity — the instantaneous
+            # signal a gray mirror gives off while its capacity EWMA is
+            # still coasting on its healthy past
+            best = self._best_trusted(name)
+            struck = (best > 0.0 and st.chunks >= 4
+                      and rate < self.probation_slow_frac * best)
+            st.slow_strikes = st.slow_strikes + 1 if struck else 0
+            if st.probation:
+                st.clean_streak += 1
+                if (st.clean_streak >= self.probation_clean_streak
+                        and st.health >= self.probation_health
+                        and not struck
+                        and not self._slow_vs_fleet(name, st)):
+                    # readmit via multiplicative slow-start: the mirror
+                    # re-enters at a fraction of its fair share and earns
+                    # the rest back one clean chunk at a time.  A mirror
+                    # whose probe chunks still crawl stays parked — clean
+                    # is necessary but not sufficient.
+                    st.probation = False
+                    st.clean_streak = 0
+                    st.retries = 0
+                    st.readmit = self.readmit_init
+            else:
+                if st.readmit < 1.0:
+                    st.readmit = min(1.0, st.readmit * 2.0)
+                if (st.slow_strikes >= self.probation_strikes
+                        or self._slow_vs_fleet(name, st)):
+                    self._trip(st)
+
+    def _trip(self, st: _ReplicaState) -> None:
+        """Place one mirror on probation (caller holds the lock)."""
+        st.probation = True
+        st.probations += 1
+        st.clean_streak = 0
+        st.slow_strikes = 0
+        st.retries = 0
+
+    def _best_trusted(self, name: str) -> float:
+        """Best capacity among the OTHER non-probation mirrors (caller
+        holds the lock); 0 when there is no trusted peer — a
+        single-replica fleet can never be slow relative to itself."""
+        return max((o.capacity for nm, o in self._reps.items()
+                    if nm != name and not o.probation), default=0.0)
+
+    def _slow_vs_fleet(self, name: str, st: _ReplicaState) -> bool:
+        """Gray-slowness trigger: the mirror has enough samples and is
+        serving ``probation_slow_frac``x slower than the best trusted
+        peer (caller holds the lock).  Single-replica fleets never trip
+        — there is nothing faster to shift allocation toward."""
+        if st.chunks < 4 or st.capacity <= 0.0:
+            return False
+        best = self._best_trusted(name)
+        return best > 0.0 and st.capacity < self.probation_slow_frac * best
 
     def observe_corruption(self, name: str) -> None:
         """One checksum-mismatched range from this mirror: count it and
@@ -186,6 +301,29 @@ class FleetModel:
             st = self._reps.setdefault(name, _ReplicaState())
             st.corruptions += 1
             st.health = max(st.health * 0.7, 0.05)
+            if self.probation_enabled:
+                st.clean_streak = 0
+                if not st.probation and st.health < self.probation_health:
+                    self._trip(st)
+
+    def observe_retry(self, name: str) -> None:
+        """One connection-level retry (reconnect after failure) against
+        this mirror: enough of them in a row trips probation even when no
+        chunk ever completes (the silently-blackholed mirror case)."""
+        with self._lock:
+            st = self._reps.setdefault(name, _ReplicaState())
+            st.retries += 1
+            if self.probation_enabled:
+                st.clean_streak = 0
+                if (not st.probation
+                        and st.retries >= self.probation_retry_limit):
+                    self._trip(st)
+
+    @property
+    def probations(self) -> int:
+        """Total probation trips across the fleet (witness)."""
+        with self._lock:
+            return sum(st.probations for st in self._reps.values())
 
     def observe_rtt(self, name: str, sample: float) -> None:
         if sample <= 0.0:
@@ -207,6 +345,12 @@ class FleetModel:
         Falls back to the transfer's own estimate where the fleet has no
         capacity observation, and keeps unprobed replicas at ``<= 0`` so
         the client still issues its uniform probing chunk.
+
+        A mirror on probation is pinned at the probe floor — a tiny
+        positive weight, so the packer keeps sending it single min-sized
+        chunks (periodic probes) without anchoring real work on it; a
+        readmitted mirror's weight is additionally scaled by its
+        slow-start ``readmit`` factor.
         """
         with self._lock:
             n_active = max(len(self._active), 1)
@@ -214,12 +358,20 @@ class FleetModel:
             for i, r in enumerate(replicas):
                 own = float(est_values[i])
                 st = self._reps.get(r.name)
+                if st is not None and st.probation:
+                    ref = st.capacity if st.capacity > 0.0 else own
+                    if ref > 0.0:
+                        out.append(ref * self.probation_floor)
+                    else:
+                        out.append(own)
+                    continue
+                trust = 1.0 if st is None else st.health * st.readmit
                 if own <= 0.0 or st is None or st.capacity <= 0.0:
-                    out.append(own if st is None else own * st.health)
+                    out.append(own if st is None else own * trust)
                     continue
                 foreign = sum(v for u, v in st.rates.items() if u != tid)
                 floor = st.capacity / (2.0 * n_active)
-                out.append(max(st.capacity - foreign, floor) * st.health)
+                out.append(max(st.capacity - foreign, floor) * trust)
             return out
 
     def fleet_telemetry(self, tid, replicas: Sequence[Replica], telemetry):
@@ -250,36 +402,200 @@ class FleetModel:
                     "chunks": st.chunks,
                     "corruptions": st.corruptions,
                     "health": st.health,
+                    "retries": st.retries,
+                    "probation": st.probation,
+                    "probations": st.probations,
+                    "readmit": st.readmit,
                 }
                 for name, st in self._reps.items()
             }
 
 
+class _AdmissionGate:
+    """Per-event-loop admission state for one manager.
+
+    A ``max_active`` gate with an SRPT wait queue: when a slot frees,
+    the waiter with the smallest aged residual wins —
+    ``size - aging_bytes_per_s * wait`` — smallest-remaining-first for
+    mean response time, with wall-clock aging so a large transfer cannot
+    starve behind an endless stream of small ones.  Arrivals past
+    ``shed_queue_depth`` are shed into degraded (trickle) service
+    instead of queueing toward timeout; shed transfers are promoted to
+    full service (SRPT order again) when a slot frees with no queue
+    left.
+    """
+
+    def __init__(self, max_active: Optional[int],
+                 aging_bytes_per_s: float,
+                 shed_queue_depth: Optional[int]):
+        self.max_active = max_active
+        self.aging = float(aging_bytes_per_s)
+        self.shed_depth = shed_queue_depth
+        self.active = 0
+        #: SRPT wait queue entries: ``[size, enqueued_at, Event]``.
+        self.waiting: list = []
+        #: shed transfers currently in trickle service: tid -> (size, t).
+        self.degraded: dict = {}
+        #: tids currently holding a full-service slot.
+        self.full: set = set()
+
+    def _aged(self, size, since, now) -> float:
+        return float(size) - self.aging * (now - since)
+
+    async def acquire(self, size: int):
+        """Admit one transfer.  Returns ``(mode, waited_seconds)`` where
+        mode is ``"full"`` (slot held) or ``"shed"`` (trickle service,
+        no slot)."""
+        if self.max_active is None or self.active < self.max_active:
+            self.active += 1
+            return "full", 0.0
+        if (self.shed_depth is not None
+                and len(self.waiting) >= self.shed_depth):
+            return "shed", 0.0
+        entry = [int(size), time.monotonic(), asyncio.Event()]
+        self.waiting.append(entry)
+        try:
+            await entry[2].wait()
+        except asyncio.CancelledError:
+            if entry in self.waiting:
+                self.waiting.remove(entry)
+            else:
+                # the slot was handed to us between grant and resume —
+                # pass it along instead of leaking it
+                self._release_slot()
+            raise
+        return "full", time.monotonic() - entry[1]
+
+    def bind(self, tid, mode: str, size: int) -> None:
+        """Associate the admitted transfer's tid with its service mode
+        (tids are assigned by the session after admission)."""
+        if mode == "full":
+            self.full.add(tid)
+        else:
+            self.degraded[tid] = (int(size), time.monotonic())
+
+    def is_degraded(self, tid) -> bool:
+        return tid in self.degraded
+
+    def finish(self, tid):
+        """Transfer done: free its slot (promoting the best waiter, else
+        the best shed transfer) or drop its degraded registration.
+        Returns the tid promoted from shed to full service, if any."""
+        if tid in self.full:
+            self.full.discard(tid)
+            return self._release_slot()
+        self.degraded.pop(tid, None)
+        return None
+
+    def _release_slot(self):
+        now = time.monotonic()
+        if self.waiting:
+            best = min(self.waiting,
+                       key=lambda e: self._aged(e[0], e[1], now))
+            self.waiting.remove(best)
+            best[2].set()  # slot hands off; active count unchanged
+            return None
+        if self.degraded:
+            tid = min(self.degraded.items(),
+                      key=lambda kv: self._aged(kv[1][0], kv[1][1], now))[0]
+            del self.degraded[tid]
+            self.full.add(tid)  # promoted in place; active unchanged
+            return tid
+        self.active -= 1
+        return None
+
+
+class _ByteBudget:
+    """Per-event-loop cap on total in-flight request bytes across every
+    managed transfer — the fleet's bandwidth-delay budget.  Each range
+    request holds its length in credits for its wire lifetime; requests
+    larger than the whole budget are clamped so they can still proceed
+    (serially).  Grants are FIFO, so one huge request cannot be starved
+    by a stream of small ones slipping past it."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self.available = int(capacity)
+        self._waiters: collections.deque = collections.deque()
+
+    async def acquire(self, n: int) -> int:
+        n = min(int(n), self.capacity)
+        if self.available >= n and not self._waiters:
+            self.available -= n
+            return n
+        fut = asyncio.get_running_loop().create_future()
+        self._waiters.append((n, fut))
+        try:
+            await fut
+        except asyncio.CancelledError:
+            if fut.done() and not fut.cancelled():
+                # credit was granted but the task is bailing: hand it back
+                self.available += n
+                self._grant()
+            else:
+                with contextlib.suppress(ValueError):
+                    self._waiters.remove((n, fut))
+            raise
+        return n
+
+    def release(self, n: int) -> None:
+        self.available += int(n)
+        self._grant()
+
+    def _grant(self) -> None:
+        while self._waiters and self._waiters[0][0] <= self.available:
+            need, fut = self._waiters.popleft()
+            if fut.done():
+                continue
+            self.available -= need
+            fut.set_result(None)
+
+
 class _ManagedConn(_Conn):
     """A client connection that (a) respects the fleet's per-replica
-    in-flight cap and (b) feeds every completed range request into the
-    shared fleet model."""
+    in-flight cap and the manager's in-flight byte budget, (b) paces
+    shed (degraded-admission) transfers to the trickle rate, and
+    (c) feeds every completed range request into the shared fleet
+    model."""
 
-    def __init__(self, replica: Replica, fleet: FleetModel, tid, **conn_kw):
+    def __init__(self, replica: Replica, fleet: FleetModel, tid,
+                 manager: Optional["TransferManager"] = None, **conn_kw):
         super().__init__(replica, **conn_kw)
         self._fleet = fleet
         self._tid = tid
+        self._mgr = manager
 
-    async def fetch_range(self, start: int, end: int, into=None):
-        # the slot is held for the request's whole pipelined lifetime
-        # (send → queued behind predecessors → body), so the cap bounds
-        # wire-level outstanding requests per mirror across transfers
-        async with self._fleet.slot(self.replica.name):
-            reply = await super().fetch_range(start, end, into=into)
-            self._fleet.observe_chunk(self._tid, self.replica.name,
-                                      reply.nbytes, reply.elapsed,
-                                      rtt_included=reply.rtt_included)
-            # peek (don't drain — the owning client min-aggregates these
-            # into its own report) at the freshest RTT samples
-            if self._rtt_samples:
-                self._fleet.observe_rtt(self.replica.name,
-                                        min(self._rtt_samples))
-            return reply
+    async def fetch_range(self, start: int, end: int, into=None,
+                          progress=None):
+        length = end - start + 1
+        budget = None
+        if self._mgr is not None:
+            pace = self._mgr._shed_pace(self._tid, length)
+            if pace > 0.0:
+                await asyncio.sleep(pace)
+            budget = self._mgr._byte_budget()
+        held = 0
+        if budget is not None:
+            held = await budget.acquire(length)
+        try:
+            # the slot is held for the request's whole pipelined lifetime
+            # (send → queued behind predecessors → body), so the cap bounds
+            # wire-level outstanding requests per mirror across transfers
+            async with self._fleet.slot(self.replica.name):
+                reply = await super().fetch_range(start, end, into=into,
+                                                  progress=progress)
+                self._fleet.observe_chunk(self._tid, self.replica.name,
+                                          reply.nbytes, reply.elapsed,
+                                          rtt_included=reply.rtt_included)
+                # peek (don't drain — the owning client min-aggregates
+                # these into its own report) at the freshest RTT samples
+                if self._rtt_samples:
+                    self._fleet.observe_rtt(self.replica.name,
+                                            min(self._rtt_samples))
+                return reply
+        finally:
+            if budget is not None:
+                budget.release(held)
 
 
 class _SharedTuner:
@@ -316,6 +632,7 @@ class _ManagedClient(MDTPClient):
 
     def _make_conn(self, replica: Replica) -> _Conn:
         return _ManagedConn(replica, self._manager.fleet, self._tid,
+                            manager=self._manager,
                             request_latency=self.request_latency,
                             read_timeout=self.read_timeout)
 
@@ -325,6 +642,9 @@ class _ManagedClient(MDTPClient):
 
     def _on_corruption(self, name: str) -> None:
         self._manager.fleet.observe_corruption(name)
+
+    def _on_retry(self, name: str) -> None:
+        self._manager.fleet.observe_retry(name)
 
 
 @dataclass
@@ -360,6 +680,25 @@ class TransferManager:
         (see :meth:`plan_contention`) consulted at transfer start, so a
         transfer that arrives while k others run starts from geometry
         tuned for a (k+1)-way split instead of the solo optimum.
+      max_active_transfers: admission gate — at most this many transfers
+        run at full service per event loop; the rest wait in an SRPT
+        (smallest-residual-first, starvation-aged) queue.  ``None``
+        disables admission control.
+      max_inflight_bytes: per-fleet budget on total in-flight request
+        bytes across every transfer on a loop.  ``None`` = unbounded.
+      shed_queue_depth: arrivals finding this many transfers already
+        queued are shed into degraded (trickle) service instead of
+        waiting — bounded progress instead of a timeout.  ``None``
+        disables shedding (everyone queues).
+      shed_trickle_bytes_per_s: pacing rate for shed transfers.
+      aging_bytes_per_s: SRPT starvation aging — each second in the
+        queue shrinks a waiter's effective residual by this much.
+      probation: enable replica probation in the fleet model (default
+        on; see :class:`FleetModel`).
+      hedge_quantile: endgame hedging quantile handed to every managed
+        client (default 0.95 = the paper-motivated p95 straggler cut;
+        0 disables hedging).  An explicit ``hedge_quantile`` in
+        ``client_kw`` wins.
     """
 
     def __init__(
@@ -372,6 +711,13 @@ class TransferManager:
         ewma_alpha: float = 0.5,
         fleet_alpha: float = 0.3,
         contention_ladder: Optional[dict] = None,
+        max_active_transfers: Optional[int] = None,
+        max_inflight_bytes: Optional[int] = None,
+        shed_queue_depth: Optional[int] = None,
+        shed_trickle_bytes_per_s: float = 4.0 * 1024 * 1024,
+        aging_bytes_per_s: float = 16.0 * 1024 * 1024,
+        probation: bool = True,
+        hedge_quantile: float = 0.95,
         **client_kw,
     ):
         self.replicas = list(replicas)
@@ -380,14 +726,62 @@ class TransferManager:
         self.contention_ladder = dict(contention_ladder or {})
         self.fleet = FleetModel(
             max_inflight_per_replica=max_inflight_per_replica,
-            alpha=fleet_alpha)
+            alpha=fleet_alpha, probation=probation)
         self._estimator = estimator
         self._ewma_alpha = ewma_alpha
         self._client_kw = dict(client_kw)
+        self._client_kw.setdefault("hedge_quantile", hedge_quantile)
+        self.max_active_transfers = max_active_transfers
+        self.max_inflight_bytes = max_inflight_bytes
+        self.shed_queue_depth = shed_queue_depth
+        self.shed_trickle_bytes_per_s = float(shed_trickle_bytes_per_s)
+        self.aging_bytes_per_s = float(aging_bytes_per_s)
+        # per-event-loop admission/budget state (same weak-keying
+        # rationale as FleetModel._slots)
+        self._gates: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+        self._budgets: "weakref.WeakKeyDictionary" = (
+            weakref.WeakKeyDictionary())
+        #: admission witnesses, cumulative across loops: transfers
+        #: admitted / queued (with total queue seconds) / shed to
+        #: trickle service / promoted from shed to full service.
+        self.admission = {"admitted": 0, "queued": 0, "wait_seconds": 0.0,
+                          "shed": 0, "promoted": 0}
         self._tuner_lock = threading.Lock()
         self._tids = itertools.count(1)
         #: reports of completed transfers, in completion order.
         self.reports: list = []
+
+    # -- admission ---------------------------------------------------------
+
+    def _gate(self) -> _AdmissionGate:
+        loop = asyncio.get_running_loop()
+        gate = self._gates.get(loop)
+        if gate is None:
+            gate = self._gates[loop] = _AdmissionGate(
+                self.max_active_transfers, self.aging_bytes_per_s,
+                self.shed_queue_depth)
+        return gate
+
+    def _byte_budget(self) -> Optional[_ByteBudget]:
+        if self.max_inflight_bytes is None:
+            return None
+        loop = asyncio.get_running_loop()
+        budget = self._budgets.get(loop)
+        if budget is None:
+            budget = self._budgets[loop] = _ByteBudget(
+                self.max_inflight_bytes)
+        return budget
+
+    def _shed_pace(self, tid, length: int) -> float:
+        """Trickle pacing delay for one range request of a shed
+        (degraded-admission) transfer; 0 for full-service transfers."""
+        try:
+            gate = self._gates.get(asyncio.get_running_loop())
+        except RuntimeError:
+            return 0.0
+        if gate is None or not gate.is_degraded(tid):
+            return 0.0
+        return float(length) / self.shed_trickle_bytes_per_s
 
     # -- client lifecycle --------------------------------------------------
 
@@ -454,16 +848,41 @@ class TransferManager:
         """One managed transfer (awaitable; gather several for a fleet).
 
         Same contract as ``MDTPClient.fetch`` plus ``path``/``replicas``
-        re-pointing and ``start_delay`` for staggered arrivals.
+        re-pointing and ``start_delay`` for staggered arrivals.  Passes
+        through the admission gate first: may wait in the SRPT queue (or
+        run at trickle service) when ``max_active_transfers`` is set.
         """
         if start_delay > 0.0:
             await asyncio.sleep(start_delay)
-        async with self.session(replicas=replicas, path=path) as client:
-            buf, report = await client.fetch(
-                size, sink=sink, offset=offset,
-                tune_interval_bytes=tune_interval_bytes)
-            self.reports.append(report)
-            return buf, report
+        gate = self._gate()
+        mode, waited = await gate.acquire(size)
+        self.admission["admitted"] += 1
+        if waited > 0.0:
+            self.admission["queued"] += 1
+            self.admission["wait_seconds"] += waited
+        if mode == "shed":
+            self.admission["shed"] += 1
+        tid = None
+        try:
+            async with self.session(replicas=replicas, path=path) as client:
+                tid = client._tid
+                gate.bind(tid, mode, size)
+                buf, report = await client.fetch(
+                    size, sink=sink, offset=offset,
+                    tune_interval_bytes=tune_interval_bytes)
+                self.reports.append(report)
+                return buf, report
+        finally:
+            if tid is not None:
+                promoted = gate.finish(tid)
+            elif mode == "full":
+                # admission slot acquired but the session never bound a
+                # transfer (construction failed): free the slot directly
+                promoted = gate._release_slot()
+            else:
+                promoted = None
+            if promoted is not None:
+                self.admission["promoted"] += 1
 
     def run(self, jobs: Sequence[TransferJob]):
         """Synchronous batch entry: run every job concurrently on one

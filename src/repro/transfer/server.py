@@ -111,6 +111,7 @@ class _Handler(BaseHTTPRequestHandler):
             srv.concurrent += 1                   # type: ignore[attr-defined]
             srv.peak_concurrent = max(            # type: ignore[attr-defined]
                 srv.peak_concurrent, srv.concurrent)
+        self._gauge_held = True
         try:
             self._serve_get()
         except (BrokenPipeError, ConnectionResetError):
@@ -118,8 +119,25 @@ class _Handler(BaseHTTPRequestHandler):
             # handler thread must not die noisily for that
             self.close_connection = True
         finally:
-            with srv.gauge_lock:                  # type: ignore[attr-defined]
-                srv.concurrent -= 1               # type: ignore[attr-defined]
+            self._gauge_release()
+
+    def _gauge_release(self) -> None:
+        """Close this request's concurrency-gauge window (idempotent).
+
+        Called just BEFORE the final body write, not when the handler
+        unwinds: the moment the last byte is handed to the kernel the
+        client can read it, release its in-flight slot, and race its
+        next request onto the wire — while this thread waits on the GIL
+        to run its bookkeeping.  Anything left on this side of that
+        write registers as request overlap the client never created.
+        The throttle pays service time in sleeps before each write, so
+        the gauge window still spans the full paced service (the
+        per-replica in-flight cap witness measures SERVICE overlap,
+        not handler-thread lifetime)."""
+        if getattr(self, "_gauge_held", False):
+            self._gauge_held = False
+            with self.server.gauge_lock:          # type: ignore[attr-defined]
+                self.server.concurrent -= 1       # type: ignore[attr-defined]
 
     def _draw_fault(self) -> Optional[str]:
         faults: Optional[FaultPolicy] = (
@@ -250,9 +268,11 @@ class _Handler(BaseHTTPRequestHandler):
                     # moment it lands, keeping the concurrency gauge
                     # honest).
                     time.sleep(len(piece) / throttle.bytes_per_s)
+                if sent + len(piece) >= limit:
+                    self._gauge_release()
                 self.wfile.write(piece)
-                self._account(len(piece))
                 sent += len(piece)
+                self._account(len(piece))
                 if not throttle.deterministic:
                     target = sent / throttle.bytes_per_s
                     sleep = target - (time.monotonic() - t0)
@@ -263,11 +283,13 @@ class _Handler(BaseHTTPRequestHandler):
                 self.wfile.write(body[:stall_at])
                 self._account(stall_at)
                 time.sleep(self.server.faults.stall_s)  # type: ignore
+                self._gauge_release()
                 self.wfile.write(body[stall_at:limit])
                 self._account(limit - stall_at)
             else:
                 if stall_at is not None:
                     time.sleep(self.server.faults.stall_s)  # type: ignore
+                self._gauge_release()
                 self.wfile.write(body[:limit])
                 self._account(limit)
         if truncate_at is not None:
@@ -331,6 +353,14 @@ class RangeServer:
         self._srv.faults = faults                 # type: ignore[attr-defined]
         self._srv.fault_rng = random.Random(      # type: ignore[attr-defined]
             faults.seed if faults else 0)
+
+    def set_throttle(self, throttle: Optional[Throttle]) -> None:
+        """Swap the throttle at runtime (None = unthrottled) — the real-
+        socket mirror of ``ServerSpec.degrade_at``: each handler snapshots
+        the throttle per request, so an in-flight range finishes at the
+        old rate and every SUBSEQUENT range is served at the new one
+        (gray degradation, connection never breaks)."""
+        self._srv.throttle = throttle or Throttle()  # type: ignore[attr-defined]
 
     def add_blob(self, path: str, data: bytes) -> None:
         if not path.startswith("/"):
