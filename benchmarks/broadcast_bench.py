@@ -1,0 +1,167 @@
+"""Peer-assisted checkpoint broadcast: swarm vs N independent restores.
+
+The broadcast claim is that when N nodes restore the SAME checkpoint
+from one origin, mounting each restorer's filling buffer on a
+:class:`~repro.transfer.PeerMirror` turns the flash crowd into a swarm:
+peers fetch de-correlated stripes, advertise them, and serve each other,
+so the origin sends each byte roughly once instead of N times and the
+crowd's makespan stops scaling with N.  This bench measures that claim
+on real loopback sockets:
+
+``broadcast/independent/n4``
+    The baseline: N restorers each fetch the whole blob from the origin
+    alone.  The origin's deterministic token bucket is ``shared`` (one
+    uplink split across connections), so the crowd divides its capacity
+    and every restore takes ~N times the solo transfer.
+
+``broadcast/swarm/n4``
+    The same N restorers with peer mirrors: restorer ``j`` stripes its
+    frontier with ``stripe=(j, N)`` and lists the other restorers'
+    mirrors (each behind its own shared-uplink throttle equal to the
+    origin's) as partial replicas.  Coverage is polled every 10 ms.
+
+``broadcast/swarm/origin_x``
+    Origin egress amplification for the swarm run: bytes the origin
+    actually served over the blob size.  The CDTP-style dissemination
+    bound is ~1; N independent clients would pay N.
+
+``us_per_call`` is the crowd makespan (first arrival -> last completion)
+in microseconds; ``derived`` is that makespan in seconds (for
+``origin_x``: the egress ratio).  All throttles are deterministic, so
+rows are load-independent perf signal: ``benchmarks/run.py --check``
+guards them at 3x and additionally enforces the broadcast win-guard
+(swarm makespan <= independent makespan, origin egress <= 1.5x the blob
+at N=4; see ``_check_broadcast_wins``).  Rows land in
+``BENCH_online.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import hashlib
+import time
+
+import numpy as np
+
+from .common import emit  # noqa: F401  (also wires sys.path to src/)
+
+from repro.core.chunking import ChunkParams
+from repro.transfer import (BufferSink, MDTPClient, PeerMirror, RangeServer,
+                            Replica, Throttle)
+
+MB = 1024 * 1024
+
+#: every uplink (origin and each peer) paces at this rate, shared across
+#: its connections — low enough that the token buckets, not the Python
+#: event loop, are the bottleneck at loopback.
+RATE = 8 * MB
+#: swarm size the win-guard is stated at.
+N = 4
+#: mid-transfer peer exchange needs swarm-scale geometry: chunks small
+#: enough that no single origin grab outlives the peers' ramp-up (the
+#: defaults' 4 MiB probe would hand half the blob to every restorer
+#: before any mirror had bytes to trade — ``swarm_sweep`` tunes the
+#: same way).
+PARAMS = ChunkParams(initial_chunk=128 * 1024, large_chunk=256 * 1024,
+                     min_chunk=32 * 1024)
+COVERAGE_REFRESH_S = 0.01
+
+
+def _blob(size: int) -> bytes:
+    rng = np.random.default_rng(0)
+    return rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+
+
+def _throttle() -> Throttle:
+    return Throttle(bytes_per_s=RATE, shared=True, deterministic=True)
+
+
+def _origin(blob: bytes) -> RangeServer:
+    s = RangeServer(throttle=_throttle()).start()
+    s.add_blob("/data", blob)
+    return s
+
+
+def _client(replicas) -> MDTPClient:
+    return MDTPClient(replicas, params=PARAMS,
+                      coverage_refresh_s=COVERAGE_REFRESH_S)
+
+
+def _independent(blob: bytes, n: int) -> tuple[float, int]:
+    """n restorers, origin only.  Returns (makespan_s, origin_bytes)."""
+    origin = _origin(blob)
+    want = hashlib.sha256(blob).hexdigest()
+    try:
+        rep = Replica("127.0.0.1", origin.port, "/data")
+
+        async def one(j: int) -> None:
+            data, _ = await _client([rep]).fetch(len(blob))
+            assert hashlib.sha256(bytes(data)).hexdigest() == want, \
+                "integrity"
+
+        async def go() -> float:
+            t0 = time.perf_counter()
+            await asyncio.gather(*(one(j) for j in range(n)))
+            return time.perf_counter() - t0
+
+        wall = asyncio.run(go())
+        return wall, origin.served_bytes
+    finally:
+        origin.stop()
+
+
+def _swarm(blob: bytes, n: int) -> tuple[float, int, list[int]]:
+    """n restorers serving each other.  Returns (makespan_s,
+    origin_bytes, per-peer served bytes)."""
+    origin = _origin(blob)
+    want = hashlib.sha256(blob).hexdigest()
+    sinks = [BufferSink(len(blob)) for _ in range(n)]
+    mirrors = [PeerMirror(s, throttle=_throttle()) for s in sinks]
+    try:
+        rep = Replica("127.0.0.1", origin.port, "/data")
+
+        async def one(j: int) -> None:
+            replicas = [rep] + [m.replica for k, m in enumerate(mirrors)
+                                if k != j]
+            await _client(replicas).fetch(len(blob), sink=sinks[j],
+                                          stripe=(j, n))
+            assert hashlib.sha256(bytes(sinks[j])).hexdigest() == want, \
+                "integrity"
+
+        async def go() -> float:
+            t0 = time.perf_counter()
+            await asyncio.gather(*(one(j) for j in range(n)))
+            return time.perf_counter() - t0
+
+        wall = asyncio.run(go())
+        return wall, origin.served_bytes, [m.served_bytes for m in mirrors]
+    finally:
+        origin.stop()
+        for m in mirrors:
+            m.stop()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke sizes (CI check mode)")
+    args = ap.parse_args(argv)
+
+    size = 4 * MB if args.quick else 8 * MB
+    blob = _blob(size)
+
+    wall_i, origin_i = _independent(blob, N)
+    emit(f"broadcast/independent/n{N}", wall_i * 1e6, f"{wall_i:.2f}",
+         f"origin_x={origin_i / size:.2f}")
+
+    wall_s, origin_s, peers = _swarm(blob, N)
+    emit(f"broadcast/swarm/n{N}", wall_s * 1e6, f"{wall_s:.2f}",
+         f"origin_x={origin_s / size:.2f}",
+         f"peer_mb={sum(peers) / MB:.1f}")
+    emit("broadcast/swarm/origin_x", float(origin_s),
+         f"{origin_s / size:.3f}", f"blob_mb={size / MB:g}")
+
+
+if __name__ == "__main__":
+    main()

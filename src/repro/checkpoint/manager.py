@@ -34,17 +34,17 @@ import json
 import os
 import shutil
 import threading
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.transfer.client import MDTPClient, NoTelemetryError, Replica
-from repro.transfer.journal import ResumeJournal
+from repro.transfer.journal import ResumeJournal, claim_interval
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
-           "latest_step"]
+__all__ = ["CheckpointManager", "RestoreOptions", "save_checkpoint",
+           "restore_checkpoint", "latest_step"]
 
 _MANIFEST = "manifest.json"
 _DATA = "data.bin"
@@ -152,6 +152,7 @@ class _StreamingRestore:
         shard_leaves = (jax.tree_util.tree_leaves(shardings)
                         if shardings is not None else [None] * len(leaves))
         total = int(manifest["total_bytes"])
+        self.total_bytes = total
         self._mmap = None
         self._spool_file = None
         if spool_path is None or total == 0:
@@ -198,26 +199,19 @@ class _StreamingRestore:
 
     def _claim_new(self, start: int, end: int) -> list[tuple[int, int]]:
         """Merge ``[start, end)`` into the covered set; return only the
-        subspans that were not already covered (first-time bytes)."""
-        cov = self._covered
-        i = bisect.bisect_right(cov, (start,))
-        if i > 0 and cov[i - 1][1] >= start:
-            i -= 1
-        new = []
-        pos = start
-        ns, ne = start, end
-        j = i
-        while j < len(cov) and cov[j][0] <= end:
-            s, e = cov[j]
-            if pos < s:
-                new.append((pos, s))
-            pos = max(pos, e)
-            ns, ne = min(ns, s), max(ne, e)
-            j += 1
-        if pos < end:
-            new.append((pos, end))
-        cov[i:j] = [(ns, ne)]
-        return new
+        subspans that were not already covered (first-time bytes).  The
+        merge itself is ``journal.claim_interval`` — the same code that
+        backs the resume journal, so the peer-mirror advertisement
+        (:meth:`covered_intervals`) has exactly one source of truth."""
+        return claim_interval(self._covered, start, end)
+
+    def covered_intervals(self) -> list[tuple[int, int]]:
+        """Committed coverage as sorted disjoint ``(start, nbytes)`` pairs
+        — the :class:`repro.transfer.Sink` accessor a peer mirror
+        advertises over the wire.  Safe to call from server threads while
+        the restore is still streaming: the covered list only ever grows,
+        and each commit replaces it with a single atomic slice assign."""
+        return [(s, e - s) for s, e in list(self._covered)]
 
     def writable(self, start: int, length: int) -> memoryview:
         """Zero-copy destination for ``[start, start + length)``: the
@@ -355,16 +349,43 @@ def _finish_restore(stream: _StreamingRestore, jr, spool: Optional[str]):
     return state
 
 
+@dataclass(frozen=True)
+class RestoreOptions:
+    """Consolidated tail options for :func:`restore_checkpoint`.
+
+    Groups what used to be a growing tail of bare keyword arguments; the
+    bare kwargs still work (a compatibility shim folds them in, explicit
+    kwargs overriding the dataclass) so no existing caller changes.
+
+    ``mirror`` is the peer-assisted broadcast hook: a
+    ``repro.transfer.PeerMirror`` that is bound to the restore's
+    streaming sink as soon as the blob size is known — committed ranges
+    become servable to other restoring nodes while this restore is still
+    in flight.  For crash-resumable restores (``resume=``) the mirror is
+    unbound when the restore ends (the spool mmap dies with it);
+    in-memory restores keep serving until the caller stops the mirror.
+    """
+
+    tuner: Any = None
+    wave_bytes: Optional[int] = None
+    manager: Any = None
+    resume: Optional[str] = None
+    mirror: Any = None
+
+
 def restore_checkpoint(
     root: str,
     like: Any,
     step: Optional[int] = None,
     shardings: Optional[Any] = None,
     replicas: Optional[Sequence[Replica]] = None,
+    options: Optional[RestoreOptions] = None,
+    *,
     tuner: Any = None,
     wave_bytes: Optional[int] = None,
     manager: Any = None,
     resume: Optional[str] = None,
+    mirror: Any = None,
 ) -> tuple[Any, int]:
     """Restore (state, step).
 
@@ -413,7 +434,22 @@ def restore_checkpoint(
     spool, and fetches only what is missing — the mirrors serve the
     uncovered bytes, not the whole blob again.  On success both files
     are deleted (a completed restore has nothing to resume).
+
+    ``options`` (a :class:`RestoreOptions`) is the consolidated form of
+    the tail kwargs above plus ``mirror=`` — a
+    ``repro.transfer.PeerMirror`` that serves this restore's landed
+    ranges to other restoring nodes (peer-assisted broadcast).  Bare
+    kwargs keep working and override the dataclass field-for-field.
     """
+    opts = options if options is not None else RestoreOptions()
+    overrides = {k: v for k, v in {
+        "tuner": tuner, "wave_bytes": wave_bytes, "manager": manager,
+        "resume": resume, "mirror": mirror}.items() if v is not None}
+    if overrides:
+        opts = _dc_replace(opts, **overrides)
+    tuner, wave_bytes, manager = opts.tuner, opts.wave_bytes, opts.manager
+    resume, mirror = opts.resume, opts.mirror
+
     if step is None:
         step = latest_step(root)
         if step is None:
@@ -464,6 +500,10 @@ def restore_checkpoint(
                     total_bytes=total, meta={"step": int(step)})
             stream = _StreamingRestore(manifest, like, shardings,
                                        spool_path=spool)
+            if mirror is not None:
+                # peer-assisted broadcast: landed ranges become servable
+                # to other restorers while this restore is in flight
+                mirror.bind(stream, total)
             try:
                 return await _restore_waves(stream, jr, spool, total,
                                             dclient_factory=lambda: client_for(
@@ -477,6 +517,11 @@ def restore_checkpoint(
                 # re-run — same process or not — can resume cleanly
                 if jr is not None:
                     jr.close()
+                if mirror is not None and spool is not None:
+                    # the spool mmap dies with the restore — stop serving
+                    # from it before it is unmapped (in-memory restores
+                    # keep serving; their buffer outlives the call)
+                    mirror.unbind()
                 stream.close()
 
         async def _restore_waves(stream, jr, spool, total, dclient_factory):

@@ -58,6 +58,7 @@ __all__ = [
     "autotune_batch",
     "sweep_scenarios",
     "contention_sweep",
+    "swarm_sweep",
     "tune_chunk_params_grad",
 ]
 
@@ -386,6 +387,60 @@ def contention_sweep(
         loss_rate=loss_rate, corruption_rate=corruption_rate,
         hedge_quantile=hedge_quantile)
     return dict(zip(ks, results))
+
+
+def swarm_sweep(
+    file_size,
+    origin_bw: float,
+    peer_bw: float | None = None,
+    ns: Sequence[int] = (2, 4, 8),
+    onset: float = 1.0,
+    rtt=0.03,
+    grid: Sequence[tuple[int, int]] | None = None,
+    jitter: float = 0.0,
+    n_seeds: int = 1,
+    mode: str = "proportional",
+    engine: str | None = None,
+    pipeline_depth: int = 1,
+) -> dict[int, AutotuneResult]:
+    """Per-swarm-size chunk tuning for peer-assisted broadcast.
+
+    Scenario ``n`` is the fleet ONE of ``n`` restorers sees
+    (:func:`repro.core.scenarios.swarm_fleet`): the origin at a fair
+    ``1/n`` share of its fixed capacity plus ``n - 1`` peer mirrors that
+    come online mid-transfer — an UP-step throttle breakpoint (the
+    inverse of the Fig. 4 down-throttle) threaded through the same
+    round/scan cores via the ``throttle_t``/``throttle_bw`` axes.  The
+    result maps each swarm size to its tuned (C, L): the broadcast
+    mirror of :func:`contention_sweep`'s ladder, consumed the same way
+    (a restore fleet picks geometry for its swarm size instead of
+    re-using the one-client-K-fast-mirrors defaults, which oversize
+    chunks so badly the origin has served half the blob to everyone
+    before any peer can come online).
+
+    Unlike ``contention_sweep`` the scenario axis changes the server
+    COUNT, so each swarm size runs as its own fused grid x seed device
+    call instead of one batched lattice: vmap batching needs a fixed N,
+    and padding with permanently-dark servers would stall the
+    round-synchronous core's probe round for the pad's glacial chunk.
+    """
+    from .scenarios import swarm_axes, swarm_fleet
+
+    ns = sorted(set(int(n) for n in ns))
+    if not ns or ns[0] < 1:
+        raise ValueError(f"swarm sizes must be >= 1, got {ns}")
+    grid = list(grid or default_grid())
+    results: dict[int, AutotuneResult] = {}
+    for n in ns:
+        servers = swarm_fleet(n, origin_bw=origin_bw, peer_bw=peer_bw,
+                              onset=onset, rtt=rtt)
+        bw0, tt, tb = swarm_axes(servers)
+        results[n] = autotune_batch(
+            np.asarray([bw0]), rtt, file_size,
+            throttle_t=np.asarray([tt]), throttle_bw=np.asarray([tb]),
+            grid=grid, jitter=jitter, n_seeds=n_seeds, mode=mode,
+            engine=engine, pipeline_depth=pipeline_depth)[0]
+    return results
 
 
 # --------------------------------------------------------------------------

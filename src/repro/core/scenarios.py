@@ -46,6 +46,10 @@ __all__ = [
     "with_gray_degradation",
     "FlashCrowdTrace",
     "flash_crowd_traces",
+    "SwarmTrace",
+    "swarm_fleet",
+    "swarm_axes",
+    "swarm_traces",
 ]
 
 MBPS = 1024 * 1024  # we quote server rates in MiB/s
@@ -378,3 +382,107 @@ def with_throttled_fastest(
         else:
             out.append(s)
     return out
+
+
+# --------------------------------------------------------------------------
+# Peer-assisted broadcast (checkpoint-restore swarms)
+# --------------------------------------------------------------------------
+#
+# The real stack: N restoring nodes arrive together, each mounting its
+# filling buffer on a ``repro.transfer.PeerMirror`` and fetching from the
+# origin plus every other restorer's mirror (coverage-gated packing).
+# The simulator mirror below is the capacity view ONE such restorer sees:
+# the origin at a fair 1/n share of its fixed uplink, and each peer as a
+# mirror that starts DARK (a restoring node has nothing to serve yet) and
+# steps UP to a fair share of its uplink at a staggered onset — the
+# inverse of the Fig. 4 down-throttle, riding the same single-breakpoint
+# (bw0, throttle_t, bw1) axes of the jax round/scan cores.
+
+#: effectively-offline rate for a peer that hasn't come online yet: low
+#: enough to contribute nothing, high enough that its probe chunk's
+#: pre-onset crawl doesn't dominate a round (the onset step completes it).
+_DARK_BW = 1.0
+
+
+def swarm_fleet(n: int, origin_bw: float = 96 * MBPS,
+                peer_bw: float | None = None, onset: float = 1.0,
+                rtt: float = _DEFAULT_RTT) -> list[ServerSpec]:
+    """The fleet ONE of ``n`` broadcast restorers sees.
+
+    ``origin_bw`` is the origin's FIXED aggregate capacity — n restorers
+    arriving together split it n ways (TCP-fair), so the per-client
+    origin share shrinks as the swarm grows; that scarcity is exactly
+    what peer serving relieves.  Each of the other ``n - 1`` restorers
+    appears as a peer mirror: dark until ``onset`` scaled by a per-peer
+    stagger (ranges complete one restorer at a time, so peers come
+    online spread over [onset, 2*onset)), then serving a fair
+    ``1/(n - 1)`` share of its own uplink (``peer_bw``, default =
+    ``origin_bw``).  ``n = 1`` is the no-swarm baseline: the origin
+    alone at full rate.
+    """
+    if n < 1:
+        raise ValueError(f"swarm size must be >= 1, got {n}")
+    peer_bw = origin_bw if peer_bw is None else peer_bw
+    servers = [ServerSpec(name="origin", bandwidth=origin_bw / n, rtt=rtt,
+                          jitter=0.0)]
+    for k in range(n - 1):
+        stagger = onset * (1.0 + k / max(n - 1, 1))
+        servers.append(ServerSpec(
+            name=f"peer{k + 1}", bandwidth=_DARK_BW, rtt=rtt, jitter=0.0,
+            profile=((stagger, peer_bw / (n - 1)),)))
+    return servers
+
+
+def swarm_axes(servers: list[ServerSpec]) -> tuple[list, list, list]:
+    """``(bw0, throttle_t, throttle_bw)`` per-server axes for the jax
+    round/scan cores (their single-breakpoint throttle form).  Servers
+    without a profile keep their rate on both sides of an infinite
+    breakpoint; profiled servers contribute their first step — which for
+    a swarm peer is the UP-step onset."""
+    bw0, tt, tb = [], [], []
+    for s in servers:
+        bw0.append(float(s.bandwidth))
+        if s.profile:
+            t, b = s.profile[0]
+            tt.append(float(t))
+            tb.append(float(b))
+        else:
+            tt.append(float("inf"))
+            tb.append(float(s.bandwidth))
+    return bw0, tt, tb
+
+
+@dataclass(frozen=True)
+class SwarmTrace:
+    """One named broadcast regime: ``n`` restorers of a ``size``-byte
+    checkpoint on one fixed-capacity origin, as the per-client fleet
+    view of :func:`swarm_fleet`.  Deterministic (``jitter=0``) so the
+    event core and the round/scan cores (via :func:`swarm_axes`) replay
+    the identical capacity schedule."""
+
+    name: str
+    n: int
+    servers: tuple[ServerSpec, ...]
+    size: int
+
+
+def swarm_traces(rtt: float = _DEFAULT_RTT) -> list[SwarmTrace]:
+    """The three broadcast regimes the swarm suite exercises:
+
+    * ``pair`` — 2 restorers: the minimal swarm (one peer each); mostly
+      a sanity anchor, peer capacity equals origin capacity.
+    * ``quad`` — 4 restorers arriving together, early peer onset: the
+      real-socket benchmark's shape (``benchmarks/broadcast_bench.py``
+      runs this with actual ``PeerMirror`` fleets).
+    * ``cold-start`` — 8 restorers behind a LATE onset: the origin-bound
+      opening phase dominates, the regime where striped first-fetches
+      (de-correlating what each node asks the origin for) matter most.
+    """
+    return [
+        SwarmTrace("pair", 2,
+                   tuple(swarm_fleet(2, onset=0.5, rtt=rtt)), GB),
+        SwarmTrace("quad", 4,
+                   tuple(swarm_fleet(4, onset=0.5, rtt=rtt)), GB),
+        SwarmTrace("cold-start", 8,
+                   tuple(swarm_fleet(8, onset=4.0, rtt=rtt)), GB),
+    ]

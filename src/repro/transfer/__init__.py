@@ -1,15 +1,21 @@
 """Real asyncio transfer runtime: MDTP client + range-serving HTTP server
 plus the fleet-level multi-transfer scheduler, end-to-end integrity
-(per-range CRC32 verification), crash-resume journaling, and a
-fault-injecting chaos harness."""
+(per-range CRC32 verification), crash-resume journaling, a
+fault-injecting chaos harness, and peer-assisted broadcast (restoring
+nodes re-serve what they have via :class:`PeerMirror`)."""
 
-from .client import (MDTPClient, Replica, TransferIncompleteError,
-                     TransferReport, fetch_blob)
-from .journal import ResumeJournal
+from .client import (ClientOptions, MDTPClient, Replica,
+                     TransferIncompleteError, TransferReport, fetch_blob)
+from .journal import (ResumeJournal, claim_interval, merge_intervals,
+                      uncovered_intervals)
 from .manager import FleetModel, TransferJob, TransferManager
+from .mirror import PeerMirror
 from .server import FaultPolicy, RangeServer, Throttle
+from .sink import BufferSink, CallableSink, Sink
 
-__all__ = ["MDTPClient", "Replica", "TransferReport",
+__all__ = ["MDTPClient", "ClientOptions", "Replica", "TransferReport",
            "TransferIncompleteError", "fetch_blob", "ResumeJournal",
+           "claim_interval", "merge_intervals", "uncovered_intervals",
            "FleetModel", "TransferJob", "TransferManager",
-           "RangeServer", "Throttle", "FaultPolicy"]
+           "RangeServer", "Throttle", "FaultPolicy",
+           "PeerMirror", "Sink", "BufferSink", "CallableSink"]

@@ -53,22 +53,23 @@ mirrors).
 from __future__ import annotations
 
 import asyncio
+import bisect
 import contextlib
 import heapq
 import random
 import socket
 import time
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import NamedTuple, Optional, Sequence
 
 from repro.core.chunking import ChunkParams, default_chunk_params, next_chunk_size
 from repro.core.throughput import make_estimator, rtt_corrected_bandwidth
 from repro.transfer.journal import merge_intervals, uncovered_intervals
 
-__all__ = ["Replica", "TransferReport", "MDTPClient", "NoTelemetryError",
-           "TransferIncompleteError", "fetch_blob", "wire_elapsed",
-           "DEFAULT_PIPELINE_DEPTH"]
+__all__ = ["Replica", "ClientOptions", "TransferReport", "MDTPClient",
+           "NoTelemetryError", "TransferIncompleteError", "fetch_blob",
+           "wire_elapsed", "DEFAULT_PIPELINE_DEPTH"]
 
 #: default per-connection request pipeline depth.  2 keeps a request on
 #: the wire while the previous body streams (the RTT-hiding that matters)
@@ -128,10 +129,148 @@ class Replica:
     host: str
     port: int
     path: str              # HTTP path of the blob on this mirror
+    #: True = a PARTIAL peer mirror (a restoring node serving what it has
+    #: so far): the client queries its ``X-Available-Ranges`` coverage,
+    #: keeps refreshing it in the background, and only packs chunks the
+    #: peer actually holds.  False (default) = an ordinary full mirror.
+    mirror: bool = False
 
     @property
     def name(self) -> str:
         return f"{self.host}:{self.port}"
+
+
+@dataclass(frozen=True)
+class ClientOptions:
+    """Consolidated :class:`MDTPClient` configuration.
+
+    What used to be 15 bare constructor kwargs, grouped by concern.  The
+    bare kwargs still work (``MDTPClient(reps, pipeline_depth=3)`` —
+    they are folded into an options instance, overriding it field by
+    field), so existing call sites don't change; new code should prefer
+    ``MDTPClient(reps, options=ClientOptions(...))``.
+    """
+
+    # -- allocation & estimation ------------------------------------------
+    #: chunk geometry; None = size-derived defaults per fetch.
+    params: Optional[ChunkParams] = None
+    #: throughput estimator kind (``repro.core.throughput``).
+    estimator: str = "ewma"
+    ewma_alpha: float = 0.5
+    #: default online tuner (``repro.core.online`` contract: an object
+    #: with ``update(telemetry) -> ChunkParams | None``) applied to every
+    #: ``fetch`` unless overridden per call.
+    tuner: object = None
+
+    # -- pipeline / zero-copy data plane ----------------------------------
+    #: concurrent pipelined requests per replica connection (>= 1;
+    #: 1 = the serial request-response data plane).
+    pipeline_depth: int = DEFAULT_PIPELINE_DEPTH
+    #: False = legacy copy path (bodies materialize as ``bytes`` and are
+    #: copied into place) — kept as the benchmark baseline and an escape
+    #: hatch; the default receives into the destination buffer.
+    zero_copy: bool = True
+    #: emulated request-path delay per request (see ``_Conn``).
+    request_latency: float = 0.0
+
+    # -- integrity / retry / timeout --------------------------------------
+    #: verify each range's CRC32 against the server's
+    #: ``X-Range-Checksum`` header and re-fetch mismatches from an
+    #: alternate mirror.  Servers that don't send the header are simply
+    #: not verified (no error).
+    verify_integrity: bool = True
+    #: seconds before retrying a failed replica (0 = retire immediately).
+    retry_after: float = 0.0
+    #: connection/corruption failures before a replica is retired.
+    max_failures: int = 3
+    #: per-read inactivity timeout (seconds; 0 disables) applied to every
+    #: connection — see ``_Conn.read_timeout``.
+    read_timeout: float = 30.0
+    #: ceiling (seconds) on the exponential dead-replica retry backoff:
+    #: attempt k waits ``min(retry_after * 2**(k-1), cap)`` scaled by
+    #: ±50% jitter so reconnect storms decorrelate.
+    retry_backoff_cap: float = 5.0
+
+    # -- endgame hedging ---------------------------------------------------
+    #: straggler quantile for speculative endgame duplicates (0 disables;
+    #: see the ``MDTPClient`` docs for the full trigger conditions).
+    hedge_quantile: float = 0.0
+    #: hard cap on hedge waste as a fraction of the transfer size.
+    hedge_waste_frac: float = 0.05
+
+    # -- peer mirrors ------------------------------------------------------
+    #: background coverage-refresh cadence (seconds) for partial peer
+    #: replicas (``Replica.mirror``): how often each peer's
+    #: ``X-Available-Ranges`` is re-queried during a fetch.
+    coverage_refresh_s: float = 0.05
+
+    # -- misc --------------------------------------------------------------
+    #: randomness source for reconnect-backoff jitter — pass a seeded
+    #: ``random.Random`` to make chaos-test retry timing reproducible;
+    #: None = the module-global generator.
+    rng: Optional[random.Random] = None
+
+
+# -- coverage-interval helpers (sorted disjoint [s, e) lists) -------------
+
+def _cov_run_at(cov: list, p: int) -> int:
+    """Index of the covered run containing point ``p``, else -1."""
+    k = bisect.bisect_right(cov, (p, 1 << 62)) - 1
+    if k >= 0 and cov[k][1] > p:
+        return k
+    return -1
+
+
+def _cov_contains(cov: list, lo: int, hi: int) -> bool:
+    """``[lo, hi)`` entirely inside one covered run?  (Empty spans are
+    trivially covered.)"""
+    if hi <= lo:
+        return True
+    k = _cov_run_at(cov, lo)
+    return k >= 0 and cov[k][1] >= hi
+
+
+def _cov_first_in(cov: list, lo: int, hi: int):
+    """First covered sub-span of ``[lo, hi)`` as ``(start, end)``, or
+    None when the window touches no coverage."""
+    if hi <= lo:
+        return None
+    k = _cov_run_at(cov, lo)
+    if k >= 0:
+        return lo, min(cov[k][1], hi)
+    k = bisect.bisect_right(cov, (lo, 1 << 62))
+    if k < len(cov) and cov[k][0] < hi:
+        return cov[k][0], min(cov[k][1], hi)
+    return None
+
+
+def _cov_first_out(cov: list, lo: int, hi: int):
+    """First UNcovered sub-span of ``[lo, hi)`` as ``(start, end)``, or
+    None when the window is fully covered."""
+    if hi <= lo:
+        return None
+    pos = lo
+    k = _cov_run_at(cov, lo)
+    if k >= 0:
+        pos = cov[k][1]
+        if pos >= hi:
+            return None
+    k = bisect.bisect_right(cov, (pos, 1 << 62))
+    end = cov[k][0] if k < len(cov) and cov[k][0] < hi else hi
+    return pos, end
+
+
+def _parse_ranges_header(raw: str) -> list:
+    """``X-Available-Ranges`` value -> list of inclusive ``(lo, hi)``
+    pairs (empty list for an empty advertisement)."""
+    out = []
+    for part in raw.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        lo_s, _, hi_s = part.partition("-")
+        out.append((int(lo_s), int(hi_s)))
+    return out
 
 
 @dataclass
@@ -536,52 +675,40 @@ class MDTPClient:
         self,
         replicas: Sequence[Replica],
         params: Optional[ChunkParams] = None,
-        estimator: str = "ewma",
-        ewma_alpha: float = 0.5,
-        retry_after: float = 0.0,
-        max_failures: int = 3,
-        tuner=None,
-        pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
-        zero_copy: bool = True,
-        request_latency: float = 0.0,
-        verify_integrity: bool = True,
-        read_timeout: float = 30.0,
-        retry_backoff_cap: float = 5.0,
-        hedge_quantile: float = 0.0,
-        hedge_waste_frac: float = 0.05,
-        rng: Optional[random.Random] = None,
+        options: Optional[ClientOptions] = None,
+        **kw,
     ):
+        """``options`` is the consolidated configuration
+        (:class:`ClientOptions`, grouped and documented there); any bare
+        keyword from the historical 15-kwarg constructor is still
+        accepted and overrides the corresponding options field — the
+        compatibility shim that keeps every existing call site (and the
+        fleet manager's ``**client_kw`` forwarding) working unchanged.
+        An unknown keyword raises ``TypeError`` exactly as before."""
+        if options is None:
+            try:
+                options = ClientOptions(**kw)
+            except TypeError as e:
+                raise TypeError(f"MDTPClient: {e}") from None
+        elif kw:
+            options = _dc_replace(options, **kw)
+        if params is not None:
+            options = _dc_replace(options, params=params)
+        #: the resolved configuration (read-only snapshot).
+        self.options = options
         self.replicas = list(replicas)
-        self._params_arg = params
-        self._estimator = estimator
-        self._alpha = ewma_alpha
-        self.retry_after = retry_after
-        self.max_failures = max_failures
-        #: default online tuner (``repro.core.online`` contract: an object
-        #: with ``update(telemetry) -> ChunkParams | None``) applied to
-        #: every ``fetch`` unless overridden per call.
-        self.tuner = tuner
-        #: concurrent pipelined requests per replica connection (>= 1;
-        #: 1 = the serial request-response data plane).
-        self.pipeline_depth = max(int(pipeline_depth), 1)
-        #: False = legacy copy path (bodies materialize as ``bytes`` and
-        #: are copied into place) — kept as the benchmark baseline and an
-        #: escape hatch; the default receives into the destination buffer.
-        self.zero_copy = zero_copy
-        #: emulated request-path delay per request (see ``_Conn``).
-        self.request_latency = request_latency
-        #: verify each range's CRC32 against the server's
-        #: ``X-Range-Checksum`` header and re-fetch mismatches from an
-        #: alternate mirror.  On by default; servers that don't send the
-        #: header are simply not verified (no error).
-        self.verify_integrity = verify_integrity
-        #: per-read inactivity timeout (seconds; 0 disables) applied to
-        #: every connection — see ``_Conn.read_timeout``.
-        self.read_timeout = read_timeout
-        #: ceiling (seconds) on the exponential dead-replica retry
-        #: backoff: attempt k waits ``min(retry_after * 2**(k-1), cap)``
-        #: scaled by ±50% jitter so reconnect storms decorrelate.
-        self.retry_backoff_cap = retry_backoff_cap
+        self._params_arg = options.params
+        self._estimator = options.estimator
+        self._alpha = options.ewma_alpha
+        self.retry_after = options.retry_after
+        self.max_failures = options.max_failures
+        self.tuner = options.tuner
+        self.pipeline_depth = max(int(options.pipeline_depth), 1)
+        self.zero_copy = options.zero_copy
+        self.request_latency = options.request_latency
+        self.verify_integrity = options.verify_integrity
+        self.read_timeout = options.read_timeout
+        self.retry_backoff_cap = options.retry_backoff_cap
         #: endgame hedging (0 disables): once the residual drops below
         #: ~2 allocator rounds, an idle lane speculatively duplicates an
         #: in-flight range whose owner's per-byte latency EWMA sits at or
@@ -594,18 +721,16 @@ class MDTPClient:
         #: in-memory (``sink=None``): hedge bodies land in private
         #: scratch, never the destination, so a losing or corrupt copy
         #: cannot touch committed bytes.
-        self.hedge_quantile = float(hedge_quantile)
+        self.hedge_quantile = float(options.hedge_quantile)
         #: hard cap on hedge waste as a fraction of the transfer size: a
         #: hedge is only issued while committed waste plus every
         #: in-flight hedge's reserved length stays under this budget —
         #: each race can waste at most its own range, whichever side
         #: loses, so ``hedge_wasted_bytes <= hedge_waste_frac * size``
         #: holds by construction.
-        self.hedge_waste_frac = float(hedge_waste_frac)
-        #: randomness source for reconnect-backoff jitter — pass a seeded
-        #: ``random.Random`` to make chaos-test retry timing fully
-        #: reproducible; defaults to the module-global generator.
-        self._rng = rng if rng is not None else random
+        self.hedge_waste_frac = float(options.hedge_waste_frac)
+        self.coverage_refresh_s = float(options.coverage_refresh_s)
+        self._rng = options.rng if options.rng is not None else random
         #: report of the most recent ``fetch`` (None before the first one).
         self.last_report: Optional[TransferReport] = None
 
@@ -716,6 +841,7 @@ class MDTPClient:
     async def fetch(self, size: int, sink=None, *, offset: int = 0,
                     tuner=None, tune_interval_bytes: Optional[int] = None,
                     resume=None, into: Optional[bytearray] = None,
+                    stripe: Optional[tuple] = None,
                     ) -> tuple[Optional[bytearray], TransferReport]:
         """Fetch ``size`` bytes.  ``sink`` (if given) receives ranges as
         they land — see the module docstring for the two sink protocols
@@ -727,7 +853,7 @@ class MDTPClient:
 
         ``offset`` shifts every byte-range request (and the ``sink`` start
         offsets) by a constant — a wave of a larger blob fetches
-        ``[offset, offset + size)`` while the internal cursor/pool stay
+        ``[offset, offset + size)`` while the internal frontier/pool stay
         0-based (the checkpoint-restore wave loop uses this).
 
         ``resume`` (a :class:`~repro.transfer.journal.ResumeJournal`)
@@ -754,6 +880,24 @@ class MDTPClient:
         most one update is in flight at a time.  Adopted params persist on
         the client for subsequent transfers, and ``report.retunes`` counts
         the adoptions.
+
+        ``stripe=(k, n)`` rotates the fresh-byte frontier to start at
+        ``size * k // n`` (wrapping) instead of 0.  In a swarm of ``n``
+        restorers this de-correlates what each node fetches FIRST, so
+        peers become useful sources for each other almost immediately —
+        everyone starting at byte 0 would race the origin for the same
+        prefix and have nothing to trade.  Purely an ordering hint:
+        every byte is still fetched exactly once.
+
+        Replicas flagged ``mirror=True`` are PARTIAL peer mirrors: their
+        advertised coverage (``X-Available-Ranges``) is polled in the
+        background every ``coverage_refresh_s`` and chunks are packed
+        onto a peer only when its advertisement covers them; full
+        replicas meanwhile prefer spans no live peer holds yet (origin
+        offload).  A fetch whose only surviving sources are partial
+        mirrors that cannot cover the remaining bytes gives up with
+        :class:`TransferIncompleteError` once their joint coverage has
+        been static for a patience window, instead of waiting forever.
         """
         params_box = [self._params_arg or default_chunk_params(size)]
         n = len(self.replicas)
@@ -785,7 +929,19 @@ class MDTPClient:
         journal = resume
         need_crc = verify or journal is not None
 
-        cursor = 0
+        # the fresh-byte frontier: never-assigned spans as ordered
+        # (start, end) segments.  The classic single ``cursor`` is the
+        # one-segment case [(0, size)]; ``stripe=(k, n)`` rotates the
+        # walk to start at size*k//n (two segments, wrapping).  ``fresh``
+        # mirrors the segments' byte total so the hot remaining-work
+        # check stays O(1).
+        segs: list = [(0, size)] if size > 0 else []
+        if stripe is not None and size > 0:
+            k_, n_ = stripe
+            p = (size * (k_ % max(int(n_), 1))) // max(int(n_), 1)
+            if 0 < p < size:
+                segs = [(p, size), (0, p)]
+        fresh = sum(e_ - s_ for s_, e_ in segs)
         # reclaimed (start, len, banned) min-heap keyed on range start
         # (ranges never overlap, so comparisons never reach the
         # non-orderable ban set); ``banned`` is the frozenset of replica
@@ -806,6 +962,37 @@ class MDTPClient:
         #: wakeup both key off this.
         alive: set = set(range(n))
         refetched = 0
+        # -- partial-mirror coverage (``Replica.mirror``) ------------------
+        #: replica index -> advertised coverage as window-relative sorted
+        #: disjoint (start, end) runs; None = full replica (everything).
+        #: Starts EMPTY for mirrors — nothing is packed onto a peer until
+        #: its first advertisement arrives.
+        avail: list = [([] if r.mirror else None) for r in self.replicas]
+        partial_idx = [j for j, r in enumerate(self.replicas) if r.mirror]
+        #: union of all LIVE peers' coverage (same run form) — what the
+        #: origin-offload pass steers full replicas away from.
+        cov_union: list = []
+        #: monotonic stamp of the last coverage CHANGE; the give-up rule
+        #: for uncoverable work keys off how long it has been static.
+        cov_stamp = [time.monotonic()]
+        refresh_s = max(float(self.coverage_refresh_s), 0.005)
+        cov_patience = max(1.0, 10.0 * refresh_s)
+
+        def _recompute_union() -> None:
+            runs = []
+            for j in partial_idx:
+                if j in alive:
+                    runs.extend(avail[j])
+            runs.sort()
+            merged: list = []
+            for s_, e_ in runs:
+                if merged and s_ <= merged[-1][1]:
+                    if e_ > merged[-1][1]:
+                        merged[-1] = (merged[-1][0], e_)
+                else:
+                    merged.append((s_, e_))
+            cov_union[:] = merged
+
         lock = asyncio.Lock()
         #: signalled whenever reclaimed work appears or in-flight bytes
         #: drain to zero — a lane with nothing to draw parks here instead
@@ -846,7 +1033,8 @@ class MDTPClient:
             for s_, n_ in uncovered_intervals(covered, size):
                 heapq.heappush(pool, (s_, n_, frozenset()))
                 pooled += n_
-            cursor = size            # all remaining work lives in the pool
+            segs.clear()             # all remaining work lives in the pool
+            fresh = 0
             resumed_bytes = size - pooled
             done_bytes = resumed_bytes
             if sink_commit is not None:
@@ -1035,7 +1223,7 @@ class MDTPClient:
                 return None
             # endgame window: residual below ~2 allocator rounds (upper
             # bound — L per live replica is one full round's share)
-            if (size - cursor) + pooled + inflight > \
+            if fresh + pooled + inflight > \
                     2 * params_box[0].large_chunk * max(len(alive), 1):
                 return None
             if lat_ewma[j] <= 0.0:
@@ -1064,6 +1252,11 @@ class MDTPClient:
                     outstanding.items():
                 if owner == j or s_ in hedged or s_ in settled \
                         or j in ban_ or (ln_ > budget and not first_free):
+                    continue
+                if avail[j] is not None and \
+                        not _cov_contains(avail[j], s_, s_ + ln_):
+                    # a partial mirror may only duplicate ranges its
+                    # advertisement covers in full
                     continue
                 if 2 * prog_[0] > ln_:
                     # the owner already landed most of the body: cancel-
@@ -1163,20 +1356,200 @@ class MDTPClient:
                 hedge_broke.add(doomed[1])
                 doomed[2].abort()
 
+        def _capable(j: int, s_: int, ln_: int) -> bool:
+            """Could replica ``j`` serve any part of ``[s_, s_+ln_)``?
+            Full replicas always can; a partial mirror only when its
+            advertisement intersects the span."""
+            cov_j = avail[j]
+            return cov_j is None or \
+                _cov_first_in(cov_j, s_, s_ + ln_) is not None
+
+        def _ban_ok(i: int, s_: int, ln_: int, ban_: frozenset) -> bool:
+            """May replica ``i`` take an entry tagged ``ban_``?  A banned
+            replica stands aside while any OTHER live replica that can
+            actually cover the span remains unbanned; once none does,
+            anyone may retry (the re-verify catches a repeat corruption;
+            refusing would deadlock the tail)."""
+            if i not in ban_:
+                return True
+            return not any(j not in ban_ and _capable(j, s_, ln_)
+                           for j in alive)
+
         def _pick_pool_entry(i: int) -> Optional[int]:
             """Index of the lowest-start pool entry replica ``i`` may
-            take: any entry it isn't banned from — or, if every LIVE
-            replica is banned from an entry, anyone may retry it (the
-            re-verify catches a repeat corruption; refusing would
-            deadlock the tail).  Linear scan: the pool holds reclaimed
-            ranges only, a handful at worst."""
+            take (see ``_ban_ok``).  Linear scan: the pool holds
+            reclaimed ranges only, a handful at worst."""
             best = None
-            for k, (s_, _ln, ban_) in enumerate(pool):
-                if i in ban_ and not alive <= ban_:
+            for k, (s_, ln_, ban_) in enumerate(pool):
+                if not _ban_ok(i, s_, ln_, ban_):
                     continue
                 if best is None or s_ < pool[best][0]:
                     best = k
             return best
+
+        def _take_pool(k: int, at: int, take: int) -> None:
+            """Claim ``[at, at+take)`` out of pool entry ``k`` (under the
+            lock): un-taken prefix/suffix pieces keep the entry's ban
+            tag and return to the heap."""
+            nonlocal pooled
+            s_, ln_, ban_ = pool.pop(k)
+            if at > s_:
+                pool.append((s_, at - s_, ban_))
+            tail = (s_ + ln_) - (at + take)
+            if tail > 0:
+                pool.append((at + take, tail, ban_))
+            heapq.heapify(pool)
+            pooled -= take
+
+        def _take_seg(si: int, at: int, take: int) -> None:
+            """Claim ``[at, at+take)`` out of frontier segment ``si``
+            (under the lock)."""
+            nonlocal fresh
+            s_, e_ = segs[si]
+            if at == s_ and at + take == e_:
+                del segs[si]
+            elif at == s_:
+                segs[si] = (at + take, e_)
+            elif at + take == e_:
+                segs[si] = (s_, at)
+            else:
+                segs[si:si + 1] = [(s_, at), (at + take, e_)]
+            fresh -= take
+
+        def _origin_restricted() -> bool:
+            """Should full replicas keep their hands off peer-covered
+            spans right now (under the lock)?  True while live peers
+            advertise coverage AND the transfer is not in its endgame:
+            every peer-covered byte the origin re-serves is egress the
+            whole swarm pays for (the broadcast win is origin egress
+            ~one copy of the blob), so outside the endgame the origin
+            serves only bytes NO peer holds.  In the endgame (residual
+            below ~2 allocator rounds) the origin rejoins freely — an
+            idle origin must not stretch the tail."""
+            if not cov_union:
+                return False
+            return fresh + pooled + inflight > \
+                2 * params_box[0].large_chunk * max(len(alive), 1)
+
+        def _can_draw(i: int) -> bool:
+            """Is there ANY remaining span replica ``i`` may serve right
+            now (under the lock)?  The park/draw gate: full replicas can
+            take fresh bytes or any un-banned pool entry (uncovered-only
+            while ``_origin_restricted``); a partial mirror needs its
+            advertisement to intersect something."""
+            cov = avail[i]
+            if cov is None:
+                if _origin_restricted():
+                    for s_, ln_, ban_ in pool:
+                        if _ban_ok(i, s_, ln_, ban_) and _cov_first_out(
+                                cov_union, s_, s_ + ln_) is not None:
+                            return True
+                    return any(_cov_first_out(cov_union, s_, e_) is not None
+                               for s_, e_ in segs)
+                return fresh > 0 or (bool(pool)
+                                     and _pick_pool_entry(i) is not None)
+            if not cov:
+                return False
+            for s_, ln_, ban_ in pool:
+                if _ban_ok(i, s_, ln_, ban_) \
+                        and _cov_first_in(cov, s_, s_ + ln_) is not None:
+                    return True
+            return any(_cov_first_in(cov, s_, e_) is not None
+                       for s_, e_ in segs)
+
+        def _hopeless() -> bool:
+            """Give-up rule (under the lock): every surviving source is
+            a partial mirror, their joint coverage has been static for a
+            patience window, and some remaining span lies outside it —
+            those bytes can never arrive, so lanes should exit and let
+            ``fetch`` raise instead of parking forever.  While any full
+            replica survives (or coverage is still growing) this stays
+            False."""
+            if inflight > 0 or not partial_idx:
+                return False
+            if any(avail[j] is None for j in alive):
+                return False
+            if time.monotonic() - cov_stamp[0] < cov_patience:
+                return False
+            for s_, ln_, _b in pool:
+                if not _cov_contains(cov_union, s_, s_ + ln_):
+                    return True
+            return any(not _cov_contains(cov_union, s_, e_)
+                       for s_, e_ in segs)
+
+        def _draw(i: int, want: int):
+            """Pick and claim the next sub-range for replica ``i``
+            (under the lock): ``(start, length, ban)`` or None when
+            nothing it may serve is available right now.
+
+            Full replicas: while live peers advertise coverage, prefer
+            spans NO peer holds yet — every byte the swarm can trade
+            internally is a byte the origin never re-serves, which is
+            what bends origin egress toward one copy of the blob
+            (origin offload).  With no peer coverage in play this
+            reduces exactly to the classic packing: reclaimed pool
+            work first (lowest start), then the fresh frontier's head.
+            Partial mirrors: only spans their advertisement covers."""
+            cov = avail[i]
+            if cov is None:
+                if cov_union:
+                    best = None
+                    for k, (s_, ln_, ban_) in enumerate(pool):
+                        if not _ban_ok(i, s_, ln_, ban_):
+                            continue
+                        got = _cov_first_out(cov_union, s_, s_ + ln_)
+                        if got is not None and (best is None
+                                                or got[0] < best[0]):
+                            best = (got[0], got[1], k, ban_)
+                    if best is not None:
+                        at, end_, k, ban_ = best
+                        take = min(end_ - at, want)
+                        _take_pool(k, at, take)
+                        return at, take, ban_
+                    for si, (s_, e_) in enumerate(segs):
+                        got = _cov_first_out(cov_union, s_, e_)
+                        if got is not None:
+                            at, end_ = got
+                            take = min(end_ - at, want)
+                            _take_seg(si, at, take)
+                            return at, take, frozenset()
+                    if _origin_restricted():
+                        # everything left is peer-covered and the
+                        # transfer isn't in its endgame: leave it to the
+                        # peers (see ``_origin_restricted``)
+                        return None
+                pick = _pick_pool_entry(i) if pool else None
+                if pick is not None:
+                    s_, ln_, ban_ = pool[pick]
+                    take = min(ln_, want)
+                    _take_pool(pick, s_, take)
+                    return s_, take, ban_
+                if segs:
+                    s_, e_ = segs[0]
+                    take = min(want, e_ - s_)
+                    _take_seg(0, s_, take)
+                    return s_, take, frozenset()
+                return None
+            best = None
+            for k, (s_, ln_, ban_) in enumerate(pool):
+                if not _ban_ok(i, s_, ln_, ban_):
+                    continue
+                got = _cov_first_in(cov, s_, s_ + ln_)
+                if got is not None and (best is None or got[0] < best[0]):
+                    best = (got[0], got[1], k, ban_)
+            if best is not None:
+                at, end_, k, ban_ = best
+                take = min(end_ - at, want)
+                _take_pool(k, at, take)
+                return at, take, ban_
+            for si, (s_, e_) in enumerate(segs):
+                got = _cov_first_in(cov, s_, e_)
+                if got is not None:
+                    at, end_ = got
+                    take = min(end_ - at, want)
+                    _take_seg(si, at, take)
+                    return at, take, frozenset()
+            return None
 
         async def hedge_fetch(j: int, conn: "_Conn", start: int,
                               length: int, owner: int,
@@ -1292,19 +1665,24 @@ class MDTPClient:
             owed range is already back in the pool), ``"corrupt-dead"``
             when this replica crossed the corruption cap and was
             retired."""
-            nonlocal cursor, inflight, pooled, done_bytes, refetched
+            nonlocal inflight, pooled, done_bytes, refetched
             nonlocal hedges_issued, hedge_wasted
             name = self.replicas[i].name
 
             async def _park() -> None:
-                """Wait for pool/in-flight changes; with hedging on, wake
-                periodically anyway — a grayed-out straggler generates no
-                events, so only a poll can spot its aging range."""
-                if not hedge_q:
+                """Wait for pool/in-flight changes; with hedging on (or
+                partial mirrors in play) wake periodically anyway — a
+                grayed-out straggler generates no events, and a peer
+                whose coverage went static fires no notifications either,
+                so only a poll can spot an aging range or conclude the
+                remaining work is uncoverable."""
+                if not hedge_q and not partial_idx:
                     await cond.wait()
                     return
                 with contextlib.suppress(asyncio.TimeoutError):
-                    await asyncio.wait_for(cond.wait(), _HEDGE_POLL_S)
+                    await asyncio.wait_for(
+                        cond.wait(),
+                        _HEDGE_POLL_S if hedge_q else refresh_s)
 
             while True:
                 if conn.broken:
@@ -1320,7 +1698,7 @@ class MDTPClient:
                             # bounce back (and spuriously count as
                             # refetched)
                             return "broken"
-                        remaining = (size - cursor) + pooled
+                        remaining = fresh + pooled
                         if remaining <= 0:
                             if inflight <= 0:
                                 return "done"
@@ -1329,12 +1707,18 @@ class MDTPClient:
                                 break
                             await _park()
                             continue
-                        pick = _pick_pool_entry(i) if pool else None
-                        if pick is None and cursor >= size:
-                            # every pooled range is tagged away from this
-                            # replica and another live replica can take
-                            # it — park until the pool changes (or hedge
-                            # a straggler meanwhile)
+                        if not _can_draw(i):
+                            # nothing this replica may serve right now:
+                            # every pooled range is tagged away from it
+                            # (and another capable replica can take it),
+                            # or it's a partial mirror whose advertised
+                            # coverage misses all remaining spans — park
+                            # until the pool or an advertisement changes
+                            # (or hedge a straggler meanwhile)... unless
+                            # no possible source for the rest remains.
+                            if _hopeless():
+                                cond.notify_all()
+                                return "done"
                             hedge = _pick_hedge(i)
                             if hedge is not None:
                                 break
@@ -1354,11 +1738,10 @@ class MDTPClient:
                 async with lock:
                     if conn.broken:
                         return "broken"
-                    remaining = (size - cursor) + pooled
+                    remaining = fresh + pooled
                     if remaining <= 0:
                         continue
-                    pick = _pick_pool_entry(i) if pool else None
-                    if pick is None and cursor >= size:
+                    if not _can_draw(i):
                         continue
                     want = next_chunk_size(
                         i,
@@ -1387,32 +1770,12 @@ class MDTPClient:
                                    want, remaining)
                         want = min(want, max(remaining // (2 * depth),
                                              params_box[0].min_chunk))
-                    if pick is not None:
-                        s, ln, ban = pool[pick]
-                        take = min(ln, want)
-                        if pick == 0:
-                            if take == ln:
-                                heapq.heappop(pool)
-                            else:
-                                # shrunk head keeps its heap position
-                                heapq.heapreplace(
-                                    pool, (s + take, ln - take, ban))
-                        else:
-                            # non-head draw (ban-skip path): ranges are
-                            # disjoint, so a start that only grows within
-                            # its own range keeps the heap order
-                            if take == ln:
-                                pool.pop(pick)
-                                heapq.heapify(pool)
-                            else:
-                                pool[pick] = (s + take, ln - take, ban)
-                        pooled -= take
-                    else:
-                        take = min(want, size - cursor)
-                        s = cursor
-                        cursor += take
-                        ban = frozenset()
-                    start, length = s, take
+                    drawn = _draw(i, want)
+                    if drawn is None:
+                        # the pool/advertisement shifted between the two
+                        # lock sections — go around and re-evaluate
+                        continue
+                    start, length, ban = drawn
                     inflight += length
                     prog = [0, 0.0]
                     if hedge_q:
@@ -1608,7 +1971,7 @@ class MDTPClient:
             try:
                 while True:
                     async with lock:
-                        if (size - cursor) + pooled <= 0 and inflight <= 0:
+                        if fresh + pooled <= 0 and inflight <= 0:
                             return
                     conn = self._make_conn(self.replicas[i])
                     conn_of[i] = conn
@@ -1660,10 +2023,64 @@ class MDTPClient:
                 # (see ``alive``) — they must recheck when it shrinks
                 async with lock:
                     alive.discard(i)
+                    if avail[i] is not None:
+                        # a dead peer's advertisement no longer counts:
+                        # drop it from the union so its exclusive spans
+                        # re-open to full replicas (the death-fallback)
+                        avail[i] = []
+                        _recompute_union()
+                        cov_stamp[0] = time.monotonic()
                     cond.notify_all()
+
+        async def _refresh_coverage(j: int) -> None:
+            """Background poller for partial mirror ``j``: HEAD its
+            advertisement every ``coverage_refresh_s`` on a throwaway
+            connection (never the worker's data connection — a poll must
+            not serialize behind a streaming body) and publish changes
+            under the lock.  A missing header on a 200 means the peer now
+            serves the whole window; 404/410 (the peer unbound its
+            buffer) clears its coverage so nothing new is packed onto
+            it."""
+            rep = self.replicas[j]
+            while True:
+                async with lock:
+                    if j not in alive or (fresh + pooled <= 0
+                                          and inflight <= 0):
+                        return
+                runs = None
+                conn = self._make_conn(rep)
+                try:
+                    code, headers = await conn.head()
+                    if code == 200:
+                        raw = headers.get("x-available-ranges")
+                        if raw is None:
+                            runs = [(0, size)]
+                        else:
+                            runs = []
+                            for lo, hi in _parse_ranges_header(raw):
+                                s_ = max(lo - offset, 0)
+                                e_ = min(hi + 1 - offset, size)
+                                if e_ > s_:
+                                    runs.append((s_, e_))
+                    elif code in (404, 410):
+                        runs = []
+                except (OSError, ValueError, asyncio.IncompleteReadError):
+                    pass
+                finally:
+                    await conn.close()
+                if runs is not None and runs != avail[j]:
+                    async with lock:
+                        if j in alive:
+                            avail[j] = runs
+                            _recompute_union()
+                            cov_stamp[0] = time.monotonic()
+                            cond.notify_all()
+                await asyncio.sleep(refresh_s)
 
         workers = [asyncio.ensure_future(worker(i))
                    for i in range(len(self.replicas))]
+        refreshers = [asyncio.ensure_future(_refresh_coverage(j))
+                      for j in partial_idx]
         clock = asyncio.ensure_future(_stall_clock()) if hedge_q else None
         try:
             await asyncio.gather(*workers)
@@ -1681,6 +2098,10 @@ class MDTPClient:
                 journal.sync()
             raise
         finally:
+            for t in refreshers:
+                t.cancel()
+            if refreshers:
+                await asyncio.gather(*refreshers, return_exceptions=True)
             if clock is not None:
                 clock.cancel()
                 with contextlib.suppress(asyncio.CancelledError):

@@ -27,11 +27,17 @@ union of the ranges that verify.
 
 from __future__ import annotations
 
+import bisect
 import json
 import os
 from typing import Iterable, Optional
 
-__all__ = ["ResumeJournal", "merge_intervals", "uncovered_intervals"]
+__all__ = [
+    "ResumeJournal",
+    "claim_interval",
+    "merge_intervals",
+    "uncovered_intervals",
+]
 
 _MAGIC = "mdtp-journal/1"
 
@@ -48,6 +54,46 @@ def merge_intervals(
         else:
             out.append((lo, hi))
     return [(lo, hi - lo) for lo, hi in out]
+
+
+def claim_interval(
+    covered: list[tuple[int, int]], start: int, end: int,
+) -> list[tuple[int, int]]:
+    """Incrementally merge ``[start, end)`` into ``covered`` in place.
+
+    ``covered`` is a sorted disjoint list of ``(start, end)`` half-open
+    pairs (NOT ``(start, length)`` — this is the in-memory incremental
+    form; :func:`merge_intervals` is the batch form over length pairs).
+    Returns the sub-spans of ``[start, end)`` that were *not* already
+    covered, i.e. the bytes this claim newly accounts for.  Claiming an
+    already-covered span returns ``[]`` and leaves the list unchanged,
+    which makes double commits idempotent for every consumer — the
+    resume journal, the streaming-restore sink, and the peer-mirror
+    advertisement all share this one implementation.
+    """
+    if end <= start:
+        return []
+    lo = bisect.bisect_left(covered, (start,)) - 1
+    if lo >= 0 and covered[lo][1] >= start:
+        first = lo
+    else:
+        first = lo + 1
+    new: list[tuple[int, int]] = []
+    pos = start
+    last = first
+    while last < len(covered) and covered[last][0] <= end:
+        s, e = covered[last]
+        if s > pos:
+            new.append((pos, s))
+        pos = max(pos, e)
+        last += 1
+    if pos < end:
+        new.append((pos, end))
+    if new:
+        merged_s = min(start, covered[first][0]) if first < last else start
+        merged_e = max(end, covered[last - 1][1]) if first < last else end
+        covered[first:last] = [(merged_s, merged_e)]
+    return new
 
 
 def uncovered_intervals(

@@ -658,8 +658,12 @@ class TransferJob:
     #: seconds after batch start before this transfer begins (staggered
     #: arrivals).
     start_delay: float = 0.0
+    #: destination (``repro.transfer.Sink`` or legacy callable); None =
+    #: assemble in memory.
     sink: Optional[Any] = None
     tune_interval_bytes: Optional[int] = None
+    #: frontier rotation hint ``(k, n)`` — see ``MDTPClient.fetch``.
+    stripe: Optional[tuple] = None
 
 
 class TransferManager:
@@ -789,7 +793,8 @@ class TransferManager:
                       path: Optional[str]) -> list:
         reps = list(replicas) if replicas is not None else list(self.replicas)
         if path is not None:
-            reps = [Replica(r.host, r.port, path) for r in reps]
+            reps = [Replica(r.host, r.port, path, mirror=r.mirror)
+                    for r in reps]
         return reps
 
     def _warm_params(self, n_active: int) -> Optional[ChunkParams]:
@@ -844,13 +849,17 @@ class TransferManager:
                     replicas: Optional[Sequence[Replica]] = None,
                     sink=None, offset: int = 0,
                     tune_interval_bytes: Optional[int] = None,
-                    start_delay: float = 0.0):
+                    start_delay: float = 0.0,
+                    stripe: Optional[tuple] = None):
         """One managed transfer (awaitable; gather several for a fleet).
 
         Same contract as ``MDTPClient.fetch`` plus ``path``/``replicas``
-        re-pointing and ``start_delay`` for staggered arrivals.  Passes
-        through the admission gate first: may wait in the SRPT queue (or
-        run at trickle service) when ``max_active_transfers`` is set.
+        re-pointing and ``start_delay`` for staggered arrivals (and
+        ``stripe``/peer-mirror replicas pass straight through — a swarm
+        is N managed transfers whose replica lists include each other's
+        ``PeerMirror.replica``).  Passes through the admission gate
+        first: may wait in the SRPT queue (or run at trickle service)
+        when ``max_active_transfers`` is set.
         """
         if start_delay > 0.0:
             await asyncio.sleep(start_delay)
@@ -869,7 +878,8 @@ class TransferManager:
                 gate.bind(tid, mode, size)
                 buf, report = await client.fetch(
                     size, sink=sink, offset=offset,
-                    tune_interval_bytes=tune_interval_bytes)
+                    tune_interval_bytes=tune_interval_bytes,
+                    stripe=stripe)
                 self.reports.append(report)
                 return buf, report
         finally:
@@ -894,7 +904,7 @@ class TransferManager:
                 self.fetch(j.size, path=j.path, sink=j.sink,
                            offset=j.offset,
                            tune_interval_bytes=j.tune_interval_bytes,
-                           start_delay=j.start_delay)
+                           start_delay=j.start_delay, stripe=j.stripe)
                 for j in jobs))
 
         return asyncio.run(go())

@@ -48,6 +48,15 @@ class Throttle:
     #: rate *ratios* between mirrors are schedule-independent (host load
     #: can only add the same additive overhead to both sides).
     deterministic: bool = False
+    #: True = ``bytes_per_s`` bounds the SERVER's aggregate egress, not
+    #: each connection's.  Per-connection pacing (the default) gives N
+    #: concurrent clients N× the rate — fine for modelling per-path
+    #: bottlenecks, but a broadcast origin's uplink is a shared pipe:
+    #: with ``shared=True`` every handler thread reserves its piece's
+    #: wire time on one server-wide clock (deterministic token bucket,
+    #: implies the ``deterministic`` guarantees), so N clients split the
+    #: rate instead of multiplying it.
+    shared: bool = False
 
 
 @dataclass
@@ -73,6 +82,24 @@ class FaultPolicy:
     seed: int = 0
 
 
+def _format_ranges(intervals) -> str:
+    """``X-Available-Ranges`` wire form: comma-joined inclusive
+    ``lo-hi`` pairs (Range-header syntax), empty when nothing is
+    covered yet."""
+    return ",".join(f"{s}-{s + n - 1}" for s, n in intervals if n > 0)
+
+
+def _covers(intervals, lo: int, hi: int) -> bool:
+    """True when ``[lo, hi]`` (inclusive) lies inside one covered
+    interval — ``intervals`` is sorted disjoint ``(start, nbytes)``."""
+    for s, n in intervals:
+        if s <= lo and hi < s + n:
+            return True
+        if s > lo:
+            break
+    return False
+
+
 class _Handler(BaseHTTPRequestHandler):
     protocol_version = "HTTP/1.1"
     server_version = "repro-range/1.0"
@@ -92,17 +119,33 @@ class _Handler(BaseHTTPRequestHandler):
                 self.connection)
         super().finish()
 
-    def _blob(self) -> Optional[bytes]:
-        return self.server.blobs.get(self.path)  # type: ignore[attr-defined]
+    def _lookup(self):
+        """Resolve the request path: ``(buffer, total, covered_fn)``.
+        ``covered_fn`` is None for ordinary (fully-present) blobs; for
+        partial mirrors it returns the currently covered ``(start,
+        nbytes)`` intervals (the mirrored sink's live accounting)."""
+        blob = self.server.blobs.get(self.path)  # type: ignore[attr-defined]
+        if blob is not None:
+            return blob, len(blob), None
+        part = self.server.partials.get(          # type: ignore[attr-defined]
+            self.path)
+        if part is not None:
+            return part
+        return None
 
     def do_HEAD(self):
-        blob = self._blob()
-        if blob is None:
+        entry = self._lookup()
+        if entry is None:
             self.send_error(404)
             return
+        _buf, total, covered_fn = entry
         self.send_response(200)
-        self.send_header("Content-Length", str(len(blob)))
+        self.send_header("Content-Length", str(total))
         self.send_header("Accept-Ranges", "bytes")
+        if covered_fn is not None:
+            # the interval query: a HEAD doubles as "what do you have?"
+            self.send_header("X-Available-Ranges",
+                             _format_ranges(covered_fn()))
         self.end_headers()
 
     def do_GET(self):
@@ -173,11 +216,23 @@ class _Handler(BaseHTTPRequestHandler):
         with self.server.gauge_lock:              # type: ignore[attr-defined]
             self.server.served_bytes += n         # type: ignore[attr-defined]
 
+    def _refuse_uncovered(self, covered_fn) -> None:
+        """416 for a range the mirror does not (yet) hold, advertising
+        what it DOES hold so the client can re-plan without a HEAD.  A
+        plain keep-alive response — coverage only grows, so the same
+        connection is worth retrying on."""
+        self.send_response(416)
+        self.send_header("Content-Length", "0")
+        self.send_header("X-Available-Ranges",
+                         _format_ranges(covered_fn()))
+        self.end_headers()
+
     def _serve_get(self):
-        blob = self._blob()
-        if blob is None:
+        entry = self._lookup()
+        if entry is None:
             self.send_error(404)
             return
+        blob, total, covered_fn = entry
         throttle: Throttle = self.server.throttle  # type: ignore[attr-defined]
         if throttle.latency_s > 0:
             time.sleep(throttle.latency_s)
@@ -186,21 +241,31 @@ class _Handler(BaseHTTPRequestHandler):
             try:
                 lo_s, hi_s = rng[len("bytes="):].split("-", 1)
                 lo = int(lo_s)
-                hi = int(hi_s) if hi_s else len(blob) - 1
+                hi = int(hi_s) if hi_s else total - 1
             except ValueError:
                 self.send_error(416)
                 return
-            hi = min(hi, len(blob) - 1)
+            hi = min(hi, total - 1)
             if lo > hi:
                 self.send_error(416)
                 return
+            if covered_fn is not None and not _covers(covered_fn(), lo, hi):
+                self._refuse_uncovered(covered_fn)
+                return
             # memoryview slice: no per-range body copy — ranges (and the
-            # throttle pieces below) are windows over the registered blob
+            # throttle pieces below) are windows over the registered blob.
+            # For partial mirrors the slice is safe under the concurrent
+            # restore: covered bytes are committed-immutable, and the
+            # coverage check above pinned this range inside them.
             body = memoryview(blob)[lo:hi + 1]
             status = 206
-            content_range = f"bytes {lo}-{hi}/{len(blob)}"
+            content_range = f"bytes {lo}-{hi}/{total}"
         else:
-            body = memoryview(blob)
+            if covered_fn is not None and not _covers(
+                    covered_fn(), 0, total - 1):
+                self._refuse_uncovered(covered_fn)
+                return
+            body = memoryview(blob)[:total]
             status = 200
             content_range = None
 
@@ -259,7 +324,26 @@ class _Handler(BaseHTTPRequestHandler):
                 if stall_at is not None and sent >= stall_at:
                     time.sleep(self.server.faults.stall_s)  # type: ignore
                     stall_at = None
-                if throttle.deterministic:
+                if throttle.shared:
+                    # server-wide token bucket: reserve this piece's wire
+                    # time on the shared egress clock, then sleep until
+                    # the reservation matures.  N concurrent connections
+                    # thereby SPLIT ``bytes_per_s`` (each piece queues
+                    # behind every previously reserved piece) instead of
+                    # each enjoying it — a broadcast origin's fixed
+                    # uplink.  Deterministic by construction: total
+                    # service time >= bytes / rate regardless of load.
+                    srv = self.server
+                    with srv.shared_lock:     # type: ignore[attr-defined]
+                        now = time.monotonic()
+                        due = max(
+                            srv.shared_free,  # type: ignore[attr-defined]
+                            now) + len(piece) / throttle.bytes_per_s
+                        srv.shared_free = due  # type: ignore[attr-defined]
+                    wait = due - time.monotonic()
+                    if wait > 0:
+                        time.sleep(wait)
+                elif throttle.deterministic:
                     # bytes-only token bucket: every piece pays its wire
                     # time up front, unconditionally — host load cannot
                     # erase the pacing.  Sleeping BEFORE the write means
@@ -273,7 +357,7 @@ class _Handler(BaseHTTPRequestHandler):
                 self.wfile.write(piece)
                 sent += len(piece)
                 self._account(len(piece))
-                if not throttle.deterministic:
+                if not (throttle.deterministic or throttle.shared):
                     target = sent / throttle.bytes_per_s
                     sleep = target - (time.monotonic() - t0)
                     if sleep > 0:
@@ -307,7 +391,14 @@ class RangeServer:
     ):
         self._srv = ThreadingHTTPServer(("127.0.0.1", 0), _Handler)
         self._srv.blobs = {}                      # type: ignore[attr-defined]
+        #: path -> (buffer, total, covered_fn): partial mirrors (see
+        #: ``add_partial``)
+        self._srv.partials = {}                   # type: ignore[attr-defined]
         self._srv.throttle = throttle or Throttle()  # type: ignore[attr-defined]
+        self._srv.shared_lock = threading.Lock()  # type: ignore[attr-defined]
+        #: shared-egress reservation clock (``Throttle.shared``): the
+        #: monotonic instant the server's uplink is next free.
+        self._srv.shared_free = 0.0               # type: ignore[attr-defined]
         self._srv.checksums = checksums           # type: ignore[attr-defined]
         self._srv.faults = faults                 # type: ignore[attr-defined]
         self._srv.fault_rng = random.Random(      # type: ignore[attr-defined]
@@ -366,6 +457,32 @@ class RangeServer:
         if not path.startswith("/"):
             path = "/" + path
         self._srv.blobs[path] = data              # type: ignore[attr-defined]
+
+    def add_partial(self, path: str, buffer, covered, total=None) -> None:
+        """Mount a partially-populated ``buffer`` as a read-only mirror.
+
+        ``covered`` is a zero-arg callable returning the currently
+        covered ``(start, nbytes)`` intervals (sorted, disjoint — e.g. a
+        :class:`repro.transfer.Sink`'s ``covered_intervals``).  HEADs
+        advertise the live coverage via ``X-Available-Ranges``; a GET
+        for bytes outside it is refused with 416 (carrying the same
+        header) rather than served short.  The buffer may still be
+        filling: committed bytes must be immutable, which is exactly the
+        transfer sinks' write-once contract.
+        """
+        if not path.startswith("/"):
+            path = "/" + path
+        total = len(buffer) if total is None else int(total)
+        self._srv.partials[path] = (              # type: ignore[attr-defined]
+            buffer, total, covered)
+
+    def remove_path(self, path: str) -> None:
+        """Unregister a blob or partial mirror (subsequent requests
+        404).  In-flight handlers finish from their own references."""
+        if not path.startswith("/"):
+            path = "/" + path
+        self._srv.blobs.pop(path, None)           # type: ignore[attr-defined]
+        self._srv.partials.pop(path, None)        # type: ignore[attr-defined]
 
     def add_file(self, path: str, filename: str) -> None:
         with open(filename, "rb") as f:

@@ -1,0 +1,200 @@
+"""Peer-assisted checkpoint broadcast: swarm conservation, origin
+offload, and peer-death fallback over real loopback sockets.
+
+Every swarm case asserts the full-blob checksum on EVERY restorer — the
+point of the broadcast layer is that peers trading stripes is invisible
+in the delivered bytes, only in the accounting (origin vs peer
+served-byte totals).  Throttles are deterministic token buckets so the
+cases are load-independent.
+"""
+
+import asyncio
+import hashlib
+import http.client
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.chunking import ChunkParams
+from repro.transfer import (
+    BufferSink,
+    CallableSink,
+    MDTPClient,
+    PeerMirror,
+    RangeServer,
+    Replica,
+    Sink,
+    Throttle,
+)
+
+MB = 1024 * 1024
+
+#: swarm-scale geometry: chunks small enough that no single origin grab
+#: outlives the peers' ramp-up (the 4 MiB defaults would hand every
+#: restorer half the blob before any mirror had bytes to trade).
+PARAMS = ChunkParams(initial_chunk=128 * 1024, large_chunk=256 * 1024,
+                     min_chunk=32 * 1024)
+
+
+def _sha(b) -> str:
+    return hashlib.sha256(bytes(b)).hexdigest()
+
+
+@pytest.fixture
+def blob():
+    rng = np.random.default_rng(7)
+    return rng.integers(0, 256, size=2 * MB, dtype=np.uint8).tobytes()
+
+
+def _origin(blob, rate=8 * MB):
+    s = RangeServer(throttle=Throttle(bytes_per_s=rate, shared=True,
+                                      deterministic=True)).start()
+    s.add_blob("/data", blob)
+    return s
+
+
+def _client(replicas):
+    return MDTPClient(replicas, params=PARAMS, coverage_refresh_s=0.01)
+
+
+def _run_swarm(blob, n, rate=8 * MB):
+    """n restorers, one origin, full peer mesh.  Returns
+    (sinks, origin_served, peer_served)."""
+    origin = _origin(blob, rate)
+    sinks = [BufferSink(len(blob)) for _ in range(n)]
+    mirrors = [PeerMirror(s, throttle=Throttle(bytes_per_s=rate,
+                                               shared=True,
+                                               deterministic=True))
+               for s in sinks]
+    try:
+        rep = Replica("127.0.0.1", origin.port, "/data")
+
+        async def one(j):
+            replicas = [rep] + [m.replica for k, m in enumerate(mirrors)
+                                if k != j]
+            await _client(replicas).fetch(len(blob), sink=sinks[j],
+                                          stripe=(j, n))
+
+        async def go():
+            await asyncio.gather(*(one(j) for j in range(n)))
+
+        asyncio.run(go())
+        return sinks, origin.served_bytes, [m.served_bytes for m in mirrors]
+    finally:
+        origin.stop()
+        for m in mirrors:
+            m.stop()
+
+
+# --------------------------------------------------------------------------
+# Mirror advertisement (unit)
+# --------------------------------------------------------------------------
+
+
+def test_mirror_advertises_coverage_and_refuses_uncovered(blob):
+    """A filling sink's mirror must advertise exactly what it holds
+    (``X-Available-Ranges`` on HEAD), serve covered ranges byte-exact,
+    and refuse uncovered ones with 416 — never invented bytes."""
+    sink = BufferSink(len(blob))
+    half = len(blob) // 2
+    sink.writable(0, half)[:] = blob[:half]
+    sink.commit(0, half)
+    m = PeerMirror(sink)
+    try:
+        c = http.client.HTTPConnection("127.0.0.1", m.port)
+        c.request("HEAD", "/data")
+        r = c.getresponse()
+        r.read()
+        assert r.status == 200
+        assert r.getheader("X-Available-Ranges") == f"0-{half - 1}"
+
+        c.request("GET", "/data", headers={"Range": "bytes=0-65535"})
+        r = c.getresponse()
+        assert r.status == 206
+        assert r.read() == blob[:65536]
+
+        c.request("GET", "/data",
+                  headers={"Range": f"bytes={half}-{half + 100}"})
+        r = c.getresponse()
+        r.read()
+        assert r.status == 416
+        c.close()
+    finally:
+        m.stop()
+
+
+def test_sink_protocol_runtime_checks():
+    assert isinstance(BufferSink(16), Sink)
+    assert isinstance(CallableSink(lambda s, mv: None), Sink)
+    assert not isinstance(object(), Sink)
+    with pytest.raises(ValueError):
+        PeerMirror(CallableSink(lambda s, mv: None), total=16)
+
+
+# --------------------------------------------------------------------------
+# Swarm end-to-end
+# --------------------------------------------------------------------------
+
+
+def test_swarm_conservation_byte_exact(blob):
+    """Three restorers trading stripes all end byte-exact, and the
+    trading actually happened: peers served a nonzero share."""
+    sinks, origin_served, peer_served = _run_swarm(blob, 3)
+    want = _sha(blob)
+    for s in sinks:
+        assert _sha(s) == want
+    assert sum(peer_served) > 0, "no peer ever served a byte"
+    # whatever arrived came off a real wire exactly once per restorer
+    assert origin_served + sum(peer_served) >= 3 * len(blob)
+    for s in sinks:
+        assert s.duplicate_bytes == 0
+
+
+def test_origin_egress_sublinear(blob):
+    """At N=4 the origin must send each byte ~once, not once per
+    restorer: egress stays under 2x the blob where independent clients
+    would pay 4x."""
+    sinks, origin_served, peer_served = _run_swarm(blob, 4)
+    want = _sha(blob)
+    for s in sinks:
+        assert _sha(s) == want
+    assert origin_served <= 2 * len(blob), \
+        f"origin served {origin_served / len(blob):.2f}x the blob"
+    assert sum(peer_served) >= 2 * len(blob)
+
+
+def test_peer_death_mid_serve_falls_back_to_origin(blob):
+    """Kill a peer mirror while the restorer is drawing from it: its
+    advertised coverage must drop out of the union and every span it
+    owed must re-open to the origin — transfer completes byte-exact."""
+    origin = _origin(blob, rate=4 * MB)
+    donor = BufferSink(len(blob))
+    half = len(blob) // 2
+    donor.writable(0, half)[:] = blob[:half]
+    donor.commit(0, half)
+    m = PeerMirror(donor, throttle=Throttle(bytes_per_s=8 * MB,
+                                            shared=True,
+                                            deterministic=True))
+    try:
+        replicas = [Replica("127.0.0.1", origin.port, "/data"), m.replica]
+        client = MDTPClient(replicas, params=PARAMS,
+                            coverage_refresh_s=0.01, max_failures=2)
+
+        def kill():
+            m.server.kill_connections()
+            m.stop()
+
+        killer = threading.Timer(0.15, kill)
+        killer.start()
+        data, report = asyncio.run(client.fetch(len(blob)))
+        killer.cancel()
+        assert _sha(data) == _sha(blob)
+        # the origin finished the job, including the dead donor's half
+        assert origin.served_bytes > half
+    finally:
+        origin.stop()
+        try:
+            m.stop()
+        except Exception:
+            pass
