@@ -70,6 +70,11 @@ CHECK_ROW_PREFIXES = (
 #: ``origin_x`` row (an absolute byte count) is deliberately NOT in the
 #: 3x comparison — the win-guard bounds it as an egress ratio instead
 #: (see ``_check_broadcast_wins``).
+#: ``shard/*`` makespan rows are pacing-dominated sharded-restore
+#: replays (one slow origin, deterministic buckets); the ``stolen_x``
+#: row (an absolute byte count) is NOT in the 3x comparison — the
+#: win-guard uses it as the theft witness instead (see
+#: ``_check_shard_wins``).
 CHECK_SUITES = (
     ("BENCH_autotune.json", "autotune", CHECK_ROW_PREFIXES),
     ("BENCH_online.json", "contention", ("contention/",)),
@@ -80,6 +85,8 @@ CHECK_SUITES = (
       "flashcrowd/gray/robust")),
     ("BENCH_online.json", "broadcast",
      ("broadcast/independent/", "broadcast/swarm/n")),
+    ("BENCH_online.json", "shard",
+     ("shard/independent/", "shard/workstealing/k")),
 )
 
 
@@ -233,6 +240,49 @@ def _check_broadcast_wins(rows) -> int:
     return rc
 
 
+def _check_shard_wins(rows) -> int:
+    """The sharded-restore win-guard, on the freshly-run K=4 straggler
+    replay:
+
+    - Work-stealing makespan (us_per_call) must not exceed the
+      independent-shards baseline's — the fast hosts draining the
+      straggler's span through their mirrors is the whole point, and a
+      regression here means stealing, mirror advertisement, or the
+      victim's coverage-gated drain quietly stopped working.
+    - Stolen bytes (the ``stolen_x`` row) must be > 0 — a ledger that
+      never grants a steal makes the makespan comparison vacuous (both
+      runs degenerate to independent and the guard would pass while the
+      feature is dead).
+    """
+    by_name = {r["name"]: r for r in rows
+               if r["name"].startswith("shard/")}
+    ws = by_name.get("shard/workstealing/k4")
+    indep = by_name.get("shard/independent/k4")
+    stolen = by_name.get("shard/workstealing/stolen_x")
+    if ws is None or indep is None or stolen is None:
+        print("# check: shard win-guard rows missing", file=sys.stderr)
+        return 1
+    rc = 0
+    ws_s = float(ws["us_per_call"]) / 1e6
+    indep_s = float(indep["us_per_call"]) / 1e6
+    verdict = "ok" if ws_s <= indep_s else "REGRESSION"
+    print(f"# check shard makespan win-guard: workstealing {ws_s:.2f}s vs "
+          f"independent {indep_s:.2f}s {verdict}", flush=True)
+    if ws_s > indep_s:
+        print("# check FAILED: work-stealing makespan exceeded the "
+              "independent-shards baseline", file=sys.stderr)
+        rc = 1
+    stolen_b = float(stolen["us_per_call"])
+    verdict = "ok" if stolen_b > 0 else "REGRESSION"
+    print(f"# check shard theft witness: {stolen_b / (1024 * 1024):.1f} MB "
+          f"stolen on the straggler regime {verdict}", flush=True)
+    if stolen_b <= 0:
+        print("# check FAILED: no bytes were stolen — the ledger never "
+              "granted a steal on the straggler regime", file=sys.stderr)
+        rc = 1
+    return rc
+
+
 def _section(title: str) -> None:
     print(f"# === {title} ===", flush=True)
 
@@ -284,6 +334,9 @@ def _run_check_suite(path: str, section: str, prefixes) -> int:
     elif section == "broadcast":
         from . import broadcast_bench
         broadcast_bench.main(["--quick"])
+    elif section == "shard":
+        from . import shard_bench
+        shard_bench.main(["--quick"])
     else:
         raise ValueError(f"unknown check section: {section!r}")
 
@@ -304,6 +357,18 @@ def _run_check_suite(path: str, section: str, prefixes) -> int:
             from . import broadcast_bench
             broadcast_bench.main(["--quick"])
             rc_extra = _check_broadcast_wins(emitted_rows())
+    elif section == "shard":
+        rc_extra = _check_shard_wins(emitted_rows())
+        if rc_extra:
+            # Same wall-clock-race caveat: a host-load spike during the
+            # replay can push the work-stealing makespan past the
+            # baseline without a code regression.  One replay decides.
+            print("# check shard: guard failed, replaying the sharded "
+                  "restore once to rule out host load", flush=True)
+            reset_rows()
+            from . import shard_bench
+            shard_bench.main(["--quick"])
+            rc_extra = _check_shard_wins(emitted_rows())
     elif section == "flashcrowd":
         rc_extra = _check_flashcrowd_wins(emitted_rows())
         if rc_extra:
@@ -367,7 +432,7 @@ def main(argv=None) -> None:
     ap.add_argument("--skip", nargs="*", default=[],
                     help="section names to skip (fig2 fig3 fig4 fig5 table2 "
                          "autotune online contention dataplane faults "
-                         "flashcrowd broadcast restore roofline)")
+                         "flashcrowd broadcast shard restore roofline)")
     ap.add_argument("--json", nargs="?", const="BENCH_autotune.json",
                     default=None, metavar="PATH",
                     help="also dump every emitted row as machine-readable "
@@ -443,6 +508,10 @@ def main(argv=None) -> None:
 
     from . import broadcast_bench
     run("broadcast", lambda: broadcast_bench.main(
+        [] if args.full else ["--quick"]))
+
+    from . import shard_bench
+    run("shard", lambda: shard_bench.main(
         [] if args.full else ["--quick"]))
 
     # Framework-layer benches (present once the substrates land).

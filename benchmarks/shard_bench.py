@@ -1,0 +1,140 @@
+"""Sharded, work-stealing restore: K hosts splitting one checkpoint.
+
+Broadcast (``broadcast_bench``) measures N hosts that all want the
+WHOLE blob; this bench measures the complement — K hosts each own a
+contiguous span (``plan_shards``) and the restore is done when the
+slowest host has its span.  With independent shards a single straggling
+origin sets the makespan; cross-host work stealing
+(:func:`repro.transfer.shard.fetch_sharded`) lets the hosts that finish
+early fetch tails of the straggler's span through their own fast
+origins and re-serve them over peer mirrors, so the straggler drains
+from its fast siblings instead of its slow origin.  Measured on real
+loopback sockets, straggler regime: host 0's origin paces at 1/8 of the
+others.
+
+``shard/independent/k4``
+    ``steal=False``: every host fetches exactly its own span from its
+    own origin.  Peer mirrors are mounted but useless — nobody else
+    holds the straggler's span, so coverage gating keeps them idle and
+    the slow origin sets the makespan.
+
+``shard/workstealing/k4``
+    ``steal=True``: same fleet, same throttles, shared
+    :class:`StealLedger`.  Fast hosts claim uncovered tails of the
+    straggler's span and the straggler's coverage-gated client drains
+    them from the thieves' mirrors.
+
+``shard/workstealing/stolen_x``
+    Bytes fetched outside their owner's span over the blob size — the
+    theft witness and its price: stolen bytes are duplicated traffic
+    (they land in both the thief's and the victim's buffers).
+
+``us_per_call`` is the restore makespan (to each host holding its own
+span) in microseconds; ``derived`` is seconds (for ``stolen_x``: the
+ratio).  All pacing is deterministic token buckets, so the rows are
+load-independent perf signal: ``benchmarks/run.py --check`` guards
+them at 3x and enforces the shard win-guard (workstealing makespan <=
+independent, stolen bytes > 0 on the straggler regime; see
+``_check_shard_wins``).  Rows land in ``BENCH_online.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import hashlib
+
+import numpy as np
+
+from .common import emit  # noqa: F401  (also wires sys.path to src/)
+
+from repro.core.chunking import ChunkParams
+from repro.transfer import PeerMirror, RangeServer, Replica, Throttle
+from repro.transfer.shard import fetch_sharded, plan_shards
+
+MB = 1024 * 1024
+
+#: healthy-origin pacing; the straggler's origin gets RATE / STRAGGLE_X.
+RATE = 8 * MB
+STRAGGLE_X = 8
+#: shard count the win-guard is stated at.
+K = 4
+#: swarm-scale geometry (same reasoning as ``broadcast_bench``): stolen
+#: spans are traded mid-transfer, so no single grab may outlive the
+#: thieves' ramp-up.
+PARAMS = ChunkParams(initial_chunk=128 * 1024, large_chunk=256 * 1024,
+                     min_chunk=32 * 1024)
+COVERAGE_REFRESH_S = 0.01
+
+
+def _blob(size: int) -> bytes:
+    rng = np.random.default_rng(1)
+    return rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
+
+
+def _throttle(rate: float) -> Throttle:
+    return Throttle(bytes_per_s=rate, shared=True, deterministic=True)
+
+
+def _origins(blob: bytes) -> list[RangeServer]:
+    """K origin servers, one per host; host 0's paces at 1/STRAGGLE_X."""
+    out = []
+    for h in range(K):
+        rate = RATE / STRAGGLE_X if h == 0 else RATE
+        s = RangeServer(throttle=_throttle(rate)).start()
+        s.add_blob("/data", blob)
+        out.append(s)
+    return out
+
+
+def _run(blob: bytes, steal: bool) -> tuple[float, int]:
+    """One K-host sharded restore.  Returns (makespan_s, stolen_bytes)."""
+    plan = plan_shards(len(blob), K)
+    servers = _origins(blob)
+    # thieves re-serve stolen bytes over their mirrors at the healthy
+    # rate — the uplink a victim drains from must itself be paced
+    mirrors = [PeerMirror(path=f"/shard{h}", throttle=_throttle(RATE))
+               for h in range(K)]
+    try:
+        origins = [[Replica("127.0.0.1", servers[h].port, "/data")]
+                   for h in range(K)]
+        res = asyncio.run(fetch_sharded(
+            len(blob), plan, origins, steal=steal, mirrors=mirrors,
+            client_kw=dict(params=PARAMS,
+                           coverage_refresh_s=COVERAGE_REFRESH_S)))
+    finally:
+        for s in servers:
+            s.stop()
+        for m in mirrors:
+            m.stop()
+    for h in range(K):
+        s, e = plan.span_of(h)
+        want = hashlib.sha256(blob[s:e]).hexdigest()
+        got = hashlib.sha256(bytes(res.sinks[h])[s:e]).hexdigest()
+        assert got == want, f"host {h} span integrity"
+    return res.makespan, res.stolen_bytes
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke sizes (CI check mode)")
+    args = ap.parse_args(argv)
+
+    size = 4 * MB if args.quick else 8 * MB
+    blob = _blob(size)
+
+    wall_i, stolen_i = _run(blob, steal=False)
+    assert stolen_i == 0, "steal=False must not duplicate traffic"
+    emit(f"shard/independent/k{K}", wall_i * 1e6, f"{wall_i:.2f}",
+         f"straggle_x={STRAGGLE_X}")
+
+    wall_s, stolen_s = _run(blob, steal=True)
+    emit(f"shard/workstealing/k{K}", wall_s * 1e6, f"{wall_s:.2f}",
+         f"stolen_mb={stolen_s / MB:.1f}")
+    emit("shard/workstealing/stolen_x", float(stolen_s),
+         f"{stolen_s / size:.3f}", f"blob_mb={size / MB:g}")
+
+
+if __name__ == "__main__":
+    main()

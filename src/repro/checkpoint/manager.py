@@ -279,10 +279,13 @@ class _StreamingRestore:
             jax.device_put(arr, shd) if shd is not None
             else jax.device_put(arr))
 
-    def finish(self) -> Any:
+    def finish(self, require_all: bool = True) -> Any:
+        """Assemble the restored pytree.  ``require_all=False`` is the
+        sharded-restore contract: leaves this host's span never covered
+        stay ``None`` in the tree (they belong to other hosts)."""
         missing = [self._entries[j]["key"]
                    for j, r in enumerate(self._remaining) if r != 0]
-        if missing:
+        if missing and require_all:
             raise IOError(f"restore incomplete, leaves missing bytes: "
                           f"{missing[:5]}")
         # retry any leaf whose earlier device_put failed transiently mid-
@@ -333,12 +336,13 @@ def _rebuild(manifest: dict, blob: bytes, like: Any,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def _finish_restore(stream: _StreamingRestore, jr, spool: Optional[str]):
+def _finish_restore(stream: _StreamingRestore, jr, spool: Optional[str],
+                    require_all: bool = True):
     """Assemble the restored tree; for resumable restores, retire the
     scratch state (journal + spool) once every leaf is safely on device —
     ``device_put`` dispatch is async, so block before unmapping the spool
     the arrays were read from."""
-    state = stream.finish()
+    state = stream.finish(require_all)
     if jr is not None:
         jax.block_until_ready(state)
         jr.complete()
@@ -371,6 +375,13 @@ class RestoreOptions:
     manager: Any = None
     resume: Optional[str] = None
     mirror: Any = None
+    #: sharded restore: ``(host, plan_or_k)`` — fetch only this host's
+    #: span of the blob.  ``plan_or_k`` is a ``repro.transfer.ShardPlan``
+    #: or an int K (the plan is then derived here, snapped to manifest
+    #: leaf boundaries so every tensor lands whole).  Leaves outside the
+    #: span come back ``None``; pair with ``mirror=`` so peers (or a
+    #: work-stealing ``fetch_sharded`` fleet) can drain this host's span.
+    shard_plan: Any = None
 
 
 def restore_checkpoint(
@@ -386,6 +397,7 @@ def restore_checkpoint(
     manager: Any = None,
     resume: Optional[str] = None,
     mirror: Any = None,
+    shard_plan: Any = None,
 ) -> tuple[Any, int]:
     """Restore (state, step).
 
@@ -435,6 +447,15 @@ def restore_checkpoint(
     uncovered bytes, not the whole blob again.  On success both files
     are deleted (a completed restore has nothing to resume).
 
+    ``shard_plan`` (``(host, plan_or_k)``; replica restores only) makes
+    this a **sharded** restore: the process fetches only its host's span
+    of ``data.bin`` (a ``repro.transfer.ShardPlan``, or an int K from
+    which the plan is derived on the spot, snapped to manifest leaf
+    boundaries).  Leaves outside the span come back ``None`` — the other
+    hosts of the mesh restore them; combine with ``mirror=`` so peers
+    can pull this host's span, and see ``repro.transfer.fetch_sharded``
+    for the in-process work-stealing orchestration of K such fetches.
+
     ``options`` (a :class:`RestoreOptions`) is the consolidated form of
     the tail kwargs above plus ``mirror=`` — a
     ``repro.transfer.PeerMirror`` that serves this restore's landed
@@ -444,11 +465,12 @@ def restore_checkpoint(
     opts = options if options is not None else RestoreOptions()
     overrides = {k: v for k, v in {
         "tuner": tuner, "wave_bytes": wave_bytes, "manager": manager,
-        "resume": resume, "mirror": mirror}.items() if v is not None}
+        "resume": resume, "mirror": mirror,
+        "shard_plan": shard_plan}.items() if v is not None}
     if overrides:
         opts = _dc_replace(opts, **overrides)
     tuner, wave_bytes, manager = opts.tuner, opts.wave_bytes, opts.manager
-    resume, mirror = opts.resume, opts.mirror
+    resume, mirror, shard_plan = opts.resume, opts.mirror, opts.shard_plan
 
     if step is None:
         step = latest_step(root)
@@ -487,6 +509,21 @@ def restore_checkpoint(
                 mbuf, _ = await mclient.fetch(msize)
             manifest = json.loads(bytes(mbuf).decode())
             total = int(manifest["total_bytes"])
+            lo, hi = 0, total
+            if shard_plan is not None:
+                # (host, plan-or-K): this process fetches only its span.
+                # An int K derives the plan here, snapped to manifest
+                # leaf boundaries — every host computes the same cuts
+                # from the same manifest, no coordination needed.
+                from repro.transfer.shard import (ShardPlan,
+                                                  manifest_boundaries,
+                                                  plan_shards)
+
+                host, plan = shard_plan
+                if not isinstance(plan, ShardPlan):
+                    plan = plan_shards(total, int(plan),
+                                       manifest_boundaries(manifest))
+                lo, hi = plan.span_of(int(host))
             jr = None
             spool = None
             if resume is not None:
@@ -505,7 +542,7 @@ def restore_checkpoint(
                 # to other restorers while this restore is in flight
                 mirror.bind(stream, total)
             try:
-                return await _restore_waves(stream, jr, spool, total,
+                return await _restore_waves(stream, jr, spool, lo, hi,
                                             dclient_factory=lambda: client_for(
                                                 [Replica(r.host, r.port,
                                                          r.path + "/" + _DATA)
@@ -524,23 +561,28 @@ def restore_checkpoint(
                     mirror.unbind()
                 stream.close()
 
-        async def _restore_waves(stream, jr, spool, total, dclient_factory):
+        async def _restore_waves(stream, jr, spool, lo, hi, dclient_factory):
+            # sharded restores fetch only [lo, hi) of the blob; the rest
+            # of the tree stays unmaterialized (require_all=False below)
+            span = hi - lo
+            require_all = shard_plan is None
             async with dclient_factory() as dclient:
                 # the stream object carries the writable/commit zero-copy
                 # protocol: ranges are received straight into its buffer
-                if not wave_bytes or wave_bytes >= total:
-                    await dclient.fetch(total, sink=stream, tuner=tuner,
-                                        resume=jr)
-                    return _finish_restore(stream, jr, spool)
-                pos = 0
-                while pos < total:
-                    n = min(int(wave_bytes), total - pos)
+                if not wave_bytes or wave_bytes >= span:
+                    if span > 0:
+                        await dclient.fetch(span, sink=stream, offset=lo,
+                                            tuner=tuner, resume=jr)
+                    return _finish_restore(stream, jr, spool, require_all)
+                pos = lo
+                while pos < hi:
+                    n = min(int(wave_bytes), hi - pos)
                     _, report = await dclient.fetch(n, sink=stream,
                                                     offset=pos, resume=jr)
                     pos += n
-                    if pos >= total:
+                    if pos >= hi:
                         break
-                    next_wave = min(int(wave_bytes), total - pos)
+                    next_wave = min(int(wave_bytes), hi - pos)
                     if tuner is None:
                         if not grid_retune:
                             continue    # the manager's shared tuner owns
@@ -569,7 +611,7 @@ def restore_checkpoint(
                             new = None
                         if new is not None:
                             dclient.adopt_params(new)
-            return _finish_restore(stream, jr, spool)
+            return _finish_restore(stream, jr, spool, require_all)
 
         return asyncio.run(run()), step
 

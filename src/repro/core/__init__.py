@@ -21,60 +21,49 @@
 * ``scenarios`` — calibrated FABRIC-testbed stand-ins.
 """
 
-from .chunking import (
-    ChunkParams,
-    default_chunk_params,
-    fast_server_mask,
-    geometric_mean,
-    next_chunk_size,
-    round_chunk_sizes,
-)
-from .throughput import Ewma, LastSample, ThroughputEstimator, make_estimator
-from .simulator import (
-    ChunkRecord,
-    Policy,
-    Request,
-    ServerSpec,
-    SimResult,
-    TransferState,
-    Wait,
-    simulate,
-)
-from .mdtp import MDTPPolicy
-from .static_chunking import StaticChunkingPolicy, default_static_chunk
-from .aria2 import Aria2Policy
-from .bittorrent import BitTorrentPolicy
-from .jax_alloc import ChunkArrays, round_allocate
-from .autotune import (
-    AutotuneResult,
-    GradTuneResult,
-    autotune_batch,
-    autotune_chunk_params,
-    default_grid,
-    sweep_scenarios,
-    tune_chunk_params_grad,
-)
-from .online import (
-    BanditTuner,
-    GridTuner,
-    MCGradTuner,
-    Telemetry,
-    rtt_corrected_bandwidth,
-    tune_chunk_params_mcgrad,
-)
+from importlib import import_module
 
-__all__ = [
-    "ChunkParams", "default_chunk_params", "fast_server_mask",
-    "geometric_mean", "next_chunk_size", "round_chunk_sizes",
-    "Ewma", "LastSample", "ThroughputEstimator", "make_estimator",
-    "ChunkRecord", "Policy", "Request", "ServerSpec", "SimResult",
-    "TransferState", "Wait", "simulate",
-    "MDTPPolicy", "StaticChunkingPolicy", "default_static_chunk",
-    "Aria2Policy", "BitTorrentPolicy",
-    "ChunkArrays", "round_allocate",
-    "AutotuneResult", "GradTuneResult", "autotune_chunk_params",
-    "autotune_batch", "sweep_scenarios", "default_grid",
-    "tune_chunk_params_grad",
-    "BanditTuner", "GridTuner", "MCGradTuner", "Telemetry",
-    "rtt_corrected_bandwidth", "tune_chunk_params_mcgrad",
-]
+#: export name -> defining submodule (resolved on first attribute
+#: access, PEP 562) — keeps ``repro.core.chunking``/``throughput``
+#: importable by the sans-I/O scheduling layer without dragging JAX in.
+_EXPORTS = {
+    "ChunkParams": ".chunking", "default_chunk_params": ".chunking",
+    "fast_server_mask": ".chunking", "geometric_mean": ".chunking",
+    "next_chunk_size": ".chunking", "round_chunk_sizes": ".chunking",
+    "Ewma": ".throughput", "LastSample": ".throughput",
+    "ThroughputEstimator": ".throughput", "make_estimator": ".throughput",
+    "ChunkRecord": ".simulator", "Policy": ".simulator",
+    "Request": ".simulator", "ServerSpec": ".simulator",
+    "SimResult": ".simulator", "TransferState": ".simulator",
+    "Wait": ".simulator", "simulate": ".simulator",
+    "MDTPPolicy": ".mdtp",
+    "StaticChunkingPolicy": ".static_chunking",
+    "default_static_chunk": ".static_chunking",
+    "Aria2Policy": ".aria2",
+    "BitTorrentPolicy": ".bittorrent",
+    "ChunkArrays": ".jax_alloc", "round_allocate": ".jax_alloc",
+    "AutotuneResult": ".autotune", "GradTuneResult": ".autotune",
+    "autotune_batch": ".autotune", "autotune_chunk_params": ".autotune",
+    "default_grid": ".autotune", "sweep_scenarios": ".autotune",
+    "tune_chunk_params_grad": ".autotune",
+    "BanditTuner": ".online", "GridTuner": ".online",
+    "MCGradTuner": ".online", "Telemetry": ".online",
+    "rtt_corrected_bandwidth": ".online",
+    "tune_chunk_params_mcgrad": ".online",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(import_module(target, __name__), name)
+    globals()[name] = value          # cache: __getattr__ runs once per name
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

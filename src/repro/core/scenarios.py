@@ -50,6 +50,9 @@ __all__ = [
     "swarm_fleet",
     "swarm_axes",
     "swarm_traces",
+    "ShardTrace",
+    "shard_fleet",
+    "shard_traces",
 ]
 
 MBPS = 1024 * 1024  # we quote server rates in MiB/s
@@ -485,4 +488,79 @@ def swarm_traces(rtt: float = _DEFAULT_RTT) -> list[SwarmTrace]:
                    tuple(swarm_fleet(4, onset=0.5, rtt=rtt)), GB),
         SwarmTrace("cold-start", 8,
                    tuple(swarm_fleet(8, onset=4.0, rtt=rtt)), GB),
+    ]
+
+
+# --------------------------------------------------------------------------
+# Sharded, work-stealing restore (K-host meshes)
+# --------------------------------------------------------------------------
+#
+# The real stack (``repro.transfer.shard``): a K-host mesh splits the
+# blob into contiguous per-host spans; each host fetches its span from
+# its own origin and serves landed bytes to peers, and hosts that finish
+# early *steal* uncovered tails of a straggling host's span — fetching
+# them through their own fast origin so the victim can drain the stolen
+# range from a fast peer mirror instead of its slow origin.  The
+# simulator mirror below is the capacity view the STRAGGLER sees for its
+# own span: its slow origin, plus each would-be thief as a peer mirror
+# that comes online once the thief has finished its own span and landed
+# stolen bytes worth advertising.
+
+
+def shard_fleet(k: int, origin_bw: float = 96 * MBPS,
+                straggler_frac: float = 0.125, steal_onset: float = 1.0,
+                rtt: float = _DEFAULT_RTT) -> list[ServerSpec]:
+    """The fleet the straggler of a ``k``-host sharded restore sees.
+
+    Its own origin runs at ``origin_bw * straggler_frac`` (the gray
+    mirror that motivates stealing); each of the other ``k - 1`` hosts
+    appears as a peer that is dark until ``steal_onset`` scaled by a
+    per-thief stagger (a thief first finishes its OWN span, then lands
+    stolen bytes), then serves a fair ``1/(k - 1)`` share of a full
+    ``origin_bw`` uplink.  ``straggler_frac = 1`` is the balanced
+    no-straggler baseline.
+    """
+    if k < 1:
+        raise ValueError(f"shard count must be >= 1, got {k}")
+    servers = [ServerSpec(name="origin", bandwidth=origin_bw * straggler_frac,
+                          rtt=rtt, jitter=0.0)]
+    for t in range(k - 1):
+        stagger = steal_onset * (1.0 + t / max(k - 1, 1))
+        servers.append(ServerSpec(
+            name=f"thief{t + 1}", bandwidth=_DARK_BW, rtt=rtt, jitter=0.0,
+            profile=((stagger, origin_bw / max(k - 1, 1)),)))
+    return servers
+
+
+@dataclass(frozen=True)
+class ShardTrace:
+    """One named sharded-restore regime: the straggler's-eye view of a
+    ``k``-host mesh restoring a blob whose per-host span is ``size``
+    bytes.  Deterministic (``jitter=0``); ``swarm_axes`` converts the
+    servers to the jax round/scan throttle form unchanged (peer onsets
+    are single up-steps, exactly like swarm peers)."""
+
+    name: str
+    k: int
+    servers: tuple[ServerSpec, ...]
+    size: int
+
+
+def shard_traces(rtt: float = _DEFAULT_RTT) -> list[ShardTrace]:
+    """The two regimes ``benchmarks/shard_bench.py`` mirrors with real
+    sockets:
+
+    * ``balanced`` — 4 hosts, no straggler: stealing should find nothing
+      to do and cost nothing (the win-guard's "do no harm" side).
+    * ``straggler`` — 4 hosts, one origin at 1/8 rate: the regime where
+      work stealing converts the victim's makespan from span/slow-rate
+      toward span/(slow + thieves' fair shares).
+    """
+    span = GB // 4
+    return [
+        ShardTrace("balanced", 4,
+                   tuple(shard_fleet(4, straggler_frac=1.0, rtt=rtt)), span),
+        ShardTrace("straggler", 4,
+                   tuple(shard_fleet(4, straggler_frac=0.125,
+                                     steal_onset=0.5, rtt=rtt)), span),
     ]

@@ -53,19 +53,19 @@ mirrors).
 from __future__ import annotations
 
 import asyncio
-import bisect
 import contextlib
-import heapq
 import random
-import socket
 import time
-import zlib
 from dataclasses import dataclass, field, replace as _dc_replace
-from typing import NamedTuple, Optional, Sequence
+from typing import Optional, Sequence
 
-from repro.core.chunking import ChunkParams, default_chunk_params, next_chunk_size
+from repro.core.chunking import ChunkParams, default_chunk_params
 from repro.core.throughput import make_estimator, rtt_corrected_bandwidth
-from repro.transfer.journal import merge_intervals, uncovered_intervals
+from repro.transfer.journal import merge_intervals
+from repro.transfer.sched import ChunkScheduler, defaults as sched_defaults
+# _Conn/_RangeReply re-exported here: the data pipeline and the fleet
+# manager import them from this module (their historical home)
+from repro.transfer.transport import _Conn, _RangeReply, _crc32_async
 
 __all__ = ["Replica", "ClientOptions", "TransferReport", "MDTPClient",
            "NoTelemetryError", "TransferIncompleteError", "fetch_blob",
@@ -78,20 +78,14 @@ __all__ = ["Replica", "ClientOptions", "TransferReport", "MDTPClient",
 #: delays, which distorts throughput observations.  High-RTT paths gain
 #: another ~10-20% from depth 4 (see benchmarks/dataplane_bench.py);
 #: tune per deployment via ``MDTPClient(pipeline_depth=...)``.
-DEFAULT_PIPELINE_DEPTH = 2
-
-#: bodies at or below this size are CRC'd inline on the event loop (the
-#: executor round-trip costs more than the hash); larger bodies hash in
-#: the thread pool — zlib releases the GIL, so verification overlaps the
-#: next body's socket reads instead of stalling them.
-_CRC_INLINE_MAX = 128 * 1024
+DEFAULT_PIPELINE_DEPTH = sched_defaults.PIPELINE_DEPTH
 
 #: endgame re-poll cadence (s) for lanes parked with hedging enabled: a
 #: grayed-out mirror produces NO events to wake a parked lane (that is
 #: the failure mode hedging exists for), so idle endgame lanes re-check
 #: for straggling in-flight ranges on this period instead of waiting on
 #: a notification that will never come.
-_HEDGE_POLL_S = 0.05
+_HEDGE_POLL_S = sched_defaults.HEDGE_POLL_S
 
 
 class NoTelemetryError(RuntimeError):
@@ -196,7 +190,7 @@ class ClientOptions:
     #: see the ``MDTPClient`` docs for the full trigger conditions).
     hedge_quantile: float = 0.0
     #: hard cap on hedge waste as a fraction of the transfer size.
-    hedge_waste_frac: float = 0.05
+    hedge_waste_frac: float = sched_defaults.HEDGE_WASTE_FRAC
 
     # -- peer mirrors ------------------------------------------------------
     #: background coverage-refresh cadence (seconds) for partial peer
@@ -209,55 +203,6 @@ class ClientOptions:
     #: ``random.Random`` to make chaos-test retry timing reproducible;
     #: None = the module-global generator.
     rng: Optional[random.Random] = None
-
-
-# -- coverage-interval helpers (sorted disjoint [s, e) lists) -------------
-
-def _cov_run_at(cov: list, p: int) -> int:
-    """Index of the covered run containing point ``p``, else -1."""
-    k = bisect.bisect_right(cov, (p, 1 << 62)) - 1
-    if k >= 0 and cov[k][1] > p:
-        return k
-    return -1
-
-
-def _cov_contains(cov: list, lo: int, hi: int) -> bool:
-    """``[lo, hi)`` entirely inside one covered run?  (Empty spans are
-    trivially covered.)"""
-    if hi <= lo:
-        return True
-    k = _cov_run_at(cov, lo)
-    return k >= 0 and cov[k][1] >= hi
-
-
-def _cov_first_in(cov: list, lo: int, hi: int):
-    """First covered sub-span of ``[lo, hi)`` as ``(start, end)``, or
-    None when the window touches no coverage."""
-    if hi <= lo:
-        return None
-    k = _cov_run_at(cov, lo)
-    if k >= 0:
-        return lo, min(cov[k][1], hi)
-    k = bisect.bisect_right(cov, (lo, 1 << 62))
-    if k < len(cov) and cov[k][0] < hi:
-        return cov[k][0], min(cov[k][1], hi)
-    return None
-
-
-def _cov_first_out(cov: list, lo: int, hi: int):
-    """First UNcovered sub-span of ``[lo, hi)`` as ``(start, end)``, or
-    None when the window is fully covered."""
-    if hi <= lo:
-        return None
-    pos = lo
-    k = _cov_run_at(cov, lo)
-    if k >= 0:
-        pos = cov[k][1]
-        if pos >= hi:
-            return None
-    k = bisect.bisect_right(cov, (pos, 1 << 62))
-    end = cov[k][0] if k < len(cov) and cov[k][0] < hi else hi
-    return pos, end
 
 
 def _parse_ranges_header(raw: str) -> list:
@@ -342,332 +287,6 @@ def wire_elapsed(nbytes: int, elapsed: float, rtt: float) -> float:
     return nbytes / corrected if corrected > 0.0 else elapsed
 
 
-async def _crc32_async(data) -> int:
-    """CRC32 of a body, off the event loop for large bodies.
-
-    ``zlib.crc32`` accepts any buffer and releases the GIL, so hashing a
-    multi-megabyte range in the default executor runs concurrently with
-    the loop's socket reads; small bodies aren't worth the thread hop.
-    """
-    if len(data) <= _CRC_INLINE_MAX:
-        return zlib.crc32(data)
-    return await asyncio.get_running_loop().run_in_executor(
-        None, zlib.crc32, data)
-
-
-class _RangeReply(NamedTuple):
-    """One completed range request, with the timing metadata the
-    observation layer needs to de-bias throughput samples."""
-
-    #: the body: ``memoryview`` of the caller's buffer when ``into`` was
-    #: given, freshly-read ``bytes`` otherwise.
-    data: object
-    #: body length actually served (may be < requested on a clamped tail).
-    nbytes: int
-    #: seconds attributable to receiving THIS body.
-    elapsed: float
-    #: True when ``elapsed`` spans the full request round-trip (the pipe
-    #: was idle at issue time) — the estimator must strip the RTT.
-    rtt_included: bool
-    #: server-declared CRC32 of the range (``X-Range-Checksum`` header),
-    #: None when the server doesn't checksum.
-    crc32: Optional[int] = None
-
-
-class _Conn:
-    """One persistent pipelined HTTP/1.1 connection on a raw socket.
-
-    Requests may be issued concurrently by several tasks; writes are
-    serialized by a lock and responses are read strictly in request order
-    via a FIFO turnstile (each request waits on its predecessor's
-    completion event).  Bodies are received with ``sock_recv_into``
-    directly into the caller's buffer — the only copied bytes are the
-    header-phase read-ahead (bounded by ``_HEADER_RECV`` per response).
-
-    Collects per-connection RTT samples: the TCP connect time on session
-    establishment, then the request-write → status-line turnaround of
-    every request issued on an idle pipe (a queued-behind-a-body
-    turnaround measures the predecessor's streaming time, not the path).
-    Consumers drain ``take_rtt_samples()`` and min-aggregate.
-
-    Any failure (transport error, malformed response, a read stalled past
-    ``read_timeout``, cancellation mid-read) marks the connection
-    ``broken``: the stream position is unrecoverable, so every queued
-    request fails fast instead of parsing from the middle of a
-    predecessor's body.
-    """
-
-    #: recv size while parsing status/headers — small so read-ahead into
-    #: the copied header buffer steals at most this many body bytes from
-    #: the zero-copy path per response.
-    _HEADER_RECV = 4096
-
-    def __init__(self, replica: Replica, request_latency: float = 0.0,
-                 read_timeout: float = 0.0):
-        self.replica = replica
-        #: emulated request-path propagation delay (seconds) — a test and
-        #: benchmark knob: loopback has no real RTT, so the dataplane
-        #: bench injects one here to reproduce the WAN regime where
-        #: pipelining pays off.  Applied before each request send, off
-        #: the critical path of already-streaming predecessors.
-        self.request_latency = request_latency
-        #: per-READ inactivity bound (seconds; 0 disables).  A replica
-        #: that stalls without dying would otherwise hang a lane forever
-        #: — the timeout converts the stall into a ``ConnectionError`` so
-        #: it takes the same re-pool path as a connection death.  Scoped
-        #: per socket read, not per request: a huge range streaming
-        #: slowly-but-steadily never trips it.
-        self.read_timeout = read_timeout
-        self.broken = False
-        self._sock: Optional[socket.socket] = None
-        self._rbuf = bytearray()
-        self._rtt_samples: list[float] = []
-        self._wlock = asyncio.Lock()
-        #: completion event of the most recently issued request (the
-        #: turnstile tail); None = pipe idle since connect.
-        self._tail: Optional[asyncio.Event] = None
-
-    def take_rtt_samples(self) -> list[float]:
-        samples, self._rtt_samples = self._rtt_samples, []
-        return samples
-
-    async def connect(self):
-        loop = asyncio.get_running_loop()
-        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        sock.setblocking(False)
-        t0 = time.monotonic()
-        try:
-            await loop.sock_connect(
-                sock, (self.replica.host, self.replica.port))
-        except BaseException:
-            sock.close()
-            raise
-        self._rtt_samples.append(time.monotonic() - t0)
-        # pipelined requests are tiny back-to-back writes: without NODELAY
-        # Nagle would hold them hostage to the previous response's ACKs
-        with contextlib.suppress(OSError):
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        self._sock = sock
-
-    async def close(self):
-        if self._sock is not None:
-            with contextlib.suppress(OSError):
-                self._sock.close()
-            self._sock = None
-
-    def abort(self) -> None:
-        """Break the connection under a CONCURRENT reader (hedge-win
-        cancellation).  ``close()`` would free the fd while a
-        ``sock_recv`` future is still registered on it — the selector
-        never fires for a closed fd and the loser's read would only die
-        at the inactivity timeout.  ``shutdown()`` keeps the fd alive
-        and wakes the pending read with EOF immediately; the owning
-        worker then closes the socket on its normal unwind path."""
-        self.broken = True
-        if self._sock is not None:
-            with contextlib.suppress(OSError):
-                self._sock.shutdown(socket.SHUT_RDWR)
-
-    # -- buffered header reads / zero-copy body reads ----------------------
-
-    async def _timed(self, aw):
-        """Bound one socket read by the inactivity timeout."""
-        if self.read_timeout <= 0.0:
-            return await aw
-        try:
-            return await asyncio.wait_for(aw, self.read_timeout)
-        except asyncio.TimeoutError:
-            raise ConnectionError(
-                f"read stalled > {self.read_timeout:g}s "
-                f"(inactivity timeout)") from None
-
-    def _live_sock(self) -> socket.socket:
-        """Snapshot the socket for one read.  A concurrent ``close()``
-        (a hedge winner severing the losing lane) nulls ``_sock`` between
-        awaits; reading through the snapshot turns that race into the
-        ConnectionError every caller already handles instead of an
-        AttributeError on ``None``."""
-        sock = self._sock
-        if sock is None:
-            raise ConnectionError("connection closed")
-        return sock
-
-    async def _fill(self, hint: int) -> None:
-        data = await self._timed(
-            asyncio.get_running_loop().sock_recv(self._live_sock(), hint))
-        if not data:
-            raise ConnectionError("connection closed")
-        self._rbuf += data
-
-    async def _readline(self) -> bytes:
-        while True:
-            idx = self._rbuf.find(b"\n")
-            if idx >= 0:
-                line = bytes(self._rbuf[:idx + 1])
-                del self._rbuf[:idx + 1]
-                return line
-            if len(self._rbuf) > 65536:
-                raise ConnectionError("oversized header line")
-            await self._fill(self._HEADER_RECV)
-
-    async def _read_headers(self) -> tuple[int, dict]:
-        status = await self._readline()
-        parts = status.split()
-        if len(parts) < 2 or not parts[1].isdigit():
-            raise ConnectionError(f"malformed status line: {status!r}")
-        code = int(parts[1])
-        headers = {}
-        while True:
-            line = await self._readline()
-            if line in (b"\r\n", b"\n", b""):
-                break
-            k, _, v = line.decode("latin-1").partition(":")
-            headers[k.strip().lower()] = v.strip()
-        return code, headers
-
-    async def _read_body(self, n: int, into: Optional[memoryview],
-                         progress: Optional[list] = None):
-        """Read exactly ``n`` body bytes — into the caller's view when
-        given (zero-copy), into fresh ``bytes`` otherwise.  Slot 0 of
-        ``progress`` (a list) is kept updated with the byte count landed
-        so far — the hedging layer reads it to avoid duplicating ranges
-        whose owner has already received most of the body."""
-        if into is None:
-            scratch = bytearray(n)
-            view = memoryview(scratch)
-        else:
-            if len(into) < n:
-                raise ConnectionError(
-                    f"response body {n} B overruns the {len(into)} B "
-                    f"destination range")
-            scratch = None
-            view = into
-        got = min(len(self._rbuf), n)   # header-phase read-ahead first
-        if got:
-            view[:got] = self._rbuf[:got]
-            del self._rbuf[:got]
-        if progress is not None:
-            progress[0] = got
-        loop = asyncio.get_running_loop()
-        try:
-            while got < n:
-                r = await self._timed(
-                    loop.sock_recv_into(self._live_sock(), view[got:n]))
-                if r <= 0:
-                    raise ConnectionError(
-                        f"connection closed mid-body ({got}/{n} B)")
-                got += r
-                if progress is not None:
-                    progress[0] = got
-        except ConnectionError as e:
-            # how much of the body actually landed before the break —
-            # the waste accounting for a hedge-cancelled read charges
-            # the bytes genuinely spent, not the whole range
-            e.partial_bytes = got
-            raise
-        return bytes(scratch) if scratch is not None else view[:n]
-
-    # -- requests ----------------------------------------------------------
-
-    def _request_bytes(self, method: str, start=None, end=None) -> bytes:
-        rng = (f"Range: bytes={start}-{end}\r\n"
-               if start is not None else "")
-        return (f"{method} {self.replica.path} HTTP/1.1\r\n"
-                f"Host: {self.replica.host}\r\n{rng}"
-                f"Connection: keep-alive\r\n\r\n").encode()
-
-    @staticmethod
-    def _parse_checksum(headers: dict) -> Optional[int]:
-        raw = headers.get("x-range-checksum")
-        if raw and raw.startswith("crc32:"):
-            try:
-                return int(raw[len("crc32:"):], 16)
-            except ValueError:
-                return None
-        return None
-
-    async def fetch_range(self, start: int, end: int,
-                          into: Optional[memoryview] = None,
-                          progress: Optional[list] = None) -> _RangeReply:
-        """GET bytes [start, end] inclusive over the persistent session.
-
-        May be called concurrently: the request goes on the wire
-        immediately (pipelined behind any in-flight predecessors) and the
-        response is read in FIFO order.  With ``into``, the body is
-        received directly into that view and the reply's ``data`` is
-        ``into[:nbytes]``; without it, fresh ``bytes`` are returned.
-        """
-        if self._sock is None:
-            # concurrent lanes race to the first request: exactly one may
-            # establish the session (an unguarded lazy connect would open
-            # one socket per lane and leak all but the last)
-            async with self._wlock:
-                if self._sock is None and not self.broken:
-                    try:
-                        await self.connect()
-                    except BaseException:
-                        self.broken = True
-                        raise
-        if self.request_latency > 0.0:
-            await asyncio.sleep(self.request_latency)
-        my_done = asyncio.Event()
-        async with self._wlock:
-            if self.broken or self._sock is None:
-                raise ConnectionError("pipelined connection broken")
-            prior = self._tail
-            self._tail = my_done
-            pipelined = prior is not None and not prior.is_set()
-            t_send = time.monotonic()
-            if progress is not None and len(progress) > 1:
-                # wire-send stamp for the hedging layer: a range starts
-                # aging only once its request is actually on the wire
-                progress[1] = t_send
-            try:
-                await asyncio.get_running_loop().sock_sendall(
-                    self._sock, self._request_bytes("GET", start, end))
-            except BaseException:
-                self.broken = True
-                my_done.set()
-                raise
-        try:
-            if prior is not None:
-                await prior.wait()
-            if self.broken:
-                raise ConnectionError("pipelined predecessor failed")
-            t_ready = time.monotonic()
-            code, headers = await self._read_headers()
-            if not pipelined:
-                # idle-pipe turnaround = request RTT + server think time
-                self._rtt_samples.append(time.monotonic() - t_send)
-            if code not in (200, 206):
-                raise ConnectionError(f"HTTP {code}")
-            try:
-                n = int(headers["content-length"])
-            except (KeyError, ValueError):
-                raise ConnectionError("missing/invalid Content-Length")
-            body = await self._read_body(n, into, progress)
-            t_end = time.monotonic()
-            return _RangeReply(
-                data=body, nbytes=n,
-                elapsed=t_end - (t_ready if pipelined else t_send),
-                rtt_included=not pipelined,
-                crc32=self._parse_checksum(headers))
-        except BaseException:
-            self.broken = True
-            raise
-        finally:
-            my_done.set()
-
-    async def head(self) -> tuple[int, dict]:
-        """HEAD the replica's path; returns (status, headers).  Not
-        pipelined — used once per transfer for size discovery."""
-        if self._sock is None:
-            await self.connect()
-        await asyncio.get_running_loop().sock_sendall(
-            self._sock, self._request_bytes("HEAD"))
-        return await self._read_headers()
-
-
 class MDTPClient:
     """Downloads one blob from N replicas with MDTP adaptive chunking."""
 
@@ -733,15 +352,19 @@ class MDTPClient:
         self._rng = options.rng if options.rng is not None else random
         #: report of the most recent ``fetch`` (None before the first one).
         self.last_report: Optional[TransferReport] = None
+        #: set to a list to record the next fetch's scheduler decision
+        #: trace (``repro.transfer.sched.replay`` re-drives it; the
+        #: decision-parity test in tests/test_sched.py uses this hook).
+        self._sched_trace: Optional[list] = None
 
     #: fallback request RTT (s) for replicas that never produced a sample —
     #: ~WAN RTT between FABRIC sites, matching the simulator scenarios.
-    DEFAULT_RTT = 0.03
+    DEFAULT_RTT = sched_defaults.DEFAULT_RTT
 
     #: minimum contiguous streaming time (s) aggregated into one
     #: throughput observation — see the observation-window comment in
     #: ``fetch``.
-    OBS_WINDOW_S = 0.02
+    OBS_WINDOW_S = sched_defaults.OBS_WINDOW_S
 
     def retune(self, file_size: int, **autotune_kw):
         """Re-tune chunk sizes from the last transfer's live observations.
@@ -899,7 +522,6 @@ class MDTPClient:
         :class:`TransferIncompleteError` once their joint coverage has
         been static for a patience window, instead of waiting forever.
         """
-        params_box = [self._params_arg or default_chunk_params(size)]
         n = len(self.replicas)
         depth = self.pipeline_depth
         est = [make_estimator(self._estimator, self._alpha) for _ in range(n)]
@@ -929,69 +551,24 @@ class MDTPClient:
         journal = resume
         need_crc = verify or journal is not None
 
-        # the fresh-byte frontier: never-assigned spans as ordered
-        # (start, end) segments.  The classic single ``cursor`` is the
-        # one-segment case [(0, size)]; ``stripe=(k, n)`` rotates the
-        # walk to start at size*k//n (two segments, wrapping).  ``fresh``
-        # mirrors the segments' byte total so the hot remaining-work
-        # check stays O(1).
-        segs: list = [(0, size)] if size > 0 else []
-        if stripe is not None and size > 0:
-            k_, n_ = stripe
-            p = (size * (k_ % max(int(n_), 1))) // max(int(n_), 1)
-            if 0 < p < size:
-                segs = [(p, size), (0, p)]
-        fresh = sum(e_ - s_ for s_, e_ in segs)
-        # reclaimed (start, len, banned) min-heap keyed on range start
-        # (ranges never overlap, so comparisons never reach the
-        # non-orderable ban set); ``banned`` is the frozenset of replica
-        # indices that served this range corrupt — the packer re-fetches
-        # it from anyone else.  ``pooled`` mirrors the heap's byte total
-        # so the hot remaining-work check is O(1).
-        pool: list[tuple[int, int, frozenset]] = []
-        pooled = 0
-        bytes_per = {r.name: 0 for r in self.replicas}
-        reqs_per = {r.name: 0 for r in self.replicas}
-        retries_per = {r.name: 0 for r in self.replicas}
-        corrupt_per = {r.name: 0 for r in self.replicas}
-        rtt_min = [0.0] * n                      # 0 = no sample yet
-        failed: list[str] = []
-        #: replica indices whose worker is still running — the ban-set
-        #: escape hatch (a range banned for EVERY live replica may be
-        #: retried by anyone rather than deadlock) and the worker-exit
-        #: wakeup both key off this.
-        alive: set = set(range(n))
-        refetched = 0
-        # -- partial-mirror coverage (``Replica.mirror``) ------------------
-        #: replica index -> advertised coverage as window-relative sorted
-        #: disjoint (start, end) runs; None = full replica (everything).
-        #: Starts EMPTY for mirrors — nothing is packed onto a peer until
-        #: its first advertisement arrives.
-        avail: list = [([] if r.mirror else None) for r in self.replicas]
-        partial_idx = [j for j, r in enumerate(self.replicas) if r.mirror]
-        #: union of all LIVE peers' coverage (same run form) — what the
-        #: origin-offload pass steers full replicas away from.
-        cov_union: list = []
-        #: monotonic stamp of the last coverage CHANGE; the give-up rule
-        #: for uncoverable work keys off how long it has been static.
-        cov_stamp = [time.monotonic()]
-        refresh_s = max(float(self.coverage_refresh_s), 0.005)
-        cov_patience = max(1.0, 10.0 * refresh_s)
-
-        def _recompute_union() -> None:
-            runs = []
-            for j in partial_idx:
-                if j in alive:
-                    runs.extend(avail[j])
-            runs.sort()
-            merged: list = []
-            for s_, e_ in runs:
-                if merged and s_ <= merged[-1][1]:
-                    if e_ > merged[-1][1]:
-                        merged[-1] = (merged[-1][0], e_)
-                else:
-                    merged.append((s_, e_))
-            cov_union[:] = merged
+        # the decision brain: every allocation, hedge, and repool choice
+        # lives in the sans-I/O ``ChunkScheduler`` (repro.transfer.sched)
+        # — this method is transport glue that drives it under ``lock``
+        # and performs the I/O its results prescribe.  Scratch-buffer
+        # hedges need a readable destination to commit to, so hedging is
+        # in-memory-assembly only (see __init__).
+        sched = ChunkScheduler(
+            size, [r.mirror for r in self.replicas],
+            params=self._params_arg or default_chunk_params(size),
+            depth=depth,
+            hedge_quantile=self.hedge_quantile if sink is None else 0.0,
+            hedge_waste_frac=self.hedge_waste_frac,
+            default_rtt=self.DEFAULT_RTT,
+            max_failures=self.max_failures,
+            coverage_refresh_s=self.coverage_refresh_s,
+            stripe=stripe, trace=self._sched_trace)
+        hedge_q = sched.hedge_quantile
+        refresh_s = sched.refresh_s
 
         lock = asyncio.Lock()
         #: signalled whenever reclaimed work appears or in-flight bytes
@@ -1000,7 +577,6 @@ class MDTPClient:
         #: peer's replica dies, its range returns to the pool and needs a
         #: surviving taker — the mirror-death fault-tolerance contract).
         cond = asyncio.Condition(lock)
-        done_bytes = 0
         resumed_bytes = 0
         resume_verify = 0.0
 
@@ -1030,13 +606,7 @@ class MDTPClient:
                 verified.append((s_abs - offset, nb))
             resume_verify = time.monotonic() - t_verify
             covered = merge_intervals(verified)
-            for s_, n_ in uncovered_intervals(covered, size):
-                heapq.heappush(pool, (s_, n_, frozenset()))
-                pooled += n_
-            segs.clear()             # all remaining work lives in the pool
-            fresh = 0
-            resumed_bytes = size - pooled
-            done_bytes = resumed_bytes
+            resumed_bytes = sched.seed_resume(covered)
             if sink_commit is not None:
                 # drive the sink's covered-interval accounting so resumed
                 # regions materialize exactly like freshly landed ones
@@ -1050,16 +620,28 @@ class MDTPClient:
         # telemetry cadence: a handful of updates per transfer by default,
         # but never finer than a couple of large chunks' worth of signal
         tune_every = tune_interval_bytes or max(
-            size // 8, 2 * params_box[0].large_chunk)
-        tune_state = {"bytes": done_bytes, "t": t0, "busy": False,
+            size // 8, 2 * sched.params.large_chunk)
+        tune_state = {"bytes": sched.done_bytes, "t": t0, "busy": False,
                       "task": None}
+
+        def _failed_names() -> list:
+            """Retired replica names in retirement order, deduped — the
+            report and the giving-up error are name-keyed while the
+            scheduler tracks indices."""
+            names: list = []
+            for k in sched.failed:
+                nm = self.replicas[k].name
+                if nm not in names:
+                    names.append(nm)
+            return names
 
         def _telemetry_bandwidths() -> tuple:
             """Full-fleet positional wire-rate vector for ``Telemetry``:
             estimator values (already RTT-de-biased at observation time),
             dead replicas zeroed in place."""
+            bad = set(_failed_names())
             return tuple(
-                0.0 if r.name in failed else float(est[i].value)
+                0.0 if r.name in bad else float(est[i].value)
                 for i, r in enumerate(self.replicas))
 
         async def maybe_retune():
@@ -1074,12 +656,12 @@ class MDTPClient:
                     from repro.core.online import Telemetry
 
                     now = time.monotonic()
-                    window_bytes = done_bytes - tune_state["bytes"]
+                    window_bytes = sched.done_bytes - tune_state["bytes"]
                     window_t = max(now - tune_state["t"], 1e-9)
                     telemetry = Telemetry(
                         bandwidth=_telemetry_bandwidths(),
-                        rtt=tuple(float(x) for x in rtt_min),
-                        remaining_bytes=float(size - done_bytes),
+                        rtt=tuple(float(x) for x in sched.rtt_min),
+                        remaining_bytes=float(size - sched.done_bytes),
                         measured_throughput=window_bytes / window_t,
                         elapsed=now - t0,
                     )
@@ -1094,62 +676,18 @@ class MDTPClient:
                     # bug) must never fail a transfer whose bytes are
                     # flowing fine — keep the current geometry, carry on
                     new = None
-                tune_state["bytes"] = done_bytes
+                tune_state["bytes"] = sched.done_bytes
                 tune_state["t"] = time.monotonic()
                 if new is not None:
-                    params_box[0] = new
+                    sched.adopt_params(new)
                     retunes += 1
             finally:
                 tune_state["busy"] = False
 
-        # bytes currently on the wire somewhere; a lane that sees no
-        # unassigned bytes must NOT exit while another lane still owes a
-        # range (see ``cond`` above).
-        inflight = 0
-
-        # -- endgame hedging state (``hedge_quantile`` > 0) ----------------
-        # scratch-buffer hedges need a readable destination to commit to,
-        # so hedging is in-memory-assembly only (see __init__ docstring)
-        hedge_q = self.hedge_quantile if sink is None else 0.0
-        #: per-replica EWMA of per-byte receive latency (s/B) — the
-        #: straggler signal the hedge quantile cuts across.
-        lat_ewma = [0.0] * n
-        #: per-replica monotonic time of the last COMPLETED range — the
-        #: wedge signal: a gray mirror stops finishing anything, while an
-        #: honestly-congested one keeps completing sibling ranges.
-        last_done = [0.0] * n
-        #: scheduler-stall clock.  A heartbeat task sleeps
-        #: ``_HEDGE_POLL_S`` at a time; waking far later means the whole
-        #: process was starved (CPU contention, GC pause) — every
-        #: in-flight range aged without its owner getting any airtime,
-        #: and firing on that age would hedge perfectly healthy owners
-        #: at a full range's waste each.  ``stall_s[0]`` accumulates the
-        #: stolen time; the trigger subtracts the portion accrued over
-        #: each range's own lifetime, so a loaded host DELAYS hedges
-        #: instead of misfiring them.  ``last_done_stall`` pairs a
-        #: snapshot with each ``last_done`` stamp for the wedge window.
-        stall_s = [0.0]
-        last_done_stall = [0.0] * n
-        #: start -> (length, owner, ban, progress, stall_at) for every
-        #: range on the wire; maintained only while hedging is enabled.
-        #: ``progress`` is ``[bytes_landed, wire_send_time]``: the
-        #: owner's body read keeps slot 0 updated, and the connection
-        #: stamps slot 1 the moment the request is actually SENT — the
-        #: hedge trigger ages ranges from that stamp, because time spent
-        #: queued on a slot semaphore or byte budget says nothing about
-        #: the owner's health.  ``stall_at`` snapshots ``stall_s`` at
-        #: issue time.
-        outstanding: dict = {}
-        #: start -> (length, hedger, conn) for every hedge in flight;
-        #: the lengths are RESERVED against the waste budget (a hedge
-        #: can waste at most its own range, whichever side loses the
-        #: race), and the connection is what an owner that lands first
-        #: breaks to cancel the losing copy promptly.
-        hedged: dict = {}
-        settled: set = set()         # starts a winning hedge completed
-        #: winner bytes kept until the losing copy resolves, so a loser
-        #: body that zero-copy-landed over them can be healed back.
-        settled_data: dict = {}
+        # -- endgame-hedging transport state ------------------------------
+        #: start -> the connection streaming a duplicate of that range
+        #: (what an owner that lands first breaks to cancel the race).
+        hedge_conns: dict = {}
         #: owner indices whose connection was broken ON PURPOSE to cancel
         #: a lost race — the worker reconnects without charging its
         #: failure budget.
@@ -1158,398 +696,47 @@ class MDTPClient:
         #: lanes on (so a winning hedge can break the loser's connection
         #: and turn its pending read into a prompt error).
         conn_of: dict = {}
-        hedges_issued = hedges_won = 0
-        hedge_wasted = 0
-
-        def observe_latency(i: int, ndata: int, elapsed: float) -> None:
-            if ndata <= 0 or elapsed <= 0.0:
-                return
-            last_done[i] = time.monotonic()
-            last_done_stall[i] = stall_s[0]
-            pb = elapsed / ndata
-            lat_ewma[i] = pb if lat_ewma[i] <= 0.0 \
-                else 0.5 * lat_ewma[i] + 0.5 * pb
 
         async def _stall_clock() -> None:
-            """Heartbeat feeding ``stall_s``: each sleep should wake
-            after ``_HEDGE_POLL_S``; waking well past twice that means
-            the event loop (and so every lane) was starved, and the
-            overshoot is time stolen from ALL owners at once, not
-            evidence against any one of them."""
+            """Heartbeat feeding the scheduler's stall meter: each sleep
+            should wake after ``_HEDGE_POLL_S``; waking well past twice
+            that means the event loop (and so every lane) was starved,
+            and the overshoot is time stolen from ALL owners at once,
+            not evidence against any one of them."""
             prev = time.monotonic()
             while True:
                 await asyncio.sleep(_HEDGE_POLL_S)
                 t = time.monotonic()
                 if t - prev > 2.0 * _HEDGE_POLL_S:
-                    stall_s[0] += (t - prev) - _HEDGE_POLL_S
+                    sched.add_stall((t - prev) - _HEDGE_POLL_S)
                 prev = t
 
-        def _heal_settled(start: int) -> None:
-            """Restore a winning hedge's bytes over whatever a losing
-            copy wrote into the destination (called under the lock when
-            the loser resolves)."""
-            settled.discard(start)
-            good = settled_data.pop(start, None)
-            if buf is not None and good is not None:
-                buf[start:start + len(good)] = good
-
-        def _pick_hedge(j: int):
-            """A straggling in-flight range worth duplicating onto idle
-            replica ``j`` (called under the lock), or None.
-
-            A candidate must be OVERDUE: aged past what its owner should
-            plausibly have needed, where "should" spans the lane queue —
-            a pipelined range can wait ``depth`` service times behind its
-            siblings while perfectly healthy, so the overdue bar starts
-            at ``depth + 1`` expected service times.  MDTP sizes chunks
-            so slow mirrors finish ON TIME; being slow per-byte is not by
-            itself straggling.  An owner whose per-byte latency EWMA sits
-            at or above the ``hedge_quantile`` of the live fleet's EWMAs
-            gets the lower bar; a healthy-looking owner must overshoot
-            twice that AND look wedged — no range completed within an
-            expected service time.  That is the gray-failure shape: a
-            stalled mirror stops producing samples, its EWMA stays
-            stale-fast (so the bar built on it is tiny) and only the
-            range's age betrays it, whereas an honestly-congested owner
-            keeps completing sibling ranges, and a near-tie duplicate
-            race against it would waste a range's worth of bytes to
-            save almost nothing.  Either way replica ``j`` must
-            plausibly beat continuing to wait: the range's age already
-            exceeds what ``j`` itself would have needed to fetch it.
-            All ages discount measured scheduler stall (``stall_s``):
-            on a starved host every range ages at once, and that is
-            evidence against the HOST, not any owner."""
-            if not hedge_q or not outstanding:
-                return None
-            # endgame window: residual below ~2 allocator rounds (upper
-            # bound — L per live replica is one full round's share)
-            if fresh + pooled + inflight > \
-                    2 * params_box[0].large_chunk * max(len(alive), 1):
-                return None
-            if lat_ewma[j] <= 0.0:
-                return None          # no evidence j is any faster
-            # waste budget: committed waste + reserved in-flight lengths.
-            # The first hedge is always affordable — on a small transfer
-            # a single range can exceed the fractional budget outright,
-            # and a cap that can never admit ANY hedge is no cap at all;
-            # the bound is therefore frac*size plus at most one range.
-            budget = self.hedge_waste_frac * size \
-                - hedge_wasted - sum(h[0] for h in hedged.values())
-            first_free = not hedged and hedge_wasted <= 0.0
-            samples = sorted(lat_ewma[k] for k in alive
-                             if lat_ewma[k] > 0.0)
-            slow_cut = None
-            if len(samples) >= 2:
-                pos = hedge_q * (len(samples) - 1)
-                lo = int(pos)
-                hi = min(lo + 1, len(samples) - 1)
-                slow_cut = samples[lo] \
-                    + (samples[hi] - samples[lo]) * (pos - lo)
-            now = time.monotonic()
-            my_rtt = rtt_min[j] if rtt_min[j] > 0.0 else self.DEFAULT_RTT
-            best = None
-            for s_, (ln_, owner, ban_, prog_, st_) in \
-                    outstanding.items():
-                if owner == j or s_ in hedged or s_ in settled \
-                        or j in ban_ or (ln_ > budget and not first_free):
-                    continue
-                if avail[j] is not None and \
-                        not _cov_contains(avail[j], s_, s_ + ln_):
-                    # a partial mirror may only duplicate ranges its
-                    # advertisement covers in full
-                    continue
-                if 2 * prog_[0] > ln_:
-                    # the owner already landed most of the body: cancel-
-                    # ling it would waste more bytes than the duplicate
-                    # could save — let the remainder trickle in
-                    continue
-                if prog_[1] <= 0.0:
-                    # the request never hit the wire (still queued on a
-                    # slot semaphore or the byte budget): whatever delays
-                    # it sits upstream of the owner, and a duplicate
-                    # would just queue behind the same gate
-                    continue
-                # age from the wire-send stamp, discounting scheduler
-                # stall accrued since issue: queueing and host starvation
-                # age every range at once and say nothing about THIS
-                # owner's health
-                age = (now - prog_[1]) - (stall_s[0] - st_)
-                if age <= my_rtt + ln_ * lat_ewma[j]:
-                    continue         # j would not have finished it yet
-                if prog_[0] > 0:
-                    # the owner is visibly streaming: from its observed
-                    # rate ON THIS RANGE, project the remainder's
-                    # landing time, and duplicate only when j would
-                    # finish the WHOLE range well before that — a
-                    # merely-contended owner (storm sharing the mirror)
-                    # streams slower than its EWMA promises, and racing
-                    # it is a near-tie that wastes a body to save
-                    # almost nothing.  A gray mirror's trickle projects
-                    # seconds of remainder and still qualifies.
-                    rem = (ln_ - prog_[0]) * age / prog_[0]
-                    if rem <= 2.0 * (my_rtt + ln_ * lat_ewma[j]):
-                        continue
-                slow = slow_cut is not None and lat_ewma[owner] >= slow_cut
-                o_rtt = rtt_min[owner] if rtt_min[owner] > 0.0 \
-                    else self.DEFAULT_RTT
-                expect_owner = o_rtt + ln_ * lat_ewma[owner]
-                # absolute grace floor: at small-chunk scale the expected
-                # times are milliseconds, and event-loop/scheduler jitter
-                # alone would look like lateness — a few poll periods of
-                # slack costs a genuine straggler almost nothing
-                overdue = (depth + 1.0) * expect_owner + 4.0 * _HEDGE_POLL_S
-                # wedge signal for healthy-LOOKING owners: a gray mirror
-                # stops completing anything, while an honestly-congested
-                # one keeps finishing sibling ranges — hedging the latter
-                # is a near-tie race that wastes a range to save nothing
-                wedged = last_done[owner] <= 0.0 or \
-                    (now - last_done[owner]) \
-                    - (stall_s[0] - last_done_stall[owner]) > \
-                    expect_owner + 4.0 * _HEDGE_POLL_S
-                if lat_ewma[owner] <= 0.0 \
-                        or (slow and age > overdue) \
-                        or (wedged and age > 2.0 * overdue):
-                    # cheapest insurance first: among overdue candidates
-                    # duplicate the SHORTEST range — a losing copy can
-                    # waste at most its own length, and a short range is
-                    # also the one a hedge can actually win by a margin
-                    if best is None or ln_ < best[1]:
-                        best = (s_, ln_, owner, ban_)
-            return best
-
-        def observe_rtt(i: int, sample: float) -> None:
-            if sample > 0.0:
-                rtt_min[i] = (sample if rtt_min[i] <= 0.0
-                              else min(rtt_min[i], sample))
+        def _abort_hedge(start: int, hedger) -> None:
+            """Actively cancel a doomed duplicate the scheduler flagged:
+            breaking its connection turns the pending read into a prompt
+            ConnectionError charging only the bytes it really landed,
+            and ``hedge_broke`` lets its worker reconnect without
+            failure-budget cost."""
+            if hedger is None:
+                return
+            c = hedge_conns.get(start)
+            if c is not None and not c.broken:
+                hedge_broke.add(hedger)
+                c.abort()
 
         async def _reclaim(start: int, length: int, ban: frozenset, *,
                            count: bool, lost: int = 0) -> None:
-            """Return an owed range to the pool and settle the in-flight
-            count, atomically, waking parked lanes.  A range a winning
-            hedge already settled is NOT re-pooled (its bytes are done
-            and its in-flight claim already released); the loser's
-            partial zero-copy writes are healed back instead, and the
-            ``lost`` bytes it did land are charged to the hedge waste.
-
-            A hedge still in flight on the reclaimed range is cancelled
-            too: the claim it raced is gone, and the endgame's shrinking
-            draws mean the re-pooled range usually re-enters SPLIT — a
-            shape the duplicate can no longer settle, so letting it
-            stream to completion could only charge a full body."""
-            nonlocal inflight, pooled, refetched, hedge_wasted
-            doomed = None
+            """Return an owed range to the scheduler atomically, waking
+            parked lanes, then perform whatever healing/cancellation it
+            prescribes (a settled range heals the winner's bytes back; a
+            duplicate still racing the reclaimed range is aborted)."""
             async with lock:
-                outstanding.pop(start, None)
-                if start in settled:
-                    _heal_settled(start)
-                    hedge_wasted += min(lost, length)
-                    cond.notify_all()
-                    return
-                doomed = hedged.get(start)
-                heapq.heappush(pool, (start, length, ban))
-                pooled += length
-                inflight -= length
-                if count:
-                    refetched += 1
+                res = sched.on_reclaim(start, length, ban,
+                                       count=count, lost=lost)
+                if res.heal is not None and buf is not None:
+                    buf[start:start + len(res.heal)] = res.heal
                 cond.notify_all()
-            if doomed is not None and not doomed[2].broken:
-                hedge_broke.add(doomed[1])
-                doomed[2].abort()
-
-        def _capable(j: int, s_: int, ln_: int) -> bool:
-            """Could replica ``j`` serve any part of ``[s_, s_+ln_)``?
-            Full replicas always can; a partial mirror only when its
-            advertisement intersects the span."""
-            cov_j = avail[j]
-            return cov_j is None or \
-                _cov_first_in(cov_j, s_, s_ + ln_) is not None
-
-        def _ban_ok(i: int, s_: int, ln_: int, ban_: frozenset) -> bool:
-            """May replica ``i`` take an entry tagged ``ban_``?  A banned
-            replica stands aside while any OTHER live replica that can
-            actually cover the span remains unbanned; once none does,
-            anyone may retry (the re-verify catches a repeat corruption;
-            refusing would deadlock the tail)."""
-            if i not in ban_:
-                return True
-            return not any(j not in ban_ and _capable(j, s_, ln_)
-                           for j in alive)
-
-        def _pick_pool_entry(i: int) -> Optional[int]:
-            """Index of the lowest-start pool entry replica ``i`` may
-            take (see ``_ban_ok``).  Linear scan: the pool holds
-            reclaimed ranges only, a handful at worst."""
-            best = None
-            for k, (s_, ln_, ban_) in enumerate(pool):
-                if not _ban_ok(i, s_, ln_, ban_):
-                    continue
-                if best is None or s_ < pool[best][0]:
-                    best = k
-            return best
-
-        def _take_pool(k: int, at: int, take: int) -> None:
-            """Claim ``[at, at+take)`` out of pool entry ``k`` (under the
-            lock): un-taken prefix/suffix pieces keep the entry's ban
-            tag and return to the heap."""
-            nonlocal pooled
-            s_, ln_, ban_ = pool.pop(k)
-            if at > s_:
-                pool.append((s_, at - s_, ban_))
-            tail = (s_ + ln_) - (at + take)
-            if tail > 0:
-                pool.append((at + take, tail, ban_))
-            heapq.heapify(pool)
-            pooled -= take
-
-        def _take_seg(si: int, at: int, take: int) -> None:
-            """Claim ``[at, at+take)`` out of frontier segment ``si``
-            (under the lock)."""
-            nonlocal fresh
-            s_, e_ = segs[si]
-            if at == s_ and at + take == e_:
-                del segs[si]
-            elif at == s_:
-                segs[si] = (at + take, e_)
-            elif at + take == e_:
-                segs[si] = (s_, at)
-            else:
-                segs[si:si + 1] = [(s_, at), (at + take, e_)]
-            fresh -= take
-
-        def _origin_restricted() -> bool:
-            """Should full replicas keep their hands off peer-covered
-            spans right now (under the lock)?  True while live peers
-            advertise coverage AND the transfer is not in its endgame:
-            every peer-covered byte the origin re-serves is egress the
-            whole swarm pays for (the broadcast win is origin egress
-            ~one copy of the blob), so outside the endgame the origin
-            serves only bytes NO peer holds.  In the endgame (residual
-            below ~2 allocator rounds) the origin rejoins freely — an
-            idle origin must not stretch the tail."""
-            if not cov_union:
-                return False
-            return fresh + pooled + inflight > \
-                2 * params_box[0].large_chunk * max(len(alive), 1)
-
-        def _can_draw(i: int) -> bool:
-            """Is there ANY remaining span replica ``i`` may serve right
-            now (under the lock)?  The park/draw gate: full replicas can
-            take fresh bytes or any un-banned pool entry (uncovered-only
-            while ``_origin_restricted``); a partial mirror needs its
-            advertisement to intersect something."""
-            cov = avail[i]
-            if cov is None:
-                if _origin_restricted():
-                    for s_, ln_, ban_ in pool:
-                        if _ban_ok(i, s_, ln_, ban_) and _cov_first_out(
-                                cov_union, s_, s_ + ln_) is not None:
-                            return True
-                    return any(_cov_first_out(cov_union, s_, e_) is not None
-                               for s_, e_ in segs)
-                return fresh > 0 or (bool(pool)
-                                     and _pick_pool_entry(i) is not None)
-            if not cov:
-                return False
-            for s_, ln_, ban_ in pool:
-                if _ban_ok(i, s_, ln_, ban_) \
-                        and _cov_first_in(cov, s_, s_ + ln_) is not None:
-                    return True
-            return any(_cov_first_in(cov, s_, e_) is not None
-                       for s_, e_ in segs)
-
-        def _hopeless() -> bool:
-            """Give-up rule (under the lock): every surviving source is
-            a partial mirror, their joint coverage has been static for a
-            patience window, and some remaining span lies outside it —
-            those bytes can never arrive, so lanes should exit and let
-            ``fetch`` raise instead of parking forever.  While any full
-            replica survives (or coverage is still growing) this stays
-            False."""
-            if inflight > 0 or not partial_idx:
-                return False
-            if any(avail[j] is None for j in alive):
-                return False
-            if time.monotonic() - cov_stamp[0] < cov_patience:
-                return False
-            for s_, ln_, _b in pool:
-                if not _cov_contains(cov_union, s_, s_ + ln_):
-                    return True
-            return any(not _cov_contains(cov_union, s_, e_)
-                       for s_, e_ in segs)
-
-        def _draw(i: int, want: int):
-            """Pick and claim the next sub-range for replica ``i``
-            (under the lock): ``(start, length, ban)`` or None when
-            nothing it may serve is available right now.
-
-            Full replicas: while live peers advertise coverage, prefer
-            spans NO peer holds yet — every byte the swarm can trade
-            internally is a byte the origin never re-serves, which is
-            what bends origin egress toward one copy of the blob
-            (origin offload).  With no peer coverage in play this
-            reduces exactly to the classic packing: reclaimed pool
-            work first (lowest start), then the fresh frontier's head.
-            Partial mirrors: only spans their advertisement covers."""
-            cov = avail[i]
-            if cov is None:
-                if cov_union:
-                    best = None
-                    for k, (s_, ln_, ban_) in enumerate(pool):
-                        if not _ban_ok(i, s_, ln_, ban_):
-                            continue
-                        got = _cov_first_out(cov_union, s_, s_ + ln_)
-                        if got is not None and (best is None
-                                                or got[0] < best[0]):
-                            best = (got[0], got[1], k, ban_)
-                    if best is not None:
-                        at, end_, k, ban_ = best
-                        take = min(end_ - at, want)
-                        _take_pool(k, at, take)
-                        return at, take, ban_
-                    for si, (s_, e_) in enumerate(segs):
-                        got = _cov_first_out(cov_union, s_, e_)
-                        if got is not None:
-                            at, end_ = got
-                            take = min(end_ - at, want)
-                            _take_seg(si, at, take)
-                            return at, take, frozenset()
-                    if _origin_restricted():
-                        # everything left is peer-covered and the
-                        # transfer isn't in its endgame: leave it to the
-                        # peers (see ``_origin_restricted``)
-                        return None
-                pick = _pick_pool_entry(i) if pool else None
-                if pick is not None:
-                    s_, ln_, ban_ = pool[pick]
-                    take = min(ln_, want)
-                    _take_pool(pick, s_, take)
-                    return s_, take, ban_
-                if segs:
-                    s_, e_ = segs[0]
-                    take = min(want, e_ - s_)
-                    _take_seg(0, s_, take)
-                    return s_, take, frozenset()
-                return None
-            best = None
-            for k, (s_, ln_, ban_) in enumerate(pool):
-                if not _ban_ok(i, s_, ln_, ban_):
-                    continue
-                got = _cov_first_in(cov, s_, s_ + ln_)
-                if got is not None and (best is None or got[0] < best[0]):
-                    best = (got[0], got[1], k, ban_)
-            if best is not None:
-                at, end_, k, ban_ = best
-                take = min(end_ - at, want)
-                _take_pool(k, at, take)
-                return at, take, ban_
-            for si, (s_, e_) in enumerate(segs):
-                got = _cov_first_in(cov, s_, e_)
-                if got is not None:
-                    at, end_ = got
-                    take = min(end_ - at, want)
-                    _take_seg(si, at, take)
-                    return at, take, frozenset()
-            return None
+            _abort_hedge(start, res.cancel_hedger)
 
         async def hedge_fetch(j: int, conn: "_Conn", start: int,
                               length: int, owner: int,
@@ -1557,15 +744,11 @@ class MDTPClient:
             """Speculatively duplicate an in-flight range onto replica
             ``j``, into PRIVATE scratch — never the destination, so a
             corrupt or losing body cannot touch committed bytes.  First
-            completion wins, and cancellation is symmetric: a winning
-            hedge commits its bytes, settles the owner's in-flight
-            claim, and cancels the loser by breaking its connection —
-            while an owner that lands first breaks THIS connection so
-            the doomed copy stops streaming (charging only its partial
-            bytes).  A truncated or corrupt hedge is discarded whole
-            (the owner still owes the range).  Returns a lane outcome
-            to propagate, or None to carry on."""
-            nonlocal done_bytes, inflight, hedges_won, hedge_wasted
+            completion wins (``sched.on_hedge_result`` adjudicates), and
+            cancellation is symmetric: a winning hedge breaks the
+            loser's connection, while an owner that lands first breaks
+            THIS one.  Returns a lane outcome to propagate, or None to
+            carry on."""
             name = self.replicas[j].name
             scratch = bytearray(length)
             try:
@@ -1575,76 +758,44 @@ class MDTPClient:
             except (ConnectionError, OSError,
                     asyncio.IncompleteReadError) as e:
                 # broken mid-copy — usually the owner landing first and
-                # cancelling this race (see the settled commit below).
-                # Whatever the duplicate DID land before the break is
-                # real duplicated traffic, so it still charges the
-                # waste meter.
+                # cancelling this race.  Whatever the duplicate DID land
+                # is real duplicated traffic and charges the waste meter.
                 async with lock:
-                    hedged.pop(start, None)
-                    hedge_wasted += min(
-                        getattr(e, "partial_bytes", 0), length)
+                    sched.on_hedge_abandon(
+                        start, wasted=getattr(e, "partial_bytes", 0))
+                    hedge_conns.pop(start, None)
                 return "broken"
             except BaseException:
                 async with lock:
-                    hedged.pop(start, None)
+                    sched.on_hedge_abandon(start)
+                    hedge_conns.pop(start, None)
                 raise
             ndata = reply.nbytes
             for sample in conn.take_rtt_samples():
-                observe_rtt(j, sample)
+                sched.observe_rtt(j, sample)
             body = scratch[:ndata] if zero_copy else reply.data
             crc = await _crc32_async(body) if need_crc else None
             if verify and reply.crc32 is not None and crc != reply.crc32:
-                # the range is not ours to re-pool — just discard the
-                # copy, but the corruption still counts against j
                 async with lock:
-                    hedged.pop(start, None)
-                    corrupt_per[name] += 1
-                    dead = corrupt_per[name] >= self.max_failures
-                    if dead and name not in failed:
-                        failed.append(name)
+                    dead = sched.on_hedge_corrupt(j, start)
+                    hedge_conns.pop(start, None)
                 self._on_corruption(name)
                 if dead:
                     conn.broken = True
                     return "corrupt-dead"
                 return None
-            observe_latency(j, ndata, reply.elapsed)
+            sched.observe_latency(j, ndata, reply.elapsed)
             o_conn = None
-            loser = None
             async with lock:
-                hedged.pop(start, None)
-                # the live claim must still be the EXACT range this hedge
-                # duplicated: after a reclaim the range can re-enter the
-                # pool and be re-drawn SPLIT (same start, shorter length),
-                # and crediting the full hedge body against that narrower
-                # claim would double-count the remainder when its own
-                # re-fetch lands.  A re-draw by a different replica with
-                # identical boundaries is still a clean win — the
-                # cancellation just goes to the CURRENT owner.
-                entry = outstanding.get(start)
-                if ndata < length or start in settled \
-                        or entry is None or entry[0] != length:
-                    # truncated, re-split, or the owner resolved it
-                    # first: the duplicated body is pure waste
-                    hedge_wasted += ndata
-                else:
-                    # hedge wins: commit from scratch, release the
-                    # owner's in-flight claim, and keep the bytes so a
-                    # late-landing loser body can be healed back over
-                    loser = entry[1]
+                res = sched.on_hedge_result(j, start, length, ndata, body)
+                hedge_conns.pop(start, None)
+                if res.won:
+                    # hedge wins: commit from scratch; the scheduler
+                    # keeps the bytes so a late-landing loser body can
+                    # be healed back over
                     if buf is not None:
                         buf[start:start + ndata] = body
-                    settled.add(start)
-                    settled_data[start] = bytes(body)
-                    bytes_per[name] += ndata
-                    reqs_per[name] += 1
-                    done_bytes += ndata
-                    inflight -= length
-                    hedges_won += 1
-                    # the cancelled copy's waste is charged when the
-                    # loser RESOLVES — the bytes it actually landed, not
-                    # the whole range (see ``_reclaim`` / the settled
-                    # branches of the lane)
-                    o_conn = conn_of.get(loser)
+                    o_conn = conn_of.get(res.cancel_owner)
                     if journal is not None:
                         journal.record(offset + start, ndata, crc)
                     cond.notify_all()
@@ -1652,7 +803,7 @@ class MDTPClient:
                 # actively cancel the loser: breaking its connection
                 # turns the pending read into a prompt ConnectionError
                 # instead of waiting out the straggler
-                hedge_broke.add(loser)
+                hedge_broke.add(res.cancel_owner)
                 o_conn.abort()
             return None
 
@@ -1665,8 +816,6 @@ class MDTPClient:
             owed range is already back in the pool), ``"corrupt-dead"``
             when this replica crossed the corruption cap and was
             retired."""
-            nonlocal inflight, pooled, done_bytes, refetched
-            nonlocal hedges_issued, hedge_wasted
             name = self.replicas[i].name
 
             async def _park() -> None:
@@ -1676,7 +825,7 @@ class MDTPClient:
                 whose coverage went static fires no notifications either,
                 so only a poll can spot an aging range or conclude the
                 remaining work is uncoverable."""
-                if not hedge_q and not partial_idx:
+                if not hedge_q and not sched.partial_idx:
                     await cond.wait()
                     return
                 with contextlib.suppress(asyncio.TimeoutError):
@@ -1698,28 +847,23 @@ class MDTPClient:
                             # bounce back (and spuriously count as
                             # refetched)
                             return "broken"
-                        remaining = fresh + pooled
-                        if remaining <= 0:
-                            if inflight <= 0:
+                        if sched.remaining <= 0:
+                            if sched.inflight <= 0:
                                 return "done"
-                            hedge = _pick_hedge(i)
+                            hedge = sched.pick_hedge(i)
                             if hedge is not None:
                                 break
                             await _park()
                             continue
-                        if not _can_draw(i):
-                            # nothing this replica may serve right now:
-                            # every pooled range is tagged away from it
-                            # (and another capable replica can take it),
-                            # or it's a partial mirror whose advertised
-                            # coverage misses all remaining spans — park
-                            # until the pool or an advertisement changes
-                            # (or hedge a straggler meanwhile)... unless
-                            # no possible source for the rest remains.
-                            if _hopeless():
+                        if not sched.can_draw(i):
+                            # nothing this replica may serve right now —
+                            # park until the pool or an advertisement
+                            # changes (or hedge a straggler meanwhile)...
+                            # unless no possible source remains.
+                            if sched.hopeless():
                                 cond.notify_all()
                                 return "done"
-                            hedge = _pick_hedge(i)
+                            hedge = sched.pick_hedge(i)
                             if hedge is not None:
                                 break
                             await _park()
@@ -1727,8 +871,8 @@ class MDTPClient:
                         break
                     if hedge is not None:
                         h_start, h_len, h_owner, h_ban = hedge
-                        hedged[h_start] = (h_len, i, conn)
-                        hedges_issued += 1
+                        sched.on_hedge_issue(i, h_start, h_len)
+                        hedge_conns[h_start] = conn
                 if hedge is not None:
                     outcome = await hedge_fetch(i, conn, h_start, h_len,
                                                 h_owner, h_ban)
@@ -1738,49 +882,21 @@ class MDTPClient:
                 async with lock:
                     if conn.broken:
                         return "broken"
-                    remaining = fresh + pooled
-                    if remaining <= 0:
+                    if sched.remaining <= 0:
                         continue
-                    if not _can_draw(i):
+                    if not sched.can_draw(i):
                         continue
-                    want = next_chunk_size(
-                        i,
-                        self._allocation_throughputs(
-                            [e.value for e in est]),
-                        params_box[0], remaining)
+                    want = sched.next_want(
+                        i, self._allocation_throughputs(
+                            [e.value for e in est]))
                     if want <= 0:
                         return "done"
-                    if depth > 1:
-                        # the allocator sizes one MDTP round's share for
-                        # this replica; the lanes split it so the
-                        # PIPELINE in aggregate holds ~two rounds' worth
-                        # — enough in-flight bytes to cover the
-                        # bandwidth-delay product through lane-convoy
-                        # phasing, while a slow mirror's queue stays
-                        # bounded at 2 rounds instead of depth rounds
-                        # (which would starve fast peers of tail work
-                        # exactly like the stragglers §IV chunks rounds
-                        # to avoid).  Near the end of the transfer the
-                        # pieces shrink further (remaining / 2*depth) so
-                        # the final bytes keep rebalancing onto whoever
-                        # is actually fast instead of draining a slow
-                        # pipeline's queue while fast peers idle.
-                        want = min(max(want // ((depth + 1) // 2),
-                                       params_box[0].min_chunk),
-                                   want, remaining)
-                        want = min(want, max(remaining // (2 * depth),
-                                             params_box[0].min_chunk))
-                    drawn = _draw(i, want)
-                    if drawn is None:
+                    asn = sched.on_assign(i, want)
+                    if asn is None:
                         # the pool/advertisement shifted between the two
                         # lock sections — go around and re-evaluate
                         continue
-                    start, length, ban = drawn
-                    inflight += length
-                    prog = [0, 0.0]
-                    if hedge_q:
-                        outstanding[start] = (length, i, ban, prog,
-                                              stall_s[0])
+                    start, length, ban, prog = asn
                 # destination: straight into the assembly buffer / the
                 # sink's own storage (zero-copy), or per-chunk scratch
                 # for callable sinks / the legacy copy path.  A raising
@@ -1815,7 +931,7 @@ class MDTPClient:
                 try:
                     ndata = reply.nbytes
                     for sample in conn.take_rtt_samples():
-                        observe_rtt(i, sample)
+                        sched.observe_rtt(i, sample)
                     crc = None
                     if need_crc:
                         # off the event loop for big bodies; the range is
@@ -1824,40 +940,20 @@ class MDTPClient:
                         crc = await _crc32_async(reply.data)
                     if (verify and reply.crc32 is not None
                             and crc != reply.crc32):
-                        # corrupt body: the bytes never count — re-pool
-                        # the WHOLE range tagged "not this replica" so
-                        # the packer re-fetches from an alternate mirror
-                        doomed = None
+                        # corrupt body: the bytes never count — the
+                        # scheduler re-pools the WHOLE range tagged "not
+                        # this replica" (or heals a settled one), and we
+                        # abort any duplicate it says is doomed
                         async with lock:
-                            corrupt_per[name] += 1
-                            dead = corrupt_per[name] >= self.max_failures
-                            outstanding.pop(start, None)
-                            if start in settled:
-                                # a hedge already delivered this range:
-                                # heal its bytes over the corrupt landing
-                                # instead of re-pooling settled work (the
-                                # discarded duplicate is hedge waste)
-                                _heal_settled(start)
-                                hedge_wasted += ndata
-                            else:
-                                # like ``_reclaim``: a duplicate still
-                                # racing this now-re-pooled range can no
-                                # longer settle it — cancel rather than
-                                # let a doomed body stream whole
-                                doomed = hedged.get(start)
-                                heapq.heappush(
-                                    pool, (start, length, ban | {i}))
-                                pooled += length
-                                inflight -= length
-                                refetched += 1
-                            if dead and name not in failed:
-                                failed.append(name)
+                            res = sched.on_corrupt(i, start, length, ban,
+                                                   ndata)
+                            if res.heal is not None and buf is not None:
+                                buf[start:start + len(res.heal)] = \
+                                    res.heal
                             cond.notify_all()
-                        if doomed is not None and not doomed[2].broken:
-                            hedge_broke.add(doomed[1])
-                            doomed[2].abort()
+                        _abort_hedge(start, res.cancel_hedger)
                         self._on_corruption(name)
-                        if dead:
+                        if res.dead:
                             # chronically corrupt = retired, like a dead
                             # mirror; breaking the shared conn stops
                             # sibling lanes too
@@ -1869,7 +965,8 @@ class MDTPClient:
                     # already measure pure body-streaming time
                     elapsed = reply.elapsed
                     if reply.rtt_included:
-                        elapsed = wire_elapsed(ndata, elapsed, rtt_min[i])
+                        elapsed = wire_elapsed(ndata, elapsed,
+                                               sched.rtt_min[i])
                     win = obs_win[i]
                     win[0] += ndata
                     win[1] += elapsed
@@ -1882,7 +979,7 @@ class MDTPClient:
                             est[i].observe(win[0], win[1])
                         win[0], win[1] = 0, 0.0
                     if hedge_q:
-                        observe_latency(i, ndata, elapsed)
+                        sched.observe_latency(i, ndata, elapsed)
                     if sink is None:
                         if not zero_copy:
                             buf[start:start + ndata] = reply.data
@@ -1896,60 +993,26 @@ class MDTPClient:
                     # and settle the in-flight count before propagating
                     await _reclaim(start, length, ban, count=False)
                     raise
-                settled_won = False
-                lost_hedge = None
                 async with lock:
-                    outstanding.pop(start, None)
-                    if start in settled:
-                        # a hedge beat this body to completion: its
-                        # claim is already settled — heal the winner's
-                        # bytes over this landing and count nothing
-                        # toward progress (the full duplicate body is
-                        # pure hedge waste)
-                        _heal_settled(start)
-                        reqs_per[name] += 1
-                        hedge_wasted += ndata
-                        settled_won = True
+                    res = sched.on_commit(i, start, length, ban, ndata)
+                    if res.heal is not None and buf is not None:
+                        # a hedge beat this body to completion: heal the
+                        # winner's bytes over this landing (the duplicate
+                        # is pure hedge waste)
+                        buf[start:start + len(res.heal)] = res.heal
+                    if res.wake:
                         cond.notify_all()
-                    else:
-                        bytes_per[name] += ndata
-                        reqs_per[name] += 1
-                        done_bytes += ndata
-                        inflight -= length
-                        # the owner landed first: any still-running
-                        # duplicate of this range can no longer win the
-                        # race (the claim it would settle is gone) — so
-                        # cancel it NOW rather than let a whole losing
-                        # body stream to completion.  Mirror image of
-                        # the winning hedge aborting its owner.
-                        lost_hedge = hedged.get(start)
-                        if ndata < length:   # truncated: short range —
-                            # the tail re-enters the pool atomically with
-                            # the inflight decrement so no peer can exit
-                            # between
-                            heapq.heappush(
-                                pool, (start + ndata, length - ndata, ban))
-                            pooled += length - ndata
-                            cond.notify_all()
-                        elif inflight <= 0:
-                            cond.notify_all()
-                if lost_hedge is not None and not lost_hedge[2].broken:
-                    # break the loser's connection: its pending read
-                    # turns into a prompt ConnectionError charging only
-                    # the bytes it really landed (``partial_bytes``),
-                    # and its worker reconnects without failure-budget
-                    # cost (``hedge_broke``)
-                    hedge_broke.add(lost_hedge[1])
-                    lost_hedge[2].abort()
-                if settled_won:
+                _abort_hedge(start, res.cancel_hedger)
+                if res.settled_won:
                     continue
                 if journal is not None:
                     # committed: journal the interval (buffered append;
                     # fsync at the journal's checkpoint interval)
                     journal.record(offset + start, ndata, crc)
-                if (tuner is not None and done_bytes < size
+                if (tuner is not None and sched.done_bytes < size
                         and not tune_state["busy"]
-                        and done_bytes - tune_state["bytes"] >= tune_every):
+                        and sched.done_bytes - tune_state["bytes"]
+                        >= tune_every):
                     # fire-and-forget: the triggering lane keeps fetching
                     # while the tuner (possibly jit-compiling) runs in
                     # the executor.  The busy flag is claimed HERE,
@@ -1971,7 +1034,7 @@ class MDTPClient:
             try:
                 while True:
                     async with lock:
-                        if fresh + pooled <= 0 and inflight <= 0:
+                        if sched.finished:
                             return
                     conn = self._make_conn(self.replicas[i])
                     conn_of[i] = conn
@@ -1986,13 +1049,13 @@ class MDTPClient:
                         await asyncio.gather(*lanes, return_exceptions=True)
                         await conn.close()
                         for sample in conn.take_rtt_samples():
-                            observe_rtt(i, sample)
+                            sched.observe_rtt(i, sample)
                     fatal = [o for o in outcomes
                              if isinstance(o, BaseException)]
                     if fatal:
                         raise fatal[0]
                     if "corrupt-dead" in outcomes:
-                        # retired for integrity (already in ``failed``)
+                        # retired for integrity (already marked failed)
                         return
                     if "broken" not in outcomes:
                         return
@@ -2004,10 +1067,9 @@ class MDTPClient:
                         continue
                     failures += 1
                     if failures >= self.max_failures:
-                        if name not in failed:
-                            failed.append(name)
+                        sched.mark_failed(i)
                         return
-                    retries_per[name] += 1
+                    sched.on_retry(i)
                     self._on_retry(name)
                     if self.retry_after > 0:
                         # capped exponential backoff with ±50% jitter:
@@ -2019,17 +1081,11 @@ class MDTPClient:
                         delay *= 0.5 + self._rng.random()
                         await asyncio.sleep(delay)
             finally:
-                # parked peers key takeability off the live-replica set
-                # (see ``alive``) — they must recheck when it shrinks
+                # parked peers key takeability off the live-replica set —
+                # they must recheck when it shrinks, and a dead peer's
+                # advertisement no longer counts toward the union
                 async with lock:
-                    alive.discard(i)
-                    if avail[i] is not None:
-                        # a dead peer's advertisement no longer counts:
-                        # drop it from the union so its exclusive spans
-                        # re-open to full replicas (the death-fallback)
-                        avail[i] = []
-                        _recompute_union()
-                        cov_stamp[0] = time.monotonic()
+                    sched.on_replica_death(i)
                     cond.notify_all()
 
         async def _refresh_coverage(j: int) -> None:
@@ -2044,8 +1100,7 @@ class MDTPClient:
             rep = self.replicas[j]
             while True:
                 async with lock:
-                    if j not in alive or (fresh + pooled <= 0
-                                          and inflight <= 0):
+                    if not sched.is_alive(j) or sched.finished:
                         return
                 runs = None
                 conn = self._make_conn(rep)
@@ -2068,19 +1123,17 @@ class MDTPClient:
                     pass
                 finally:
                     await conn.close()
-                if runs is not None and runs != avail[j]:
+                if runs is not None and runs != sched.coverage_of(j):
                     async with lock:
-                        if j in alive:
-                            avail[j] = runs
-                            _recompute_union()
-                            cov_stamp[0] = time.monotonic()
+                        if sched.is_alive(j) \
+                                and sched.on_coverage_update(j, runs):
                             cond.notify_all()
                 await asyncio.sleep(refresh_s)
 
         workers = [asyncio.ensure_future(worker(i))
                    for i in range(len(self.replicas))]
         refreshers = [asyncio.ensure_future(_refresh_coverage(j))
-                      for j in partial_idx]
+                      for j in sched.partial_idx]
         clock = asyncio.ensure_future(_stall_clock()) if hedge_q else None
         try:
             await asyncio.gather(*workers)
@@ -2112,7 +1165,7 @@ class MDTPClient:
         # isn't lost; transfer time excludes it), cancel it on failure
         task = tune_state["task"]
         if task is not None and not task.done():
-            if done_bytes == size:
+            if sched.done_bytes == size:
                 await task
             else:
                 task.cancel()
@@ -2125,38 +1178,50 @@ class MDTPClient:
             # report success or raise (an incomplete transfer's journal
             # is exactly what the resume path replays)
             journal.sync()
-        if done_bytes != size:
+        failed = _failed_names()
+        if sched.done_bytes != size:
             raise TransferIncompleteError(
-                f"transfer incomplete: {done_bytes}/{size} bytes "
+                f"transfer incomplete: {sched.done_bytes}/{size} bytes "
                 f"(failed replicas: {failed})",
-                done_bytes=done_bytes, expected_bytes=size,
+                done_bytes=sched.done_bytes, expected_bytes=size,
                 failed_replicas=failed)
         if retunes > 0:
             # adaptation persists: the next fetch starts from the tuned
             # geometry instead of re-learning from the defaults.  Guarded
             # on actual adoptions — a tuner that never fired must not pin
             # this transfer's size-derived defaults onto future ones.
-            self._params_arg = params_box[0]
+            self._params_arg = sched.params
+        # per-index scheduler counters fold into the report's name-keyed
+        # dicts (duplicate names aggregate, as they always did)
+        bytes_per = {r.name: 0 for r in self.replicas}
+        reqs_per = {r.name: 0 for r in self.replicas}
+        retries_per = {r.name: 0 for r in self.replicas}
+        corrupt_per = {r.name: 0 for r in self.replicas}
+        for i, r in enumerate(self.replicas):
+            bytes_per[r.name] += sched.bytes_per[i]
+            reqs_per[r.name] += sched.reqs_per[i]
+            retries_per[r.name] += sched.retries_per[i]
+            corrupt_per[r.name] += sched.corrupt_per[i]
         report = TransferReport(
             total_bytes=size, elapsed=t_end - t0,
             bytes_per_replica=bytes_per, requests_per_replica=reqs_per,
-            failed_replicas=failed, refetched_ranges=refetched,
+            failed_replicas=failed, refetched_ranges=sched.refetched,
             retunes=retunes,
             observed_throughputs={
                 r.name: float(est[i].value)
                 for i, r in enumerate(self.replicas)
             },
             observed_rtts={
-                r.name: float(rtt_min[i])
+                r.name: float(sched.rtt_min[i])
                 for i, r in enumerate(self.replicas)
             },
             retries_per_replica=retries_per,
             corrupt_ranges=corrupt_per,
             resumed_bytes=resumed_bytes,
             resume_verify_seconds=resume_verify,
-            hedges_issued=hedges_issued,
-            hedges_won=hedges_won,
-            hedge_wasted_bytes=hedge_wasted,
+            hedges_issued=sched.hedges_issued,
+            hedges_won=sched.hedges_won,
+            hedge_wasted_bytes=sched.hedge_wasted,
         )
         self.last_report = report
         return buf, report

@@ -69,6 +69,7 @@ from repro.core.chunking import ChunkParams
 from repro.core.throughput import rtt_corrected_bandwidth
 
 from .client import DEFAULT_PIPELINE_DEPTH, MDTPClient, Replica, _Conn
+from .sched import defaults as sched_defaults
 
 __all__ = ["FleetModel", "TransferJob", "TransferManager"]
 
@@ -129,13 +130,16 @@ class FleetModel:
     def __init__(self, max_inflight_per_replica: int = 2,
                  alpha: float = 0.3, rtt_alpha: float = 0.3,
                  probation: bool = True,
-                 probation_health: float = 0.3,
-                 probation_retry_limit: int = 3,
-                 probation_slow_frac: float = 0.125,
-                 probation_strikes: int = 3,
-                 probation_clean_streak: int = 3,
-                 probation_floor: float = 0.02,
-                 readmit_init: float = 0.1):
+                 probation_health: float = sched_defaults.PROBATION_HEALTH,
+                 probation_retry_limit: int =
+                 sched_defaults.PROBATION_RETRY_LIMIT,
+                 probation_slow_frac: float =
+                 sched_defaults.PROBATION_SLOW_FRAC,
+                 probation_strikes: int = sched_defaults.PROBATION_STRIKES,
+                 probation_clean_streak: int =
+                 sched_defaults.PROBATION_CLEAN_STREAK,
+                 probation_floor: float = sched_defaults.PROBATION_FLOOR,
+                 readmit_init: float = sched_defaults.READMIT_INIT):
         if max_inflight_per_replica < 1:
             raise ValueError("max_inflight_per_replica must be >= 1")
         self.max_inflight_per_replica = max_inflight_per_replica
@@ -721,7 +725,7 @@ class TransferManager:
         shed_trickle_bytes_per_s: float = 4.0 * 1024 * 1024,
         aging_bytes_per_s: float = 16.0 * 1024 * 1024,
         probation: bool = True,
-        hedge_quantile: float = 0.95,
+        hedge_quantile: float = sched_defaults.HEDGE_QUANTILE,
         **client_kw,
     ):
         self.replicas = list(replicas)

@@ -171,7 +171,10 @@ def test_garbage_and_resets_recovered(blob):
             params=ChunkParams(initial_chunk=256 * 1024, large_chunk=MB),
             max_failures=50, retry_backoff_cap=0.2)
         assert _sha(data) == _sha(blob)
-        assert flaky.fault_counts["garbage"] + flaky.fault_counts["reset"] >= 1
+        # only kinds that fired have a key; which of the two fires first
+        # depends on the load-dependent request sequence, so don't index
+        counts = flaky.fault_counts
+        assert counts.get("garbage", 0) + counts.get("reset", 0) >= 1
         assert report.retries_per_replica[replicas[0].name] >= 1
         assert sum(report.bytes_per_replica.values()) == len(blob)
     finally:

@@ -1,0 +1,232 @@
+"""The sans-I/O scheduling core: purity, decision parity, one source of
+truth for the tuning constants.
+
+Three contracts from the extraction:
+
+* **Import purity** — ``repro.transfer.sched`` loads with no event loop,
+  no sockets, no JAX (checked in a subprocess so this test's own
+  imports can't mask a violation; ``tools/layercheck.py`` enforces the
+  same statically).
+* **Decision parity** — a real-socket ``MDTPClient.fetch`` records its
+  scheduler's decision trace; replaying the identical event stream
+  through a bare ``ChunkScheduler`` (no client, no loop) reproduces
+  every assignment/commit/repool/hedge decision exactly.  This is what
+  makes the extraction an extraction and not a fork.
+* **Defaults consolidation** — ``client.py`` and ``manager.py`` read
+  their endgame/hedge/probation constants from ``sched.defaults``
+  instead of re-stating the numbers (the threshold-drift fix).
+"""
+
+import asyncio
+import inspect
+import subprocess
+import sys
+
+from repro.core.chunking import ChunkParams
+from repro.transfer import sched
+from repro.transfer.client import (DEFAULT_PIPELINE_DEPTH, ClientOptions,
+                                   MDTPClient, Replica)
+from repro.transfer.manager import FleetModel, TransferManager
+from repro.transfer.sched import ChunkScheduler, defaults, replay
+from repro.transfer.server import RangeServer, Throttle
+
+KB = 1024
+
+
+def _blob(n: int, seed: int = 7) -> bytes:
+    out = bytearray(n)
+    x = seed
+    for i in range(n):
+        x = (x * 1103515245 + 12345) & 0x7FFFFFFF
+        out[i] = x & 0xFF
+    return bytes(out)
+
+
+# --------------------------------------------------------------------------
+# import purity
+# --------------------------------------------------------------------------
+
+def test_sched_imports_without_io_or_jax():
+    code = (
+        "import sys\n"
+        "import repro.transfer.sched as s\n"
+        "bad = [m for m in ('asyncio', 'socket', 'jax', 'jaxlib')\n"
+        "       if m in sys.modules]\n"
+        "assert not bad, f'sans-I/O core dragged in {bad}'\n"
+        "assert s.ChunkScheduler is not None\n"
+        "loaded = sorted(m for m in sys.modules if m.startswith('repro'))\n"
+        "print(' '.join(loaded))\n"
+    )
+    res = subprocess.run([sys.executable, "-c", code],
+                        capture_output=True, text=True, timeout=60,
+                        env={"PYTHONPATH": "src", "PATH": "/usr/bin"},
+                        cwd=None)
+    assert res.returncode == 0, res.stdout + res.stderr
+    # the import closure stays small: core.chunking + transfer.journal
+    # are the only non-sched repro modules the state machine needs
+    for mod in res.stdout.split():
+        assert mod.startswith(("repro.transfer.sched", "repro.transfer",
+                               "repro.core", "repro")), mod
+        assert "jax" not in mod
+
+
+# --------------------------------------------------------------------------
+# decision parity (record on the wire, replay sans-I/O)
+# --------------------------------------------------------------------------
+
+def _record_fetch(*, hedge_quantile=0.0, size=192 * KB, n_srv=3,
+                  rates=(4096 * KB, 1024 * KB, 512 * KB)):
+    """Fetch over real sockets with a recording scheduler; return the
+    trace plus everything a bare re-construction needs."""
+    blob = _blob(size)
+    servers = []
+    for r in rates[:n_srv]:
+        srv = RangeServer(throttle=Throttle(bytes_per_s=r))
+        srv.add_blob("/data", blob)
+        srv.start()
+        servers.append(srv)
+    reps = [Replica("127.0.0.1", s.port, "/data") for s in servers]
+    params = ChunkParams(16 * KB, 32 * KB, min_chunk=4 * KB)
+    client = MDTPClient(reps, params=params,
+                        hedge_quantile=hedge_quantile)
+    client._sched_trace = trace = []
+    try:
+        buf, report = asyncio.run(client.fetch(size))
+    finally:
+        for s in servers:
+            s.stop()
+    assert bytes(buf) == blob
+    cfg = dict(size=size, mirrors=[False] * len(reps), params=params,
+               depth=client.pipeline_depth,
+               hedge_quantile=hedge_quantile,
+               hedge_waste_frac=client.hedge_waste_frac,
+               default_rtt=MDTPClient.DEFAULT_RTT,
+               max_failures=client.max_failures,
+               coverage_refresh_s=client.coverage_refresh_s)
+    return trace, cfg, report
+
+
+def test_decision_parity_plain():
+    trace, cfg, _ = _record_fetch()
+    assert any(ev[0] == "on_assign" for ev in trace)
+    mismatches = replay(trace, lambda clock: ChunkScheduler(
+        cfg["size"], cfg["mirrors"], params=cfg["params"],
+        depth=cfg["depth"], hedge_quantile=cfg["hedge_quantile"],
+        hedge_waste_frac=cfg["hedge_waste_frac"],
+        default_rtt=cfg["default_rtt"],
+        max_failures=cfg["max_failures"],
+        coverage_refresh_s=cfg["coverage_refresh_s"], clock=clock))
+    assert mismatches == [], mismatches[:5]
+
+
+def test_decision_parity_hedged():
+    # hedging exercises pick_hedge/outstanding/observe_latency paths;
+    # the slow third replica makes endgame hedges plausible but parity
+    # must hold whether or not any fired
+    trace, cfg, report = _record_fetch(hedge_quantile=0.95)
+    mismatches = replay(trace, lambda clock: ChunkScheduler(
+        cfg["size"], cfg["mirrors"], params=cfg["params"],
+        depth=cfg["depth"], hedge_quantile=cfg["hedge_quantile"],
+        hedge_waste_frac=cfg["hedge_waste_frac"],
+        default_rtt=cfg["default_rtt"],
+        max_failures=cfg["max_failures"],
+        coverage_refresh_s=cfg["coverage_refresh_s"], clock=clock))
+    assert mismatches == [], mismatches[:5]
+    assert report.hedge_wasted_bytes <= \
+        cfg["hedge_waste_frac"] * cfg["size"]
+
+
+def test_replay_detects_divergence():
+    # the harness itself must be falsifiable: replaying against a
+    # scheduler configured differently (other chunk geometry) must
+    # surface mismatches, not vacuously pass
+    trace, cfg, _ = _record_fetch()
+    other = ChunkParams(32 * KB, 64 * KB, min_chunk=8 * KB)
+    mismatches = replay(trace, lambda clock: ChunkScheduler(
+        cfg["size"], cfg["mirrors"], params=other,
+        depth=cfg["depth"], default_rtt=cfg["default_rtt"],
+        max_failures=cfg["max_failures"],
+        coverage_refresh_s=cfg["coverage_refresh_s"], clock=clock))
+    assert mismatches
+
+
+# --------------------------------------------------------------------------
+# bare-scheduler behavior (no sockets at all)
+# --------------------------------------------------------------------------
+
+def test_bare_scheduler_drains_pool():
+    t = [0.0]
+    s = ChunkScheduler(64 * KB, [False, False],
+                       params=ChunkParams(8 * KB, 16 * KB,
+                                          min_chunk=4 * KB),
+                       clock=lambda: t[0])
+    tp = [1e6, 1e6]
+    landed = 0
+    while s.remaining > 0 or s.inflight > 0:
+        progressed = False
+        for i in range(2):
+            if s.remaining <= 0 or not s.can_draw(i):
+                continue
+            want = s.next_want(i, tp)
+            asn = s.on_assign(i, want)
+            if asn is None:
+                continue
+            t[0] += 0.01
+            res = s.on_commit(i, asn.start, asn.length, asn.ban,
+                              asn.length)
+            assert not res.settled_won
+            landed += asn.length
+            progressed = True
+        assert progressed, "scheduler wedged with work remaining"
+    assert landed == 64 * KB
+    assert s.finished and s.done_bytes == 64 * KB
+
+
+def test_bare_scheduler_reclaim_and_ban():
+    t = [0.0]
+    s = ChunkScheduler(32 * KB, [False, False],
+                       params=ChunkParams(8 * KB, 16 * KB,
+                                          min_chunk=4 * KB),
+                       clock=lambda: t[0])
+    asn = s.on_assign(0, s.next_want(0, [1e6, 1e6]))
+    res = s.on_reclaim(asn.start, asn.length, frozenset({0}), count=True)
+    assert not res.settled
+    assert s.refetched == 1
+    # the banned replica cannot re-draw the reclaimed range while the
+    # other one can
+    asn2 = s.on_assign(1, s.next_want(1, [1e6, 1e6]))
+    assert asn2 is not None
+
+
+# --------------------------------------------------------------------------
+# defaults consolidation (the threshold-drift fix)
+# --------------------------------------------------------------------------
+
+def test_client_reads_sched_defaults():
+    assert DEFAULT_PIPELINE_DEPTH == defaults.PIPELINE_DEPTH
+    assert MDTPClient.DEFAULT_RTT == defaults.DEFAULT_RTT
+    assert MDTPClient.OBS_WINDOW_S == defaults.OBS_WINDOW_S
+    assert ClientOptions.hedge_waste_frac == defaults.HEDGE_WASTE_FRAC
+
+
+def test_manager_reads_sched_defaults():
+    fm = inspect.signature(FleetModel.__init__).parameters
+    assert fm["probation_health"].default == defaults.PROBATION_HEALTH
+    assert fm["probation_retry_limit"].default == \
+        defaults.PROBATION_RETRY_LIMIT
+    assert fm["probation_slow_frac"].default == \
+        defaults.PROBATION_SLOW_FRAC
+    assert fm["probation_strikes"].default == defaults.PROBATION_STRIKES
+    assert fm["probation_clean_streak"].default == \
+        defaults.PROBATION_CLEAN_STREAK
+    assert fm["probation_floor"].default == defaults.PROBATION_FLOOR
+    assert fm["readmit_init"].default == defaults.READMIT_INIT
+    tm = inspect.signature(TransferManager.__init__).parameters
+    assert tm["hedge_quantile"].default == defaults.HEDGE_QUANTILE
+
+
+def test_scheduler_ctor_reads_sched_defaults():
+    s = ChunkScheduler(1024, [False])
+    assert s.depth == defaults.PIPELINE_DEPTH
+    assert s.hedge_waste_frac == defaults.HEDGE_WASTE_FRAC
+    assert sched.defaults is defaults

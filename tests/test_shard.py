@@ -1,0 +1,267 @@
+"""Sharded, work-stealing restore: planning, the steal ledger, the
+K-host socket orchestration, and ``restore_checkpoint(shard_plan=)``.
+"""
+
+import asyncio
+import hashlib
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.chunking import ChunkParams
+from repro.transfer import RangeServer, Replica, Throttle
+from repro.transfer.shard import (ShardPlan, StealLedger, fetch_sharded,
+                                  manifest_boundaries, plan_for_mesh,
+                                  plan_shards)
+
+KB = 1024
+MB = 1024 * 1024
+
+
+def _blob(n: int, seed: int = 3) -> bytes:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+
+
+# --------------------------------------------------------------------------
+# planning
+# --------------------------------------------------------------------------
+
+def test_plan_shards_even_split():
+    plan = plan_shards(100, 4)
+    assert plan.spans == ((0, 25), (25, 50), (50, 75), (75, 100))
+    assert plan.n_hosts == 4
+    assert plan.nbytes_of(2) == 25
+    assert plan.host_of(0) == 0 and plan.host_of(99) == 3
+
+
+def test_plan_shards_covers_exactly_once():
+    for k in (1, 2, 3, 5, 8):
+        plan = plan_shards(1000, k)
+        assert plan.spans[0][0] == 0 and plan.spans[-1][1] == 1000
+        for (s0, e0), (s1, e1) in zip(plan.spans, plan.spans[1:]):
+            assert e0 == s1 and s0 <= e0 and s1 <= e1
+
+
+def test_plan_shards_snaps_to_boundaries():
+    # ideal cuts at 25/50/75 snap to the nearest legal leaf start; the
+    # snapping is monotone so spans never invert even with clustered
+    # boundaries
+    plan = plan_shards(100, 4, boundaries=[10, 30, 48, 52, 90])
+    assert plan.spans == ((0, 30), (30, 48), (48, 90), (90, 100))
+    for s, e in plan.spans:
+        assert s <= e
+    # every interior cut is a legal boundary
+    for s, _ in plan.spans[1:]:
+        assert s in (10, 30, 48, 52, 90)
+
+
+def test_plan_shards_more_hosts_than_boundaries():
+    # K=4 but only one legal cut: some hosts own empty spans, coverage
+    # is still exact
+    plan = plan_shards(100, 4, boundaries=[60])
+    assert plan.spans[0][0] == 0 and plan.spans[-1][1] == 100
+    assert sum(e - s for s, e in plan.spans) == 100
+    assert any(s == e for s, e in plan.spans)
+
+
+def test_manifest_boundaries_and_mesh_plan(tmp_path):
+    state = {"a": jnp.zeros((17,), jnp.float32),
+             "b": jnp.ones((31,), jnp.float32),
+             "c": jnp.arange(11, dtype=jnp.int32)}
+    d = save_checkpoint(str(tmp_path), 1, state)
+    import json
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    bnd = manifest_boundaries(manifest)
+    starts = sorted(int(e["offset"]) for e in manifest["leaves"])
+    assert list(bnd) == [s for s in starts if s > 0]
+
+    class FakeMesh:
+        shape = {"data": 2, "model": 1}
+
+    total = int(manifest["total_bytes"])
+    plan = plan_for_mesh(total, FakeMesh(), axis="data", boundaries=bnd)
+    assert plan.n_hosts == 2
+    cut = plan.spans[0][1]
+    assert cut in bnd  # tensors stay whole on one host
+
+
+# --------------------------------------------------------------------------
+# the steal ledger
+# --------------------------------------------------------------------------
+
+def test_ledger_steals_tail_of_most_backlogged():
+    plan = plan_shards(4 * MB, 4)
+    ledger = StealLedger(plan, min_steal=64 * KB)
+    # host 2 has the big backlog; others are nearly done
+    backlog = {0: [(0, 32 * KB)], 1: [], 2: [(1 * MB + MB // 2, MB // 2)],
+               3: [(3 * MB, 16 * KB)]}
+    grab = ledger.steal(0, lambda h: backlog[h])
+    assert grab is not None
+    victim, s, e = grab
+    assert victim == 2
+    # the TAIL half of the gap, so the victim's own frontier eats the head
+    assert e == 2 * MB and s == 2 * MB - MB // 4
+    assert ledger.stolen_bytes == MB // 4
+
+
+def test_ledger_claims_do_not_overlap_and_release_reopens():
+    plan = plan_shards(2 * MB, 2)
+    ledger = StealLedger(plan, min_steal=64 * KB)
+    uncovered = {0: [], 1: [(1 * MB, 1 * MB)]}
+    g1 = ledger.steal(0, lambda h: uncovered[h])
+    g2 = ledger.steal(0, lambda h: uncovered[h])
+    assert g1 and g2
+    (_, s1, e1), (_, s2, e2) = g1, g2
+    assert min(e1, e2) <= max(s1, s2)          # disjoint claims
+    ledger.release(1, s1, e1)
+    # the released span is stealable again (its tail goes first, as ever)
+    g3 = ledger.steal(0, lambda h: uncovered[h])
+    assert g3 is not None and s1 <= g3[1] < g3[2] == e1
+
+
+def test_ledger_respects_min_steal_floor():
+    plan = plan_shards(1 * MB, 2)
+    ledger = StealLedger(plan, min_steal=256 * KB)
+    # backlog below the floor: not worth a connection
+    assert ledger.steal(0, lambda h: [] if h == 0
+                        else [(512 * KB, 128 * KB)]) is None
+    # a gap smaller than 2*min_steal is taken whole, not split
+    grab = ledger.steal(0, lambda h: [] if h == 0
+                        else [(512 * KB, 384 * KB)])
+    assert grab is not None
+    _, s, e = grab
+    assert (s, e) == (512 * KB, 512 * KB + 384 * KB)
+
+
+# --------------------------------------------------------------------------
+# fetch_sharded on real sockets
+# --------------------------------------------------------------------------
+
+def _origin(blob, rate):
+    s = RangeServer(throttle=Throttle(bytes_per_s=rate, shared=True,
+                                      deterministic=True)).start()
+    s.add_blob("/data", blob)
+    return s
+
+
+def _run_sharded(blob, k, rates, steal):
+    plan = plan_shards(len(blob), k)
+    servers = [_origin(blob, r) for r in rates]
+    try:
+        origins = [[Replica("127.0.0.1", servers[h].port, "/data")]
+                   for h in range(k)]
+        res = asyncio.run(fetch_sharded(
+            len(blob), plan, origins, steal=steal,
+            client_kw=dict(params=ChunkParams(32 * KB, 64 * KB,
+                                              min_chunk=8 * KB),
+                           coverage_refresh_s=0.01)))
+    finally:
+        for s in servers:
+            s.stop()
+    for h in range(k):
+        s, e = plan.span_of(h)
+        assert hashlib.sha256(bytes(res.sinks[h])[s:e]).hexdigest() == \
+            hashlib.sha256(blob[s:e]).hexdigest(), f"host {h} span"
+    return res
+
+
+def test_fetch_sharded_lands_every_span():
+    blob = _blob(1 * MB)
+    res = _run_sharded(blob, 3, [64 * MB] * 3, steal=True)
+    assert res.stolen_bytes == 0 or res.makespan > 0  # balanced: no need
+    assert len(res.reports) == 3 and all(r for r in res.reports)
+
+
+def test_fetch_sharded_steals_from_straggler():
+    # host 0's origin at 1/16 of the others: the fast hosts must claim
+    # parts of its span (theft witness > 0) and all spans still verify
+    blob = _blob(2 * MB)
+    res = _run_sharded(blob, 3, [2 * MB, 32 * MB, 32 * MB], steal=True)
+    assert res.stolen_bytes > 0
+    assert all(s.victim == 0 for s in res.steals)
+    thieves = {s.thief for s in res.steals}
+    assert thieves and 0 not in thieves
+
+
+def test_fetch_sharded_steal_off_is_independent():
+    blob = _blob(512 * KB)
+    res = _run_sharded(blob, 2, [16 * MB, 16 * MB], steal=False)
+    assert res.stolen_bytes == 0 and res.steals == []
+
+
+# --------------------------------------------------------------------------
+# restore_checkpoint(shard_plan=)
+# --------------------------------------------------------------------------
+
+def _serve_checkpoint(d, step, rate=64 * MB):
+    s = RangeServer(throttle=Throttle(bytes_per_s=rate)).start()
+    base = f"/ckpt/step_{step:010d}"
+    s.add_file(base + "/manifest.json", os.path.join(d, "manifest.json"))
+    s.add_file(base + "/data.bin", os.path.join(d, "data.bin"))
+    return s
+
+
+def test_restore_shard_plan_restores_only_own_span(tmp_path):
+    state = {"params": {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                               (128, 128)),
+                        "b": jnp.arange(128, dtype=jnp.float32)},
+             "step": jnp.int32(9)}
+    d = save_checkpoint(str(tmp_path), 9, state)
+    srv = _serve_checkpoint(d, 9)
+    try:
+        reps = [Replica("127.0.0.1", srv.port, "/ckpt")]
+        halves = [restore_checkpoint(str(tmp_path), state, step=9,
+                                     replicas=reps, shard_plan=(h, 2))[0]
+                  for h in (0, 1)]
+    finally:
+        srv.stop()
+    want = jax.tree.leaves(state)
+    for leaf_idx in range(len(want)):
+        pieces = [jax.tree.leaves(halves[h], is_leaf=lambda x: x is None)
+                  [leaf_idx] for h in (0, 1)]
+        held = [p for p in pieces if p is not None]
+        # each leaf is restored by EXACTLY one host (cuts snap to leaf
+        # boundaries, so no leaf straddles the shard cut)
+        assert len(held) == 1, f"leaf {leaf_idx} held by {len(held)} hosts"
+        assert np.array_equal(np.asarray(held[0]),
+                              np.asarray(want[leaf_idx]))
+
+
+def test_restore_shard_plan_int_k_matches_explicit_plan(tmp_path):
+    import json
+    state = {"w": jnp.ones((64, 64), jnp.float32),
+             "v": jnp.zeros((32,), jnp.float32)}
+    d = save_checkpoint(str(tmp_path), 2, state)
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    plan = plan_shards(int(manifest["total_bytes"]), 2,
+                       manifest_boundaries(manifest))
+    srv = _serve_checkpoint(d, 2)
+    try:
+        reps = [Replica("127.0.0.1", srv.port, "/ckpt")]
+        via_k, _ = restore_checkpoint(str(tmp_path), state, step=2,
+                                      replicas=reps, shard_plan=(0, 2))
+        via_plan, _ = restore_checkpoint(str(tmp_path), state, step=2,
+                                         replicas=reps,
+                                         shard_plan=(0, plan))
+    finally:
+        srv.stop()
+    a = jax.tree.leaves(via_k, is_leaf=lambda x: x is None)
+    b = jax.tree.leaves(via_plan, is_leaf=lambda x: x is None)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert (x is None) == (y is None)
+        if x is not None:
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_shard_traces_scenarios():
+    from repro.core.scenarios import shard_traces
+    traces = shard_traces()
+    names = [t.name for t in traces]
+    assert "balanced" in names and "straggler" in names
+    for t in traces:
+        assert t.k >= 2 and len(t.servers) == t.k and t.size > 0
