@@ -12,16 +12,30 @@ in-process ``RangeServer`` mirrors), not the simulator:
     these rows isolate the per-chunk memcpy cost; wall time is CPU-bound
     and machine-dependent (informational, not perf-guarded).
 
-``dataplane/highrtt/{serial,pipelined}``
+``dataplane/highrtt/{serial,pipelined,duplex}``
     The headline: a WAN-like trace — deterministic token-bucket mirrors
     plus an emulated 30 ms request-path latency
     (``MDTPClient(request_latency=...)``; loopback itself has none).
-    Serial pays the latency once per chunk; the pipelined client keeps
-    depth requests in flight so bodies stream while successors' requests
-    propagate.  Deterministic pacing makes these wall times
+    Serial pays the latency once per chunk; the pipelined
+    (half-duplex, ``duplex=False``) client keeps depth requests in
+    flight but each request write still waits its turn behind in-flight
+    bodies on the shared connection; the duplex client's independent
+    writer coroutine puts successors' requests on the wire while bodies
+    stream.  Deterministic pacing makes these wall times
     load-independent, so the rows ARE stable perf signal:
     ``benchmarks/run.py --check`` guards them at 3x and additionally
-    requires pipelined goodput >= serial (the win-guard).
+    requires pipelined goodput >= serial AND duplex >= pipelined (the
+    win-guards).
+
+``dataplane/compressed/{raw,zblock,wire_ratio}``
+    The compressed-range dataplane on a wire-limited trace: the same
+    compressible blob served identity vs block-compressed
+    (``RangeServer.add_compressed_blob``) over identically throttled
+    mirrors.  The throttle meters WIRE bytes, so the zblock goodput win
+    is the compression ratio, to framing overhead.  ``wire_ratio``'s
+    derived column is decoded/wire bytes (``us_per_call`` = wire bytes,
+    informational); ``--check`` guards it >= 1.3x — the
+    goodput-per-wire-byte win on compressible payloads.
 
 Derived column = goodput in MB/s (assembled bytes / transfer wall time);
 ``us_per_call`` = mean wall per transfer.  Rows land in
@@ -53,7 +67,8 @@ def _blob(size: int) -> bytes:
     return rng.integers(0, 256, size=size, dtype=np.uint8).tobytes()
 
 
-def _measure(servers, blob, *, depth, zero_copy, latency, params, reps):
+def _measure(servers, blob, *, depth, zero_copy, latency, params, reps,
+             duplex=True):
     """Mean (goodput_MBps, wall_us) over ``reps`` transfers; verifies
     integrity on the first rep (a fast wrong answer is no answer)."""
     replicas = [Replica("127.0.0.1", s.port, "/data") for s in servers]
@@ -61,7 +76,7 @@ def _measure(servers, blob, *, depth, zero_copy, latency, params, reps):
     for rep in range(reps):
         client = MDTPClient(
             replicas, params=params, pipeline_depth=depth,
-            zero_copy=zero_copy, request_latency=latency)
+            zero_copy=zero_copy, request_latency=latency, duplex=duplex)
         buf, report = asyncio.run(client.fetch(len(blob)))
         if rep == 0:
             assert hashlib.sha256(bytes(buf)).hexdigest() == \
@@ -110,13 +125,71 @@ def _highrtt_section(blob, params, reps, depth: int):
              f"rtt={HIGH_RTT:g}")
         piped, p_us = _measure(
             servers, blob, depth=depth, zero_copy=True, latency=HIGH_RTT,
-            params=params, reps=reps)
+            params=params, reps=reps, duplex=False)
         emit("dataplane/highrtt/pipelined", p_us, f"{piped:.1f}",
              f"rtt={HIGH_RTT:g}", f"depth={depth}",
              f"vs_serial={piped / serial:.2f}x")
+        dup, d_us = _measure(
+            servers, blob, depth=depth, zero_copy=True, latency=HIGH_RTT,
+            params=params, reps=reps)
+        emit("dataplane/highrtt/duplex", d_us, f"{dup:.1f}",
+             f"rtt={HIGH_RTT:g}", f"depth={depth}",
+             f"vs_pipelined={dup / piped:.2f}x")
     finally:
         for s in servers:
             s.stop()
+
+
+def _compressible_blob(size: int) -> bytes:
+    """Half-entropy bytes (4 random bits each): zlib lands ~2x, the
+    regime of real fp16/bf16 checkpoint payloads — compressible, but
+    far from the degenerate all-zeros case."""
+    rng = np.random.default_rng(11)
+    return rng.integers(0, 16, size=size, dtype=np.uint8).tobytes()
+
+
+def _compressed_section(size, params, reps):
+    from repro.transfer import codec
+
+    blob = _compressible_blob(size)
+    # 64 KB blocks: unaligned chunk requests re-send whole covering
+    # blocks, so smaller blocks keep that wire overhead marginal
+    block = 64 * 1024
+    store = codec.compress_blocks(blob, block)
+    ratio = len(blob) / store.wire_total
+    rate = 20 * MB                       # wire pace per mirror
+
+    def mirrors(compressed: bool):
+        servers = [RangeServer(throttle=Throttle(
+            bytes_per_s=rate, deterministic=True)).start()
+            for _ in range(2)]
+        for s in servers:
+            if compressed:
+                s.add_compressed_blob("/data", blob, block_size=block)
+            else:
+                s.add_blob("/data", blob)
+        return servers
+
+    servers = mirrors(compressed=False)
+    try:
+        raw, r_us = _measure(servers, blob, depth=4, zero_copy=True,
+                             latency=0.0, params=params, reps=reps)
+    finally:
+        for s in servers:
+            s.stop()
+    emit("dataplane/compressed/raw", r_us, f"{raw:.1f}",
+         f"wire={rate // MB}MBps")
+    servers = mirrors(compressed=True)
+    try:
+        zb, z_us = _measure(servers, blob, depth=4, zero_copy=True,
+                            latency=0.0, params=params, reps=reps)
+    finally:
+        for s in servers:
+            s.stop()
+    emit("dataplane/compressed/zblock", z_us, f"{zb:.1f}",
+         f"wire={rate // MB}MBps", f"vs_raw={zb / raw:.2f}x")
+    emit("dataplane/compressed/wire_ratio", float(store.wire_total),
+         f"{ratio:.2f}", f"decoded={len(blob)}")
 
 
 def main(argv=None) -> None:
@@ -138,6 +211,10 @@ def main(argv=None) -> None:
     # (probe + endgame phases amortized); pacing-dominated, so a fixed
     # size keeps --full minutes, not tens of minutes
     _highrtt_section(_blob(24 * MB), params, reps, args.depth)
+    # wire-limited compressed vs identity: also pacing-dominated; a
+    # bigger blob than the RTT trace so the ramp/endgame overhead
+    # (fixed cost) doesn't eat the shorter compressed transfer's win
+    _compressed_section(48 * MB, params, reps)
 
 
 if __name__ == "__main__":

@@ -176,6 +176,7 @@ def autotune_chunk_params(
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
     hedge_quantile: float = 0.0,
+    decode_bytes_per_s: float = 0.0,
 ) -> AutotuneResult:
     """Pick (C, L) minimizing simulated transfer time.
 
@@ -213,7 +214,8 @@ def autotune_chunk_params(
     cfg = _sized_config(
         SimConfig(jitter=jitter, pipeline_depth=pipeline_depth,
                   loss_rate=loss_rate, corruption_rate=corruption_rate,
-                  hedge_quantile=hedge_quantile),
+                  hedge_quantile=hedge_quantile,
+                  decode_bytes_per_s=decode_bytes_per_s),
         engine, grid, file_size)
     grid_c, grid_l, grid_min = _grid_arrays(grid)
     seeds = jnp.arange(max(n_seeds, 1))
@@ -250,6 +252,7 @@ def sweep_scenarios(
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
     hedge_quantile: float = 0.0,
+    decode_bytes_per_s: float = 0.0,
 ) -> jax.Array:
     """Seed-averaged predicted times for a batch of scenarios.
 
@@ -282,7 +285,8 @@ def sweep_scenarios(
     cfg = _sized_config(
         SimConfig(jitter=jitter, pipeline_depth=pipeline_depth,
                   loss_rate=loss_rate, corruption_rate=corruption_rate,
-                  hedge_quantile=hedge_quantile),
+                  hedge_quantile=hedge_quantile,
+                  decode_bytes_per_s=decode_bytes_per_s),
         engine, grid, np.asarray(file_size))
     grid_c, grid_l, grid_min = _grid_arrays(grid)
     seeds = jnp.arange(max(n_seeds, 1))
@@ -310,6 +314,7 @@ def autotune_batch(
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
     hedge_quantile: float = 0.0,
+    decode_bytes_per_s: float = 0.0,
 ) -> list[AutotuneResult]:
     """Per-scenario chunk-size selection over an ``[S, N]`` scenario batch.
 
@@ -326,6 +331,7 @@ def autotune_batch(
         pipeline_depth=pipeline_depth,
         loss_rate=loss_rate, corruption_rate=corruption_rate,
         hedge_quantile=hedge_quantile,
+        decode_bytes_per_s=decode_bytes_per_s,
     ), np.float64)
 
     results = []
@@ -356,6 +362,7 @@ def contention_sweep(
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
     hedge_quantile: float = 0.0,
+    decode_bytes_per_s: float = 0.0,
 ) -> dict[int, AutotuneResult]:
     """Per-contention-level chunk tuning: the (C, L) ladder a fleet
     scheduler adopts as concurrent transfers arrive and drain.
@@ -385,7 +392,8 @@ def contention_sweep(
         mat, rtt, file_size, grid=grid, jitter=jitter, n_seeds=n_seeds,
         mode=mode, engine=engine, pipeline_depth=pipeline_depth,
         loss_rate=loss_rate, corruption_rate=corruption_rate,
-        hedge_quantile=hedge_quantile)
+        hedge_quantile=hedge_quantile,
+        decode_bytes_per_s=decode_bytes_per_s)
     return dict(zip(ks, results))
 
 
@@ -530,7 +538,8 @@ def _exact_time(params: ChunkParams, bw, rtt_a, throttle_t, throttle_bw,
                 file_f, mode: str, pipeline_depth: int = 1,
                 loss_rate: float = 0.0,
                 corruption_rate: float = 0.0,
-                hedge_quantile: float = 0.0) -> float:
+                hedge_quantile: float = 0.0,
+                decode_bytes_per_s: float = 0.0) -> float:
     """Honest number for integer params: exact sizes, round core, no
     jitter — the metric both gradient tuners report and compare on (under
     faults, at the fixed seed 0 so init/final compare on the same draws).
@@ -542,7 +551,8 @@ def _exact_time(params: ChunkParams, bw, rtt_a, throttle_t, throttle_bw,
         mode=mode, config=SimConfig(pipeline_depth=pipeline_depth,
                                     loss_rate=loss_rate,
                                     corruption_rate=corruption_rate,
-                                    hedge_quantile=hedge_quantile),
+                                    hedge_quantile=hedge_quantile,
+                                    decode_bytes_per_s=decode_bytes_per_s),
         engine="round",
     ).total_time)
 
@@ -554,7 +564,8 @@ def _finish_grad_tune(vg, vg_args, best_z, history,
                       file_f, pipeline_depth: int = 1,
                       loss_rate: float = 0.0,
                       corruption_rate: float = 0.0,
-                      hedge_quantile: float = 0.0) -> GradTuneResult:
+                      hedge_quantile: float = 0.0,
+                      decode_bytes_per_s: float = 0.0) -> GradTuneResult:
     """Round ``best_z`` to integer ``ChunkParams``, guarantee never-worse
     than ``init`` on the EXACT metric (rounding can cross a round-count
     jump), and report the (dT/dC, dT/dL) chain-rule gradient."""
@@ -566,14 +577,16 @@ def _finish_grad_tune(vg, vg_args, best_z, history,
         min_chunk=min_chunk, mode=mode)
     t_final = _exact_time(params, bw, rtt_a, throttle_t, throttle_bw,
                           file_f, mode, pipeline_depth,
-                          loss_rate, corruption_rate, hedge_quantile)
+                          loss_rate, corruption_rate, hedge_quantile,
+                          decode_bytes_per_s)
     init_params = ChunkParams(
         initial_chunk=max(int(round(init[0])), min_chunk),
         large_chunk=max(int(round(init[1])), min_chunk),
         min_chunk=min_chunk, mode=mode)
     t_init = _exact_time(init_params, bw, rtt_a, throttle_t, throttle_bw,
                          file_f, mode, pipeline_depth,
-                         loss_rate, corruption_rate, hedge_quantile)
+                         loss_rate, corruption_rate, hedge_quantile,
+                         decode_bytes_per_s)
     if t_init < t_final:
         params, t_final = init_params, t_init
     # grad w.r.t. (C, L) via the chain rule through the softplus-free
@@ -605,6 +618,7 @@ def tune_chunk_params_grad(
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
     hedge_quantile: float = 0.0,
+    decode_bytes_per_s: float = 0.0,
 ) -> GradTuneResult:
     """Continuous (C, L) refinement: ``jax.grad`` polish of the grid winner.
 
@@ -643,6 +657,7 @@ def tune_chunk_params_grad(
             pipeline_depth=pipeline_depth,
             loss_rate=loss_rate, corruption_rate=corruption_rate,
             hedge_quantile=hedge_quantile,
+            decode_bytes_per_s=decode_bytes_per_s,
             n_seeds=4 if p_fail > 0.0 else 1)
         init = (float(seed_res.params.initial_chunk),
                 float(seed_res.params.large_chunk))
@@ -650,7 +665,8 @@ def tune_chunk_params_grad(
     cfg = SimConfig(max_rounds=max_rounds, exact_sizes=False,
                     pipeline_depth=pipeline_depth,
                     loss_rate=loss_rate, corruption_rate=corruption_rate,
-                    hedge_quantile=hedge_quantile)
+                    hedge_quantile=hedge_quantile,
+                    decode_bytes_per_s=decode_bytes_per_s)
 
     def total_time(z, bw, rtt_a, throttle_t, throttle_bw):
         c, l = _z_decode(z, min_chunk, l_floor)
@@ -667,4 +683,4 @@ def tune_chunk_params_grad(
     return _finish_grad_tune(
         vg, vg_args, best_z, history, init, min_chunk, l_floor, mode,
         bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth,
-        loss_rate, corruption_rate, hedge_quantile)
+        loss_rate, corruption_rate, hedge_quantile, decode_bytes_per_s)

@@ -161,6 +161,16 @@ class SimConfig(NamedTuple):
     #: already-drawn durations (NO extra PRNG consumption), so
     #: hedge-free configs replay bit-identical event streams.
     hedge_quantile: float = 0.0
+    #: client-side decode rate (DECODED bytes/s) for transfer-encoded
+    #: bodies (the compressed-range path, ``repro.transfer.codec``): each
+    #: chunk's duration gains ``size / decode_bytes_per_s`` of compute
+    #: before the lane can issue its next request.  Tuners trade this
+    #: against the wire bytes compression saves: callers model the ratio
+    #: by scaling ``bandwidths`` (wire rate × ratio = effective decoded
+    #: rate) and pay the inflate cost here.  0 (default) disables the
+    #: term and reproduces earlier builds' jaxprs exactly — the gating
+    #: is static, like every other field.
+    decode_bytes_per_s: float = 0.0
 
 
 class JaxSimResult(NamedTuple):
@@ -192,6 +202,7 @@ def _chunk_duration(
     size: jax.Array, t0: jax.Array, rtt: jax.Array,
     bw0: jax.Array, throttle_t: jax.Array, bw1: jax.Array,
     depth: int = 1, warm: jax.Array | None = None,
+    decode_bw: float = 0.0,
 ) -> jax.Array:
     """Time to fetch ``size`` bytes starting at ``t0`` on one server whose
     rate steps from ``bw0`` to ``bw1`` at ``throttle_t``.
@@ -224,6 +235,13 @@ def _chunk_duration(
     dur = jnp.where(pre_only, dur_pre, dur_post)
     # throttle already in effect at t_start
     dur = jnp.where(t_start >= throttle_t, size / jnp.maximum(bw1, 1e-9), dur)
+    if decode_bw > 0.0:
+        # per-chunk compute term (``SimConfig.decode_bytes_per_s``): an
+        # encoded body must inflate before the lane frees up, so decode
+        # time occupies the lane like body time — and, below, hides RTT
+        # behind the pipeline the same way.  Statically gated: the
+        # decode-free jaxpr is unchanged.
+        dur = dur + size / jnp.float32(decode_bw)
     if depth <= 1:
         return rtt + dur
     rtt_eff = jnp.maximum(rtt - (depth - 1) * dur, 0.0)
@@ -281,7 +299,8 @@ def _make_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
             )
         dt = _chunk_duration(size, now, rtt[i], bw0[i] * scale, throttle_t[i],
                              bw1[i] * scale, depth=cfg.pipeline_depth,
-                             warm=state.reqs[i] > 0)
+                             warm=state.reqs[i] > 0,
+                             decode_bw=cfg.decode_bytes_per_s)
 
         # Fault draw at issue time (the outcome is predetermined but only
         # observed at completion).  The extra split happens ONLY when a
@@ -457,7 +476,8 @@ def _make_round_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
         tf_safe = jnp.where(alive, state.t_free, 0.0)
         dur_est = _chunk_duration(sizes_est, tf_safe, rtt, bw0, throttle_t,
                                   bw1, depth=cfg.pipeline_depth,
-                                  warm=state.reqs > 0)
+                                  warm=state.reqs > 0,
+                                  decode_bw=cfg.decode_bytes_per_s)
         lag = jnp.maximum(tf_safe[:, None] - tf_safe[None, :], 0.0)
         idx = jnp.arange(lag.shape[0])
         tie = jnp.logical_and(tf_safe[:, None] == tf_safe[None, :],
@@ -481,7 +501,8 @@ def _make_round_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
                 - 0.5 * cfg.jitter**2)
         dt = _chunk_duration(granted, now, rtt, bw0 * scale, throttle_t,
                              bw1 * scale, depth=cfg.pipeline_depth,
-                             warm=state.reqs > 0)
+                             warm=state.reqs > 0,
+                             decode_bw=cfg.decode_bytes_per_s)
         if cfg.hedge_quantile > 0.0:
             # Hedged endgame (the client's, see transfer.client): a range
             # on a server whose chunk duration exceeds the fleet's hedge
@@ -516,6 +537,10 @@ def _make_round_step(chunk: ChunkArrays, mode: str, cfg: SimConfig,
                 _INF)
             hedge_fin = (t_drain + rtt[w]
                          + granted / jnp.maximum(eff_bw[w], 1e-9))
+            if cfg.decode_bytes_per_s > 0.0:
+                # the winner's re-serve pays the decode term too
+                hedge_fin = hedge_fin + granted / jnp.float32(
+                    cfg.decode_bytes_per_s)
             straggler = jnp.logical_and(active, dt > q)
             straggler = jnp.logical_and(
                 straggler, jnp.arange(dt.shape[0]) != w)

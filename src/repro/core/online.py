@@ -201,6 +201,7 @@ def tune_chunk_params_mcgrad(
     loss_rate: float = 0.0,
     corruption_rate: float = 0.0,
     hedge_quantile: float = 0.0,
+    decode_bytes_per_s: float = 0.0,
 ) -> GradTuneResult:
     """Monte-Carlo (C, L) descent on the scan core: one compile, ``n_seeds``
     pathwise gradients averaged per step.
@@ -231,6 +232,7 @@ def tune_chunk_params_mcgrad(
             pipeline_depth=pipeline_depth,
             loss_rate=loss_rate, corruption_rate=corruption_rate,
             hedge_quantile=hedge_quantile,
+            decode_bytes_per_s=decode_bytes_per_s,
             n_seeds=4 if p_fail > 0.0 else 1)
         init = (float(seed_res.params.initial_chunk),
                 float(seed_res.params.large_chunk))
@@ -239,7 +241,8 @@ def tune_chunk_params_mcgrad(
                     jitter=bw_jitter, rtt_jitter=rtt_jitter,
                     pipeline_depth=pipeline_depth,
                     loss_rate=loss_rate, corruption_rate=corruption_rate,
-                    hedge_quantile=hedge_quantile)
+                    hedge_quantile=hedge_quantile,
+                    decode_bytes_per_s=decode_bytes_per_s)
     vg = _mc_value_and_grad(mode, cfg, max(n_seeds, 1))
     vg_args = (bw, rtt_a, throttle_t, throttle_bw, file_f,
                jnp.float32(min_chunk), jnp.float32(l_floor))
@@ -248,7 +251,7 @@ def tune_chunk_params_mcgrad(
     return _finish_grad_tune(
         vg, vg_args, best_z, history, init, min_chunk, l_floor, mode,
         bw, rtt_a, throttle_t, throttle_bw, file_f, pipeline_depth,
-        loss_rate, corruption_rate, hedge_quantile)
+        loss_rate, corruption_rate, hedge_quantile, decode_bytes_per_s)
 
 
 # --------------------------------------------------------------------------
@@ -278,6 +281,10 @@ class GridTuner:
     #: (``SimConfig.hedge_quantile``) — hedging trims the straggler tail
     #: the simulator would otherwise charge to large L.
     hedge_quantile: float = 0.0
+    #: client-side decode rate for transfer-encoded bodies
+    #: (``SimConfig.decode_bytes_per_s``) — the per-chunk compute tax the
+    #: compressed-range path pays; 0 = identity encoding.
+    decode_bytes_per_s: float = 0.0
     params: Optional[ChunkParams] = None
     updates: int = 0
 
@@ -295,6 +302,7 @@ class GridTuner:
             pipeline_depth=self.pipeline_depth,
             loss_rate=self.loss_rate, corruption_rate=self.corruption_rate,
             hedge_quantile=self.hedge_quantile,
+            decode_bytes_per_s=self.decode_bytes_per_s,
             n_seeds=4 if p_fail > 0.0 else 1)
         self.params = res.params
         return res.params
@@ -326,6 +334,8 @@ class MCGradTuner:
     corruption_rate: float = 0.0
     #: endgame hedging quantile of the client being tuned (see GridTuner).
     hedge_quantile: float = 0.0
+    #: client-side decode rate for encoded bodies (see GridTuner).
+    decode_bytes_per_s: float = 0.0
     params: Optional[ChunkParams] = None
     updates: int = 0
     last_result: Optional[GradTuneResult] = None
@@ -350,7 +360,8 @@ class MCGradTuner:
             max_rounds=self.max_rounds, grid=self.grid,
             pipeline_depth=self.pipeline_depth,
             loss_rate=self.loss_rate, corruption_rate=self.corruption_rate,
-            hedge_quantile=self.hedge_quantile)
+            hedge_quantile=self.hedge_quantile,
+            decode_bytes_per_s=self.decode_bytes_per_s)
         self.params, self.last_result = res.params, res
         return res.params
 
@@ -407,6 +418,10 @@ class BanditTuner:
     #: endgame hedging quantile of the client being tuned (see GridTuner)
     #: — shapes the seeding sweep's straggler-tail model.
     hedge_quantile: float = 0.0
+    #: client-side decode rate for encoded bodies (see GridTuner) —
+    #: shapes the seeding sweep; the measured-throughput reward already
+    #: prices real decode stalls in.
+    decode_bytes_per_s: float = 0.0
     arms: list[_Arm] = field(default_factory=list)
     params: Optional[ChunkParams] = None
     updates: int = 0
@@ -430,6 +445,7 @@ class BanditTuner:
             pipeline_depth=self.pipeline_depth,
             loss_rate=self.loss_rate, corruption_rate=self.corruption_rate,
             hedge_quantile=self.hedge_quantile,
+            decode_bytes_per_s=self.decode_bytes_per_s,
             n_seeds=4 if p_fail > 0.0 else 1)
         order = np.argsort(res.predicted_times)
         self.arms = []

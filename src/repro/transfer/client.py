@@ -166,6 +166,11 @@ class ClientOptions:
     zero_copy: bool = True
     #: emulated request-path delay per request (see ``_Conn``).
     request_latency: float = 0.0
+    #: False = legacy half-duplex connections (request writes serialize
+    #: inline behind the write lock instead of draining through the
+    #: independent writer coroutine) — kept as the benchmark baseline
+    #: the duplex win-guard measures against.
+    duplex: bool = True
 
     # -- integrity / retry / timeout --------------------------------------
     #: verify each range's CRC32 against the server's
@@ -325,6 +330,7 @@ class MDTPClient:
         self.pipeline_depth = max(int(options.pipeline_depth), 1)
         self.zero_copy = options.zero_copy
         self.request_latency = options.request_latency
+        self.duplex = options.duplex
         self.verify_integrity = options.verify_integrity
         self.read_timeout = options.read_timeout
         self.retry_backoff_cap = options.retry_backoff_cap
@@ -434,7 +440,7 @@ class MDTPClient:
         pipeline's virtual-blob client) or wrap requests (the fleet
         manager's capped, telemetry-fed connections)."""
         return _Conn(replica, request_latency=self.request_latency,
-                     read_timeout=self.read_timeout)
+                     read_timeout=self.read_timeout, duplex=self.duplex)
 
     def _allocation_throughputs(self, est_values: list) -> list:
         """Per-replica throughput vector the allocator sizes chunks from.
@@ -962,13 +968,18 @@ class MDTPClient:
                         continue
                     # estimators track the WIRE rate: serial observations
                     # have their request RTT stripped here, pipelined ones
-                    # already measure pure body-streaming time
+                    # already measure pure body-streaming time.  Encoded
+                    # bodies count WIRE bytes (the framed payload), not
+                    # decoded bytes — coverage/commit below still moves in
+                    # decoded bytes, which is exactly the split that keeps
+                    # compression from double-counting as bandwidth.
+                    nwire = reply.wire_bytes
                     elapsed = reply.elapsed
                     if reply.rtt_included:
-                        elapsed = wire_elapsed(ndata, elapsed,
+                        elapsed = wire_elapsed(nwire, elapsed,
                                                sched.rtt_min[i])
                     win = obs_win[i]
-                    win[0] += ndata
+                    win[0] += nwire
                     win[1] += elapsed
                     # flush on the first-ever sample (ends probe mode
                     # promptly — it is a serial, RTT-stripped reading) or

@@ -588,8 +588,11 @@ class _ManagedConn(_Conn):
             async with self._fleet.slot(self.replica.name):
                 reply = await super().fetch_range(start, end, into=into,
                                                   progress=progress)
+                # wire bytes, not decoded: the fleet model's bandwidth
+                # estimates must not credit the codec's savings as wire
+                # capacity on compressed paths
                 self._fleet.observe_chunk(self._tid, self.replica.name,
-                                          reply.nbytes, reply.elapsed,
+                                          reply.wire_bytes, reply.elapsed,
                                           rtt_included=reply.rtt_included)
                 # peek (don't drain — the owning client min-aggregates
                 # these into its own report) at the freshest RTT samples

@@ -29,6 +29,8 @@ from dataclasses import dataclass
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
+from repro.transfer import codec
+
 __all__ = ["RangeServer", "Throttle", "FaultPolicy"]
 
 
@@ -134,6 +136,16 @@ class _Handler(BaseHTTPRequestHandler):
         return None
 
     def do_HEAD(self):
+        centry = self.server.compressed.get(  # type: ignore[attr-defined]
+            self.path)
+        if centry is not None:
+            # size discovery speaks DECODED bytes: the store's framing is
+            # a transfer encoding, invisible to coverage planning
+            self.send_response(200)
+            self.send_header("Content-Length", str(centry[0].total))
+            self.send_header("Accept-Ranges", "bytes")
+            self.end_headers()
+            return
         entry = self._lookup()
         if entry is None:
             self.send_error(404)
@@ -228,6 +240,11 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
 
     def _serve_get(self):
+        centry = self.server.compressed.get(  # type: ignore[attr-defined]
+            self.path)
+        if centry is not None:
+            self._serve_compressed(centry)
+            return
         entry = self._lookup()
         if entry is None:
             self.send_error(404)
@@ -379,6 +396,98 @@ class _Handler(BaseHTTPRequestHandler):
         if truncate_at is not None:
             self._sever()
 
+    def _serve_compressed(self, centry) -> None:
+        """Serve a range from a block-compressed store.
+
+        The request and every byte-addressed header (``Range``,
+        ``Content-Range``, the checksum) speak DECODED coordinates; the
+        body is the framed compressed payload covering the span (whole
+        blocks — see :mod:`repro.transfer.codec`) and ``Content-Length``
+        is its WIRE length.  The checksum covers the pristine decoded
+        range, so the client verifies integrity post-inflate — end to
+        end across the codec.  Throttling and the served-bytes gauge
+        meter wire bytes: a compressed store on a throttled uplink is
+        exactly how compression buys goodput.  The chaos matrix
+        (``FaultPolicy``) exercises the identity path; no faults are
+        injected here."""
+        store, raw = centry
+        throttle: Throttle = self.server.throttle  # type: ignore[attr-defined]
+        if throttle.latency_s > 0:
+            time.sleep(throttle.latency_s)
+        total = store.total
+        rng = self.headers.get("Range")
+        if rng and rng.startswith("bytes="):
+            try:
+                lo_s, hi_s = rng[len("bytes="):].split("-", 1)
+                lo = int(lo_s)
+                hi = int(hi_s) if hi_s else total - 1
+            except ValueError:
+                self.send_error(416)
+                return
+            hi = min(hi, total - 1)
+            if lo > hi:
+                self.send_error(416)
+                return
+            status = 206
+            content_range = f"bytes {lo}-{hi}/{total}"
+        else:
+            lo, hi = 0, total - 1
+            status = 200
+            content_range = None
+        body = memoryview(store.encode_range(lo, hi))
+        crc = (zlib.crc32(memoryview(raw)[lo:hi + 1])
+               if self.server.checksums else None)  # type: ignore[attr-defined]
+        self.send_response(status)
+        if content_range is not None:
+            self.send_header("Content-Range", content_range)
+        self.send_header("Content-Length", str(len(body)))
+        self.send_header("Accept-Ranges", "bytes")
+        self.send_header("X-Range-Encoding",
+                         codec.encoding_header(store.block_size))
+        if crc is not None:
+            self.send_header("X-Range-Checksum", f"crc32:{crc:08x}")
+        self.end_headers()
+        self._write_paced(body)
+
+    def _write_paced(self, body) -> None:
+        """Throttled write of one fault-free body — the same pacing
+        modes as the identity path (compensating, deterministic
+        token-bucket, shared egress clock), metering wire bytes."""
+        throttle: Throttle = self.server.throttle  # type: ignore[attr-defined]
+        limit = len(body)
+        if throttle.bytes_per_s <= 0:
+            self._gauge_release()
+            self.wfile.write(body)
+            self._account(limit)
+            return
+        sent = 0
+        t0 = time.monotonic()
+        while sent < limit:
+            piece = body[sent:min(sent + throttle.chunk, limit)]
+            if throttle.shared:
+                srv = self.server
+                with srv.shared_lock:     # type: ignore[attr-defined]
+                    now = time.monotonic()
+                    due = max(
+                        srv.shared_free,  # type: ignore[attr-defined]
+                        now) + len(piece) / throttle.bytes_per_s
+                    srv.shared_free = due  # type: ignore[attr-defined]
+                wait = due - time.monotonic()
+                if wait > 0:
+                    time.sleep(wait)
+            elif throttle.deterministic:
+                time.sleep(len(piece) / throttle.bytes_per_s)
+            if sent + len(piece) >= limit:
+                self._gauge_release()
+            self.wfile.write(piece)
+            sent += len(piece)
+            self._account(len(piece))
+            if not (throttle.deterministic or throttle.shared):
+                target = sent / throttle.bytes_per_s
+                sleep = target - (time.monotonic() - t0)
+                if sleep > 0:
+                    time.sleep(sleep)
+
 
 class RangeServer:
     """In-process replica server.  Register blobs or files by path."""
@@ -394,6 +503,9 @@ class RangeServer:
         #: path -> (buffer, total, covered_fn): partial mirrors (see
         #: ``add_partial``)
         self._srv.partials = {}                   # type: ignore[attr-defined]
+        #: path -> (BlockStore, raw): block-compressed blobs (see
+        #: ``add_compressed_blob``)
+        self._srv.compressed = {}                 # type: ignore[attr-defined]
         self._srv.throttle = throttle or Throttle()  # type: ignore[attr-defined]
         self._srv.shared_lock = threading.Lock()  # type: ignore[attr-defined]
         #: shared-egress reservation clock (``Throttle.shared``): the
@@ -476,6 +588,18 @@ class RangeServer:
         self._srv.partials[path] = (              # type: ignore[attr-defined]
             buffer, total, covered)
 
+    def add_compressed_blob(self, path: str, data: bytes,
+                            block_size: int = codec.DEFAULT_BLOCK) -> None:
+        """Register ``data`` served from a block-compressed store: GETs
+        answer decoded-coordinate ranges with framed compressed bodies
+        (``X-Range-Encoding``) — fewer wire bytes for the same data.
+        The pristine blob is kept alongside for checksums; compression
+        happens once, here, not per request."""
+        if not path.startswith("/"):
+            path = "/" + path
+        self._srv.compressed[path] = (            # type: ignore[attr-defined]
+            codec.compress_blocks(data, block_size), data)
+
     def remove_path(self, path: str) -> None:
         """Unregister a blob or partial mirror (subsequent requests
         404).  In-flight handlers finish from their own references."""
@@ -483,10 +607,18 @@ class RangeServer:
             path = "/" + path
         self._srv.blobs.pop(path, None)           # type: ignore[attr-defined]
         self._srv.partials.pop(path, None)        # type: ignore[attr-defined]
+        self._srv.compressed.pop(path, None)      # type: ignore[attr-defined]
 
     def add_file(self, path: str, filename: str) -> None:
         with open(filename, "rb") as f:
             self.add_blob(path, f.read())
+
+    def add_compressed_file(self, path: str, filename: str,
+                            block_size: int = codec.DEFAULT_BLOCK) -> None:
+        """``add_file`` into the block-compressed store — how a
+        checkpoint mirror serves ``data.bin`` compressed."""
+        with open(filename, "rb") as f:
+            self.add_compressed_blob(path, f.read(), block_size)
 
     def start(self) -> "RangeServer":
         self._thread.start()

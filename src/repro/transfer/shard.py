@@ -185,15 +185,23 @@ class StealLedger:
     """
 
     def __init__(self, plan: ShardPlan, *,
-                 min_steal: int = 256 * 1024, steal_frac: float = 0.5):
+                 min_steal: int = 256 * 1024, steal_frac: float = 0.5,
+                 claim_horizon_s: float = 2.0):
         self.plan = plan
         #: floor on a claim's size: sub-chunk thefts cost a connection +
         #: coverage round-trip and save almost nothing.
         self.min_steal = int(min_steal)
         #: fraction of the victim's largest unclaimed gap taken per
         #: claim — half, by default, pcircle-style: leaves the victim's
-        #: own frontier room while the thief works the tail.
+        #: own frontier room while the thief works the tail.  Used only
+        #: when the thief's bandwidth is unknown (``thief_bw == 0``).
         self.steal_frac = float(steal_frac)
+        #: seconds of thief throughput a bandwidth-sized claim covers:
+        #: with ``thief_bw`` the claim is ``thief_bw * claim_horizon_s``
+        #: bytes, so a fast thief grabs big tails while a slow one takes
+        #: bites it can actually finish before the victim's own frontier
+        #: would have reached them.
+        self.claim_horizon_s = float(claim_horizon_s)
         #: per-victim claimed spans (half-open, unordered).
         self._claimed: list[list[tuple[int, int]]] = [
             [] for _ in plan.spans]
@@ -223,15 +231,23 @@ class StealLedger:
 
     def steal(self, thief: int,
               uncovered_of: Callable[[int], list[tuple[int, int]]],
+              thief_bw: float = 0.0,
               ) -> Optional[tuple[int, int, int]]:
         """Claim a sub-span of the most backlogged victim for ``thief``.
 
         ``uncovered_of(host)`` returns the host's not-yet-landed
         ``(start, nbytes)`` intervals *within its own span*.  Returns
-        ``(victim, start, end)`` — the tail ``steal_frac`` of the
-        victim's largest unclaimed gap, never below ``min_steal`` (the
-        whole gap when it is smaller than ``2 * min_steal``) — or None
-        when no peer has enough backlog to be worth robbing.
+        ``(victim, start, end)`` — a tail of the victim's largest
+        unclaimed gap — or None when no peer has enough backlog to be
+        worth robbing.
+
+        With ``thief_bw`` (the thief's observed bytes/s, e.g. the sum of
+        its EWMA per-replica throughputs), the claim is sized to what
+        the thief can move in ``claim_horizon_s`` seconds, clamped to
+        ``[min_steal, gap]``; without it the static ``steal_frac``
+        fraction of the gap is taken.  Either way the claim never drops
+        below ``min_steal``, and a gap smaller than ``2 * min_steal`` is
+        taken whole (too small to split).
         """
         best: Optional[tuple[int, list[tuple[int, int]]]] = None
         best_bytes = 0
@@ -246,7 +262,11 @@ class StealLedger:
             return None
         victim, gaps = best
         gs, ge = max(gaps, key=lambda g: g[1] - g[0])
-        take = max(int((ge - gs) * self.steal_frac), self.min_steal)
+        if thief_bw > 0.0:
+            take = min(int(thief_bw * self.claim_horizon_s), ge - gs)
+            take = max(take, self.min_steal)
+        else:
+            take = max(int((ge - gs) * self.steal_frac), self.min_steal)
         if (ge - gs) < 2 * self.min_steal:
             take = ge - gs                      # too small to split: all of it
         start = max(gs, ge - take)              # the TAIL: the victim's own
@@ -302,6 +322,7 @@ async def fetch_sharded(total: int, plan: ShardPlan, origins: Sequence,
                         client_factory: Optional[Callable] = None,
                         min_steal: int = 256 * 1024,
                         steal_frac: float = 0.5,
+                        claim_horizon_s: float = 2.0,
                         client_kw: Optional[dict] = None,
                         ) -> ShardFetchResult:
     """Restore one blob across ``plan.n_hosts`` cooperating hosts.
@@ -318,7 +339,12 @@ async def fetch_sharded(total: int, plan: ShardPlan, origins: Sequence,
     With ``steal`` (default), a host that finishes its own span claims
     uncovered tails of backlogged peers from a shared
     :class:`StealLedger` and fetches them through its own origin path —
-    see the module docstring for why that drains a straggler.  Hosts
+    see the module docstring for why that drains a straggler.  Claims
+    are sized from the thief's just-measured throughput (the sum of its
+    own-span fetch's EWMA per-replica rates, covering
+    ``claim_horizon_s`` seconds of its bandwidth) so fast finishers take
+    proportionally bigger tails; when a host has no throughput sample
+    (empty own span) the static ``steal_frac`` rule applies.  Hosts
     always fetch their own span regardless, so the result is correct
     (every host holds its own shard) even with stealing off.
     """
@@ -343,7 +369,8 @@ async def fetch_sharded(total: int, plan: ShardPlan, origins: Sequence,
         for h, m in enumerate(mirrors):
             if not m.bound:
                 m.bind(sinks[h], total)
-    ledger = StealLedger(plan, min_steal=min_steal, steal_frac=steal_frac)
+    ledger = StealLedger(plan, min_steal=min_steal, steal_frac=steal_frac,
+                         claim_horizon_s=claim_horizon_s)
 
     def uncovered_of(h: int) -> list[tuple[int, int]]:
         s, e = plan.spans[h]
@@ -371,8 +398,14 @@ async def fetch_sharded(total: int, plan: ShardPlan, origins: Sequence,
             _, rep = await client.fetch(e - s, sink=sinks[h], offset=s)
             reports[h].append(rep)
         elapsed[h] = time.monotonic() - t0
+
+        def my_bw() -> float:
+            if not reports[h]:
+                return 0.0
+            return sum(reports[h][-1].observed_throughputs.values())
+
         while steal:
-            grab = ledger.steal(h, uncovered_of)
+            grab = ledger.steal(h, uncovered_of, thief_bw=my_bw())
             if grab is None:
                 return
             victim, gs, ge = grab

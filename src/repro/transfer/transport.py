@@ -6,9 +6,19 @@ is everything that touches a socket.  No aiohttp in this environment —
 :class:`_Conn` is a persistent pipelined HTTP/1.1 connection on
 asyncio's ``loop.sock_*`` primitives with a zero-copy receive path
 (bodies are ``sock_recv_into`` memoryview slices of the caller's
-buffer).  Subclasses adapt it: the data pipeline's virtual-blob
+buffer).  Each connection is full-duplex: an independent writer
+coroutine drains a queue of request writes while reader lanes stream
+bodies, so issuing the next pipelined request never waits behind an
+in-flight body.  Subclasses adapt it: the data pipeline's virtual-blob
 connection translates offsets, the fleet manager's managed connection
 caps concurrency and feeds telemetry.
+
+Compressed ranges (``X-Range-Encoding``, see
+:mod:`repro.transfer.codec`) decode transparently here: the framed
+wire body lands in scratch, inflates off the event loop, and the reply
+reports decoded bytes (``nbytes``) and wire bytes (``wire_nbytes``)
+separately so telemetry can track the wire rate while coverage commits
+decoded bytes.
 """
 
 from __future__ import annotations
@@ -20,6 +30,7 @@ import time
 import zlib
 from typing import NamedTuple, Optional
 
+from repro.transfer import codec
 from repro.transfer.sched import defaults as sched_defaults
 
 __all__ = ["_Conn", "_RangeReply", "_crc32_async"]
@@ -59,19 +70,65 @@ class _RangeReply(NamedTuple):
     #: was idle at issue time) — the estimator must strip the RTT.
     rtt_included: bool
     #: server-declared CRC32 of the range (``X-Range-Checksum`` header),
-    #: None when the server doesn't checksum.
+    #: None when the server doesn't checksum.  For encoded bodies the
+    #: server checksums the pristine DECODED range, so verification
+    #: runs on ``data`` either way.
     crc32: Optional[int] = None
+    #: bytes that actually crossed the wire for this reply; None for
+    #: identity-encoded bodies (wire == decoded).  Telemetry must use
+    #: ``wire_bytes`` — feeding decoded bytes into a bandwidth estimator
+    #: over a compressed path would double-count the codec's savings.
+    wire_nbytes: Optional[int] = None
+
+    @property
+    def wire_bytes(self) -> int:
+        """Wire bytes received for this body (== ``nbytes`` unless the
+        body was transfer-encoded)."""
+        return self.nbytes if self.wire_nbytes is None else self.wire_nbytes
+
+
+class _SendOp:
+    """One queued request write (duplex mode).
+
+    Carries the request bytes, the turnstile predecessor (so the writer
+    can judge idle-pipe-ness at the moment the request actually hits the
+    wire) and the caller's progress list (slot 1 takes the wire-send
+    stamp).  ``fut`` resolves once the request is on the wire, or fails
+    with ``ConnectionError`` — every queued-but-unsent request fails
+    exactly once when the connection dies, which is what lets the lane
+    layer re-pool each owed range exactly once (conservation)."""
+
+    __slots__ = ("payload", "prior", "progress", "fut",
+                 "t_send", "pipelined")
+
+    def __init__(self, payload: bytes, prior: Optional[asyncio.Event],
+                 progress: Optional[list]):
+        self.payload = payload
+        self.prior = prior
+        self.progress = progress
+        self.fut: asyncio.Future = \
+            asyncio.get_running_loop().create_future()
+        self.t_send = 0.0
+        self.pipelined = False
 
 
 class _Conn:
     """One persistent pipelined HTTP/1.1 connection on a raw socket.
 
-    Requests may be issued concurrently by several tasks; writes are
-    serialized by a lock and responses are read strictly in request order
-    via a FIFO turnstile (each request waits on its predecessor's
-    completion event).  Bodies are received with ``sock_recv_into``
-    directly into the caller's buffer — the only copied bytes are the
-    header-phase read-ahead (bounded by ``_HEADER_RECV`` per response).
+    Requests may be issued concurrently by several tasks.  In duplex
+    mode (the default) each request is enqueued to an independent writer
+    coroutine that drains the queue onto the socket — a request write
+    never waits behind an in-flight response body, so the pipe stays at
+    depth even when bodies stream for whole RTTs.  Responses are read
+    strictly in request order via a FIFO turnstile (each request waits
+    on its predecessor's completion event); enqueue order and turnstile
+    order are linked atomically, and the single writer preserves that
+    order on the wire.  With ``duplex=False`` the legacy half-duplex
+    path sends inline under the write lock (kept as a benchmark
+    baseline).  Bodies are received with ``sock_recv_into`` directly
+    into the caller's buffer — the only copied bytes are the
+    header-phase read-ahead (bounded by ``_HEADER_RECV`` per response)
+    and encoded bodies' wire scratch.
 
     Collects per-connection RTT samples: the TCP connect time on session
     establishment, then the request-write → status-line turnaround of
@@ -92,7 +149,7 @@ class _Conn:
     _HEADER_RECV = 4096
 
     def __init__(self, replica, request_latency: float = 0.0,
-                 read_timeout: float = 0.0):
+                 read_timeout: float = 0.0, duplex: bool = True):
         #: the replica this session targets — anything with ``host`` /
         #: ``port`` / ``path`` / ``name`` (duck-typed so this module
         #: doesn't import the client layer).
@@ -110,6 +167,10 @@ class _Conn:
         #: per socket read, not per request: a huge range streaming
         #: slowly-but-steadily never trips it.
         self.read_timeout = read_timeout
+        #: False = legacy half-duplex sends (inline under the write
+        #: lock) — the benchmark baseline the duplex win-guard measures
+        #: against.
+        self.duplex = duplex
         self.broken = False
         self._sock: Optional[socket.socket] = None
         self._rbuf = bytearray()
@@ -118,6 +179,10 @@ class _Conn:
         #: completion event of the most recently issued request (the
         #: turnstile tail); None = pipe idle since connect.
         self._tail: Optional[asyncio.Event] = None
+        #: duplex writer state: the request queue and the coroutine
+        #: draining it (both created lazily on the first duplex send).
+        self._sendq: Optional[asyncio.Queue] = None
+        self._writer: Optional[asyncio.Task] = None
 
     def take_rtt_samples(self) -> list[float]:
         samples, self._rtt_samples = self._rtt_samples, []
@@ -142,6 +207,12 @@ class _Conn:
         self._sock = sock
 
     async def close(self):
+        writer, self._writer = self._writer, None
+        if writer is not None:
+            writer.cancel()
+            with contextlib.suppress(asyncio.CancelledError, Exception):
+                await writer
+        self._fail_queued("connection closed")
         if self._sock is not None:
             with contextlib.suppress(OSError):
                 self._sock.close()
@@ -154,11 +225,79 @@ class _Conn:
         never fires for a closed fd and the loser's read would only die
         at the inactivity timeout.  ``shutdown()`` keeps the fd alive
         and wakes the pending read with EOF immediately; the owning
-        worker then closes the socket on its normal unwind path."""
+        worker then closes the socket on its normal unwind path.
+
+        The writer must not deadlock either: queued-but-unsent requests
+        fail synchronously here, and a write blocked in ``sock_sendall``
+        wakes with an error from the shutdown — either way every lane
+        parked on a send future gets its ConnectionError promptly."""
         self.broken = True
+        self._fail_queued("connection aborted")
         if self._sock is not None:
             with contextlib.suppress(OSError):
                 self._sock.shutdown(socket.SHUT_RDWR)
+
+    # -- duplex writer -----------------------------------------------------
+
+    def _fail_queued(self, why: str) -> None:
+        """Fail every queued-but-unsent request (sync — callable from
+        ``abort``).  Runs on the event loop thread with no await points,
+        so it cannot race the writer popping the same op."""
+        if self._sendq is None:
+            return
+        while not self._sendq.empty():
+            op = self._sendq.get_nowait()
+            if op is not None and not op.fut.done():
+                op.fut.set_exception(ConnectionError(why))
+
+    def _ensure_writer(self) -> None:
+        if self._writer is None:
+            self._sendq = asyncio.Queue()
+            self._writer = asyncio.ensure_future(self._drain_sends())
+
+    async def _drain_sends(self) -> None:
+        """The writer coroutine: pop queued requests and put them on the
+        wire, independent of any lane streaming a body.  A send failure
+        breaks the connection and fails that op; already-queued ops then
+        fail fast on the broken check — each exactly once."""
+        loop = asyncio.get_running_loop()
+        try:
+            while True:
+                op = await self._sendq.get()
+                if op is None or op.fut.done():
+                    continue
+                if self.broken or self._sock is None:
+                    op.fut.set_exception(
+                        ConnectionError("pipelined connection broken"))
+                    continue
+                # idle-pipe-ness is judged at the moment the request
+                # actually goes on the wire — a queued request whose
+                # predecessor completed while it waited is NOT pipelined
+                # (its turnaround measures the path, so it may RTT-sample)
+                op.pipelined = (op.prior is not None
+                                and not op.prior.is_set())
+                op.t_send = time.monotonic()
+                if op.progress is not None and len(op.progress) > 1:
+                    # wire-send stamp for the hedging layer: a range
+                    # starts aging only once its request is on the wire
+                    op.progress[1] = op.t_send
+                try:
+                    await loop.sock_sendall(self._sock, op.payload)
+                except BaseException as e:
+                    self.broken = True
+                    if not op.fut.done():
+                        op.fut.set_exception(ConnectionError(
+                            f"request write failed: {e!r}"))
+                    if not isinstance(e, Exception):
+                        raise            # propagate cancellation
+                    continue
+                if not op.fut.done():
+                    op.fut.set_result(None)
+        finally:
+            # writer exiting (cancelled by close, or cancelled mid-send):
+            # nothing will drain the queue any more — fail the leftovers
+            # so no lane awaits a send that can never happen
+            self._fail_queued("writer stopped")
 
     # -- buffered header reads / zero-copy body reads ----------------------
 
@@ -303,25 +442,45 @@ class _Conn:
         if self.request_latency > 0.0:
             await asyncio.sleep(self.request_latency)
         my_done = asyncio.Event()
-        async with self._wlock:
+        op: Optional[_SendOp] = None
+        if self.duplex:
+            # no awaits between the broken check and the enqueue: the
+            # turnstile link and the queue position are taken atomically,
+            # and the single writer preserves that order on the wire
             if self.broken or self._sock is None:
                 raise ConnectionError("pipelined connection broken")
-            prior = self._tail
+            self._ensure_writer()
+            op = _SendOp(self._request_bytes("GET", start, end),
+                         self._tail, progress)
+            prior = op.prior
             self._tail = my_done
-            pipelined = prior is not None and not prior.is_set()
-            t_send = time.monotonic()
-            if progress is not None and len(progress) > 1:
-                # wire-send stamp for the hedging layer: a range starts
-                # aging only once its request is actually on the wire
-                progress[1] = t_send
-            try:
-                await asyncio.get_running_loop().sock_sendall(
-                    self._sock, self._request_bytes("GET", start, end))
-            except BaseException:
-                self.broken = True
-                my_done.set()
-                raise
+            self._sendq.put_nowait(op)
+            pipelined, t_send = False, 0.0       # filled in by the writer
+        else:
+            async with self._wlock:
+                if self.broken or self._sock is None:
+                    raise ConnectionError("pipelined connection broken")
+                prior = self._tail
+                self._tail = my_done
+                pipelined = prior is not None and not prior.is_set()
+                t_send = time.monotonic()
+                if progress is not None and len(progress) > 1:
+                    # wire-send stamp for the hedging layer: a range
+                    # starts aging only once its request is on the wire
+                    progress[1] = t_send
+                try:
+                    await asyncio.get_running_loop().sock_sendall(
+                        self._sock, self._request_bytes("GET", start, end))
+                except BaseException:
+                    self.broken = True
+                    my_done.set()
+                    raise
         try:
+            if op is not None:
+                # request on the wire (or the connection died first —
+                # every queued-unsent request fails here exactly once)
+                await op.fut
+                pipelined, t_send = op.pipelined, op.t_send
             if prior is not None:
                 await prior.wait()
             if self.broken:
@@ -337,18 +496,66 @@ class _Conn:
                 n = int(headers["content-length"])
             except (KeyError, ValueError):
                 raise ConnectionError("missing/invalid Content-Length")
-            body = await self._read_body(n, into, progress)
-            t_end = time.monotonic()
+            enc_block = codec.parse_encoding(
+                headers.get("x-range-encoding"))
+            if enc_block is None:
+                body = await self._read_body(n, into, progress)
+                t_end = time.monotonic()
+                wire_n = None
+                ndec = n
+            else:
+                # encoded body: the framed wire payload lands in scratch
+                # (progress tracks WIRE bytes — hedge aging sees real
+                # landings), then inflates off the event loop into the
+                # caller's buffer.  elapsed is stamped before the decode:
+                # it measures the wire, and the decode overlaps other
+                # lanes' socket reads in the executor anyway.
+                lo, hi = self._decoded_span(headers, start, end)
+                ndec = hi - lo + 1
+                if into is not None and len(into) < ndec:
+                    raise ConnectionError(
+                        f"decoded body {ndec} B overruns the "
+                        f"{len(into)} B destination range")
+                wire = await self._read_body(n, None, progress)
+                t_end = time.monotonic()
+                wire_n = n
+                # the socket is past this response: release the read
+                # turnstile BEFORE inflating, so the successor lane's
+                # header/body reads overlap this lane's decode (the
+                # stream stays aligned either way — decode failures
+                # mark the conn broken without desyncing it)
+                my_done.set()
+                if into is not None:
+                    await codec.decode_range_async(wire, lo, hi, out=into)
+                    body = into[:ndec]
+                else:
+                    body = await codec.decode_range_async(wire, lo, hi)
             return _RangeReply(
-                data=body, nbytes=n,
+                data=body, nbytes=ndec,
                 elapsed=t_end - (t_ready if pipelined else t_send),
                 rtt_included=not pipelined,
-                crc32=self._parse_checksum(headers))
+                crc32=self._parse_checksum(headers),
+                wire_nbytes=wire_n)
         except BaseException:
             self.broken = True
             raise
         finally:
             my_done.set()
+
+    @staticmethod
+    def _decoded_span(headers: dict, start: int, end: int) -> tuple[int, int]:
+        """Decoded [lo, hi] served for an encoded reply — from
+        Content-Range (authoritative: the server clamps tails there, in
+        decoded coordinates), falling back to the requested span."""
+        cr = headers.get("content-range", "")
+        if cr.startswith("bytes "):
+            span = cr[len("bytes "):].split("/", 1)[0]
+            lo_s, _, hi_s = span.partition("-")
+            try:
+                return int(lo_s), int(hi_s)
+            except ValueError:
+                pass
+        return start, end
 
     async def head(self) -> tuple[int, dict]:
         """HEAD the replica's path; returns (status, headers).  Not

@@ -121,3 +121,105 @@ def test_online_tuners_thread_pipeline_depth():
     expect = autotune_chunk_params(
         list(BW), [0.2, 0.2, 0.2], 4 * GB, grid=grid, pipeline_depth=4)
     assert tuned == expect.params
+
+
+# --------------------------------------------------------------------------
+# per-chunk decode cost (the compressed dataplane's compute term)
+# --------------------------------------------------------------------------
+
+def _time_decode(decode_bw, engine="round", rtt=0.2, file_size=2 * GB):
+    return float(simulate_transfer(
+        BW, rtt, file_size, PARAMS,
+        config=SimConfig(decode_bytes_per_s=decode_bw), engine=engine,
+    ).total_time)
+
+
+def test_zero_decode_rate_is_the_identity_model():
+    """``decode_bytes_per_s=0.0`` (the default: identity dataplane) must
+    reproduce the no-decode model exactly on both engines — the term is
+    statically gated out, not just numerically negligible."""
+    for engine in ("event", "round"):
+        t_default = float(simulate_transfer(
+            BW, 0.2, 2 * GB, PARAMS, config=SimConfig(),
+            engine=engine).total_time)
+        assert _time_decode(0.0, engine=engine) == t_default
+
+
+@pytest.mark.parametrize("engine", ["event", "round"])
+def test_decode_cost_is_monotone(engine):
+    """A finite decode rate adds per-chunk compute time; a faster
+    decoder costs strictly less than a slower one."""
+    t_inf = _time_decode(0.0, engine=engine)
+    t_fast = _time_decode(2000.0 * MB, engine=engine)
+    t_slow = _time_decode(100.0 * MB, engine=engine)
+    assert t_inf < t_fast < t_slow
+    # the slow decoder is within the serial-decode upper bound:
+    # wire time + all bytes through the decoder
+    assert t_slow <= t_inf + 2 * GB / (100.0 * MB) + 1.0
+
+
+def test_decode_cost_hides_behind_pipeline_like_body_time():
+    """With pipelining, decode extends the per-chunk busy time and so
+    helps hide the RTT — the combined model must not charge decode AND
+    the full RTT when the pipe is deep."""
+    deep = SimConfig(pipeline_depth=8, decode_bytes_per_s=200.0 * MB)
+    serial = SimConfig(pipeline_depth=1, decode_bytes_per_s=200.0 * MB)
+    t_deep = float(simulate_transfer(
+        BW, 0.5, 2 * GB, PARAMS, config=deep, engine="round").total_time)
+    t_serial = float(simulate_transfer(
+        BW, 0.5, 2 * GB, PARAMS, config=serial, engine="round").total_time)
+    assert t_deep < t_serial
+
+
+def test_scan_core_decode_is_differentiable():
+    """Gradients through the scan core stay finite and non-degenerate
+    with the decode term on — the tuners' requirement."""
+    cfg = SimConfig(max_rounds=256, exact_sizes=False,
+                    decode_bytes_per_s=300.0 * MB)
+    bw = jnp.asarray(BW, jnp.float32)
+    rtt = jnp.full((3,), 0.2, jnp.float32)
+    inf = jnp.full((3,), jnp.inf, jnp.float32)
+
+    def loss(cl):
+        chunk = ChunkArrays(cl[0], cl[1], jnp.float32(64 * 1024))
+        return simulate_scan_core(
+            bw, rtt, inf, bw, 0, chunk, jnp.float32(512 * MB),
+            mode="proportional", config=cfg).total_time
+
+    g = jax.grad(loss)(jnp.asarray([4.0 * MB, 40.0 * MB], jnp.float32))
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.any(np.asarray(g) != 0.0)
+
+
+def test_autotune_threads_decode_rate():
+    """The fused sweep charges decode cost: every grid point's predicted
+    time with a finite decoder is >= its free-decode prediction, and the
+    adopted plan accounts for the compute term."""
+    grid = [(1 * MB, 10 * MB), (2 * MB, 20 * MB), (4 * MB, 40 * MB),
+            (8 * MB, 80 * MB), (16 * MB, 160 * MB)]
+    free = autotune_chunk_params(BW, 0.2, 4 * GB, grid=grid)
+    taxed = autotune_chunk_params(BW, 0.2, 4 * GB, grid=grid,
+                                  decode_bytes_per_s=150.0 * MB)
+    t_free = np.asarray(free.predicted_times)
+    t_taxed = np.asarray(taxed.predicted_times)
+    assert np.all(t_taxed >= t_free - 1e-3)
+    assert taxed.predicted_time > free.predicted_time
+
+
+def test_online_tuners_thread_decode_rate():
+    """Each online tuner plans against the decode-taxed model — the
+    GridTuner matches the direct sweep, and the gradient/bandit tuners
+    accept and carry the knob."""
+    from repro.core.online import BanditTuner, GridTuner, Telemetry
+
+    grid = [(1 * MB, 10 * MB), (4 * MB, 40 * MB), (16 * MB, 160 * MB)]
+    tel = Telemetry(bandwidth=tuple(BW), rtt=(0.2, 0.2, 0.2),
+                    remaining_bytes=float(4 * GB))
+    tuned = GridTuner(grid=grid, decode_bytes_per_s=150.0 * MB).update(tel)
+    expect = autotune_chunk_params(
+        list(BW), [0.2, 0.2, 0.2], 4 * GB, grid=grid,
+        decode_bytes_per_s=150.0 * MB)
+    assert tuned == expect.params
+    # the bandit seeds its arms from the decode-taxed sweep without error
+    bt = BanditTuner(grid=grid, decode_bytes_per_s=150.0 * MB)
+    assert bt.update(tel) is not None

@@ -123,6 +123,28 @@ def test_ledger_claims_do_not_overlap_and_release_reopens():
     assert g3 is not None and s1 <= g3[1] < g3[2] == e1
 
 
+def test_ledger_sizes_claim_from_thief_bandwidth():
+    plan = plan_shards(8 * MB, 2)
+    ledger = StealLedger(plan, min_steal=64 * KB, claim_horizon_s=2.0)
+    uncovered = {0: [], 1: [(4 * MB, 4 * MB)]}
+    # fast thief: 1 MB/s over a 2 s horizon -> a 2 MB tail claim,
+    # not the static half-gap
+    grab = ledger.steal(0, lambda h: uncovered[h], thief_bw=1.0 * MB)
+    assert grab == (1, 6 * MB, 8 * MB)
+    # slow thief: bandwidth-sized claim clamps up to min_steal and
+    # still comes off the (remaining) tail
+    grab2 = ledger.steal(0, lambda h: uncovered[h], thief_bw=1.0 * KB)
+    assert grab2 == (1, 6 * MB - 64 * KB, 6 * MB)
+    # absurd bandwidth is clamped to the whole gap
+    g = StealLedger(plan, min_steal=64 * KB).steal(
+        0, lambda h: uncovered[h], thief_bw=1e12)
+    assert g == (1, 4 * MB, 8 * MB)
+    # no bandwidth sample: static steal_frac fallback (tail half)
+    g0 = StealLedger(plan, min_steal=64 * KB).steal(
+        0, lambda h: uncovered[h])
+    assert g0 == (1, 6 * MB, 8 * MB)
+
+
 def test_ledger_respects_min_steal_floor():
     plan = plan_shards(1 * MB, 2)
     ledger = StealLedger(plan, min_steal=256 * KB)
